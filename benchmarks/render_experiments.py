@@ -1,0 +1,109 @@
+"""Render EXPERIMENTS.md tables from the dry-run/roofline JSON artifacts.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments \
+        --single .scratch/dryrun_single.json --multi .scratch/dryrun_multi.json \
+        --roofline .scratch/roofline_unrolled.json
+"""
+import argparse
+import json
+import os
+
+
+def load(path):
+    if not path or not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_bytes(b):
+    if b >= 1e9:
+        return f"{b/1e9:.2f} GB"
+    if b >= 1e6:
+        return f"{b/1e6:.1f} MB"
+    return f"{b/1e3:.0f} KB"
+
+
+def dryrun_table(results, mesh_label):
+    lines = [
+        f"| arch | shape | status | lower+compile (s) | args/dev | temp/dev | collective ops |",
+        f"|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        if "skip" in r.get("status", ""):
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP (DESIGN.md §Skips) | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['status']} | — | — | — | — |")
+            continue
+        ma = r.get("memory_analysis", {})
+        ops = r.get("collective_op_counts", {})
+        opstr = " ".join(f"{k.split('-')[-1] if k!='all-to-all' else 'a2a'}:{v}"
+                         for k, v in ops.items() if v)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{r.get('lower_s', 0)}+{r.get('compile_s', 0)} | "
+            f"{fmt_bytes(ma.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(ma.get('temp_size_in_bytes', 0))} | {opstr or '-'} |")
+    return "\n".join(lines)
+
+
+def roofline_table(results):
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant |"
+        " MODEL_FLOPs | useful ratio | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    suggestions = {
+        ("moe", "train"): "gather-based MoE dispatch removes the O(T·E·C·d) one-hot einsums",
+        ("moe", "prefill"): "chunked attention + gather dispatch cut logits/dispatch traffic",
+        ("moe", "decode"): "dus cache write + absorbed MLA decode cut cache passes",
+        ("dense", "train"): "chunked attention removes the S² logits materialization",
+        ("dense", "prefill"): "chunked (flash) attention; shard KV heads when divisible",
+        ("dense", "decode"): "dus cache write (1 pass vs 3 over the cache)",
+        ("ssm", "train"): "chunked RWKV recurrence (matmul form) lifts MXU utilization",
+        ("ssm", "decode"): "state is O(1); reduce collective by replicating small states",
+        ("hybrid", "train"): "SSD chunk matmuls already MXU-shaped; fuse conv+gate",
+        ("audio", "train"): "encoder segments are independent — batch-parallel only",
+        ("vlm", "prefill"): "chunked attention; M-RoPE tables precomputed",
+    }
+    for r in results:
+        if r.get("status") != "ok":
+            continue
+        t = r["terms_seconds"]
+        fam = {"arctic-480b": "moe", "deepseek-v3-671b": "moe",
+               "internlm2-1.8b": "dense", "internlm2-20b": "dense",
+               "deepseek-coder-33b": "dense", "olmo-1b": "dense",
+               "rwkv6-7b": "ssm", "zamba2-1.2b": "hybrid",
+               "whisper-large-v3": "audio", "qwen2-vl-7b": "vlm"}[r["arch"]]
+        kind = ("train" if r["shape"].startswith("train") else
+                "prefill" if r["shape"].startswith("prefill") else "decode")
+        sug = suggestions.get((fam, kind)) or suggestions.get((fam, "train"), "")
+        mf = r.get("model_flops", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute']:.2e} | "
+            f"{t['memory']:.2e} | {t['collective']:.2e} | **{r['dominant']}** | "
+            f"{mf:.2e} | {r.get('useful_flops_ratio', 0):.3f} | {sug} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single", default=".scratch/dryrun_single.json")
+    ap.add_argument("--multi", default=".scratch/dryrun_multi.json")
+    ap.add_argument("--roofline", default=".scratch/roofline_unrolled.json")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "dryrun", "roofline"])
+    args = ap.parse_args()
+    if args.section in ("all", "dryrun"):
+        print("### Single-pod mesh (16, 16) — 256 chips\n")
+        print(dryrun_table(load(args.single), "single"))
+        print("\n### Multi-pod mesh (2, 16, 16) — 512 chips\n")
+        print(dryrun_table(load(args.multi), "multi"))
+    if args.section in ("all", "roofline"):
+        print("\n### Roofline (single-pod, unrolled accounting)\n")
+        print(roofline_table(load(args.roofline)))
+
+
+if __name__ == "__main__":
+    main()

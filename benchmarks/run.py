@@ -1,0 +1,38 @@
+"""Benchmark harness — one function per paper table/figure (deliverable d).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run              # full suite
+    PYTHONPATH=src python -m benchmarks.run --quick      # CI-sized
+    PYTHONPATH=src python -m benchmarks.run --only table1,table3
+
+Prints ``name,value,derived`` CSV rows per benchmark.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks.paper_tables import ALL_BENCHES
+    names = list(ALL_BENCHES) if not args.only else args.only.split(",")
+    print("name,value,derived")
+    t0 = time.time()
+    for name in names:
+        if name not in ALL_BENCHES:
+            print(f"unknown benchmark {name!r}; have {list(ALL_BENCHES)}",
+                  file=sys.stderr)
+            continue
+        t1 = time.time()
+        ALL_BENCHES[name](quick=args.quick)
+        print(f"# {name} done in {time.time()-t1:.0f}s", flush=True)
+    print(f"# total {time.time()-t0:.0f}s")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,28 @@
+"""Splice generated tables into EXPERIMENTS.md at the HTML-comment markers.
+
+    PYTHONPATH=src:. python -m benchmarks.splice_experiments
+"""
+import io
+import re
+import sys
+from contextlib import redirect_stdout
+
+from benchmarks.render_experiments import load, roofline_table
+
+
+def main():
+    path = "EXPERIMENTS.md"
+    with open(path) as f:
+        text = f.read()
+    results = load(".scratch/roofline_unrolled.json")
+    table = roofline_table(results)
+    marker = "<!-- ROOFLINE_TABLE -->"
+    if marker in text:
+        text = text.replace(marker, table + "\n\n" + marker, 1)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"spliced roofline table ({len(results)} results)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""End-to-end driver (deliverable b): train a ~100M-param assigned
+architecture for a few hundred steps with GST+EFD on the sequence track.
+
+The backbone is internlm2-1.8b's family scaled to ~100M params (8 layers,
+d_model=512 — same code path as the full config); documents are 4-segment
+token sequences whose property (majority topic) needs whole-input evidence.
+
+    PYTHONPATH=src python examples/llm_segment_training.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import gst as G
+from repro.core.embedding_table import init_table
+from repro.data.tokens import doc_batch_iterator, make_property_docs
+from repro.models import build_model
+from repro.optim import cosine_schedule, make_optimizer
+
+
+def main(steps: int = 300):
+    base = get_config("internlm2-1.8b")
+    cfg = dataclasses.replace(
+        base, num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
+        d_ff=1536, vocab_size=2048, head_dim=64, gst_num_segments=4,
+        gst_num_classes=5)
+    model = build_model(cfg)
+    n_params = sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda: model.init(jax.random.key(0)))))
+    print(f"backbone: {cfg.name} family, {n_params/1e6:.0f}M params")
+
+    J, L = 4, 128
+    n_docs = 256
+    docs = make_property_docs(n_docs=n_docs, n_segments=J, seg_len=L,
+                              vocab=cfg.vocab_size, n_topics=5, seed=0)
+    params = model.init(jax.random.key(0))
+    head = G.head_init(jax.random.key(1), cfg.d_model, 5, "mlp")
+    opt = make_optimizer("adamw", lr=3e-4, weight_decay=0.01,
+                         schedule=cosine_schedule(3e-4, steps, warmup=20))
+    state = G.TrainState(params, head, opt.init((params, head)),
+                         init_table(n_docs, J, cfg.d_model),
+                         jnp.zeros((), jnp.int32))
+    step = jax.jit(G.make_train_step(
+        lambda p, s: model.encode_segment(p, s), opt, G.VARIANTS["gst_efd"],
+        keep_prob=0.5))
+
+    rng = np.random.default_rng(0)
+    it, t0 = 0, time.time()
+    accs = []
+    while it < steps:
+        for tup in doc_batch_iterator(docs, 16, rng=rng):
+            batch = G.GSTBatch({"tokens": jnp.asarray(tup[0]["tokens"])},
+                               jnp.asarray(tup[1]), jnp.asarray(tup[2]),
+                               jnp.asarray(tup[3]))
+            state, m = step(state, batch, jax.random.key(it))
+            accs.append(float(m["metric"]))
+            it += 1
+            if it % 25 == 0:
+                print(f"step {it:4d}: loss={float(m['loss']):.3f} "
+                      f"acc(25)={np.mean(accs[-25:]):.3f} "
+                      f"({(time.time()-t0)/it*1e3:.0f} ms/step)", flush=True)
+            if it >= steps:
+                break
+    final = np.mean(accs[-50:])
+    print(f"final train accuracy (last 50 steps): {final:.3f} (chance 0.2)")
+    return final
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    sys.exit(0 if main(args.steps) > 0.3 else 1)

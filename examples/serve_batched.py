@@ -1,0 +1,56 @@
+"""Batched serving example: prefill + decode across architecture families.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import build_model
+
+
+def serve_one(arch: str, batch=2, prompt=8, gen=8):
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    total = prompt + gen
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, prompt)), jnp.int32)
+    caches = model.init_cache(batch, total, jnp.float32)
+    if cfg.is_encoder_decoder:
+        from repro.models import encdec
+        frames = jnp.asarray(rng.normal(size=(batch, cfg.encoder_seq_len,
+                                               cfg.d_model)), jnp.float32)
+        caches = {"self": caches,
+                  "cross": encdec.cross_kv(params, cfg,
+                                           encdec.encode(params, cfg, frames))}
+    decode = jax.jit(lambda p, t, c, pos: model.decode_step(p, t, c, pos))
+    cur = toks[:, :1]
+    out = []
+    t0 = time.time()
+    for t in range(total - 1):
+        logits, caches = decode(params, cur, caches,
+                                jnp.full((batch,), t, jnp.int32))
+        nxt = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        cur = toks[:, t + 1:t + 2] if t + 1 < prompt else nxt
+        if t + 1 >= prompt:
+            out.append(np.asarray(nxt[:, 0]))
+    dt = (time.time() - t0) / (total - 1) * 1e3
+    print(f"{arch:22s} generated {len(out)} tokens/seq x{batch} "
+          f"({dt:.0f} ms/step incl. compile)")
+    return np.stack(out, 1)
+
+
+def main():
+    for arch in ["olmo-1b", "zamba2-1.2b", "rwkv6-7b", "deepseek-v3-671b",
+                 "whisper-large-v3"]:
+        serve_one(arch)
+
+
+if __name__ == "__main__":
+    main()
+    sys.exit(0)

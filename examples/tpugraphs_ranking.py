@@ -1,0 +1,30 @@
+"""TpuGraphs-style ranking with GST (paper §5.3): per-segment runtime
+prediction + sum pooling (the head is part of F; F' = Σ), PairwiseHinge
+loss, OPA metric.
+
+    PYTHONPATH=src python examples/tpugraphs_ranking.py
+"""
+import sys
+
+from repro.graphs.experiment import run_experiment
+
+
+def main():
+    print("variant      train_OPA  test_OPA  ms/iter")
+    results = {}
+    for variant in ["gst", "gst_one", "gst_e", "gst_efd"]:
+        r = run_experiment(dataset="tpugraphs", backbone="sage",
+                           variant=variant, n_graphs=64, epochs=25,
+                           finetune_epochs=0, seed=0)
+        results[variant] = r
+        print(f"{variant:12s} {r.train_metric:8.3f} {r.test_metric:9.3f} "
+              f"{r.ms_per_iter:7.1f}")
+    # the paper's Table 2 ordering: GST fits train best; E-variants are
+    # faster per iteration than GST
+    assert results["gst"].ms_per_iter > results["gst_e"].ms_per_iter
+    return results
+
+
+if __name__ == "__main__":
+    main()
+    sys.exit(0)

@@ -1,0 +1,67 @@
+"""Pytree checkpointing via msgpack (+ numpy buffers).
+
+Layout: <dir>/step_<N>.ckpt — a single msgpack file holding the flattened
+pytree (paths -> {dtype, shape, raw bytes}).  Device arrays are pulled to
+host; restore re-creates jnp arrays (placement/sharding is the caller's job,
+e.g. jax.device_put with the target sharding after load).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        out[key] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                    "data": arr.tobytes()}
+    return out
+
+
+def save_checkpoint(path_dir: str, step: int, tree: Any, keep: int = 3) -> str:
+    os.makedirs(path_dir, exist_ok=True)
+    path = os.path.join(path_dir, f"step_{step:08d}.ckpt")
+    payload = _flatten(tree)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb({"step": step, "arrays": payload}))
+    os.replace(tmp, path)
+    # rotate
+    ckpts = sorted(f for f in os.listdir(path_dir) if re.match(r"step_\d+\.ckpt$", f))
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(path_dir, old))
+    return path
+
+
+def latest_checkpoint(path_dir: str) -> Optional[str]:
+    if not os.path.isdir(path_dir):
+        return None
+    ckpts = sorted(f for f in os.listdir(path_dir) if re.match(r"step_\d+\.ckpt$", f))
+    return os.path.join(path_dir, ckpts[-1]) if ckpts else None
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (paths must match)."""
+    with open(path, "rb") as f:
+        blob = msgpack.unpackb(f.read())
+    arrays = blob["arrays"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_elems, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_elems)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing {key}")
+        rec = arrays[key]
+        arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])

@@ -1,0 +1,23 @@
+"""The paper's primary contribution: Graph Segment Training (GST+EFD)."""
+from repro.core.gst import (
+    GSTBatch,
+    GSTVariant,
+    TrainState,
+    VARIANTS,
+    head_init,
+    head_apply,
+    make_eval_step,
+    make_finetune_step,
+    make_refresh_step,
+    make_train_step,
+)
+from repro.core.embedding_table import EmbeddingTable, init_table
+from repro.core.segment import aggregate, sample_segments, sampled_mask, sed_weights
+
+__all__ = [
+    "GSTBatch", "GSTVariant", "TrainState", "VARIANTS",
+    "head_init", "head_apply",
+    "make_eval_step", "make_finetune_step", "make_refresh_step", "make_train_step",
+    "EmbeddingTable", "init_table",
+    "aggregate", "sample_segments", "sampled_mask", "sed_weights",
+]

@@ -1,0 +1,59 @@
+"""Historical segment-embedding table T : (graph i, segment j) -> R^{d_h}.
+
+Paper §3.2.  TPU adaptation (DESIGN.md §4.2): the PyTorch reference keeps a
+host-side hash table written from a side thread; here T is a dense device
+array (n_graphs, J_max, d_h) **sharded over the data mesh axis** and
+**donated** through the train step, so the scatter update overlaps with the
+backward pass under XLA — same overhead-hiding effect, jit-native.
+
+An age array tracks staleness (in steps) for diagnostics and tests: the
+paper's observation that the most outdated entry is ~ n·J/S steps stale is
+asserted empirically in tests/test_gst_core.py.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EmbeddingTable(NamedTuple):
+    emb: jnp.ndarray        # (n, J_max, d_h)
+    age: jnp.ndarray        # (n, J_max) int32 — step of last refresh
+    initialized: jnp.ndarray  # (n, J_max) bool — written at least once
+
+
+def init_table(n_graphs: int, j_max: int, d_h: int, dtype=jnp.float32) -> EmbeddingTable:
+    return EmbeddingTable(
+        emb=jnp.zeros((n_graphs, j_max, d_h), dtype),
+        age=jnp.zeros((n_graphs, j_max), jnp.int32),
+        initialized=jnp.zeros((n_graphs, j_max), bool),
+    )
+
+
+def lookup(table: EmbeddingTable, graph_ids: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """graph_ids: (B,) -> (emb (B, J, d), initialized (B, J))."""
+    return table.emb[graph_ids], table.initialized[graph_ids]
+
+
+def update_sampled(table: EmbeddingTable, graph_ids, seg_idx, h_new, step) -> EmbeddingTable:
+    """Write back fresh embeddings of the sampled segments.
+
+    graph_ids: (B,); seg_idx: (B, S); h_new: (B, S, d) — stop-gradded by the
+    caller.  Scatter via .at[] — under pjit this lowers to a sharded scatter
+    on the data axis (graph_ids are data-sharded with the batch).
+    """
+    b_idx = jnp.broadcast_to(graph_ids[:, None], seg_idx.shape)
+    emb = table.emb.at[b_idx, seg_idx].set(h_new.astype(table.emb.dtype))
+    age = table.age.at[b_idx, seg_idx].set(step)
+    init = table.initialized.at[b_idx, seg_idx].set(True)
+    return EmbeddingTable(emb, age, init)
+
+
+def update_all(table: EmbeddingTable, graph_ids, h_all, seg_valid, step) -> EmbeddingTable:
+    """Refresh every segment of the given graphs (head-finetuning phase)."""
+    emb = table.emb.at[graph_ids].set(h_all.astype(table.emb.dtype))
+    age = table.age.at[graph_ids].set(step)
+    init = table.initialized.at[graph_ids].set(seg_valid.astype(bool))
+    return EmbeddingTable(emb, age, init)

@@ -1,0 +1,313 @@
+"""GST train/eval/finetune step builders — the paper's Algorithm 1 & 2.
+
+Generic over the backbone: ``encode_fn(backbone_params, seg_inputs_flat)``
+maps a flat batch of segments (leading dim N) to embeddings (N, d_h) plus an
+auxiliary loss (e.g. MoE load-balance).  The same builders therefore drive
+the GNN track (padded-CSR segments) and all 10 assigned transformer
+architectures (token-chunk segments) — DESIGN.md §3.
+
+Variants (paper §5.1 "Methods"):
+    full     — all segments require grad (Full Graph Training analogue)
+    gst      — sampled segments with grad; rest recomputed under stop_grad
+    gst_one  — only sampled segments, no aggregation of the rest
+    gst_e    — historical embedding table for the rest
+    gst_ef   — +E with head finetuning at the end (schedule, same step)
+    gst_ed   — +E with Stale Embedding Dropout (Eq. 1)
+    gst_efd  — the complete method
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import embedding_table as tbl
+from repro.core import segment as seg
+from repro.models.common import dense_init
+
+
+# ---------------------------------------------------------------------------
+# variants
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GSTVariant:
+    name: str
+    use_table: bool          # E: stale embeddings come from the table
+    recompute_stale: bool    # GST: stop-grad forward for non-sampled segments
+    use_sed: bool            # D: Eq. 1 dropout/up-weighting
+    sampled_only: bool       # GST-One: drop all non-sampled segments
+    finetune_head: bool      # F: head finetuning phase at end of training
+
+
+VARIANTS: Dict[str, GSTVariant] = {
+    "full":    GSTVariant("full", False, False, False, False, False),
+    "gst":     GSTVariant("gst", False, True, False, False, False),
+    "gst_one": GSTVariant("gst_one", False, False, False, True, False),
+    "gst_e":   GSTVariant("gst_e", True, False, False, False, False),
+    "gst_ef":  GSTVariant("gst_ef", True, False, False, False, True),
+    "gst_ed":  GSTVariant("gst_ed", True, False, True, False, False),
+    "gst_efd": GSTVariant("gst_efd", True, False, True, False, True),
+}
+
+
+# ---------------------------------------------------------------------------
+# heads and losses
+# ---------------------------------------------------------------------------
+
+
+def head_init(key, d_h: int, num_out: int, mode: str, dtype=jnp.float32):
+    """mode 'mlp': 2-layer MLP graph head F'.  mode 'segment_sum': linear
+    per-segment scalar head (part of F; F' = Σ, paper §5.3)."""
+    k1, k2 = jax.random.split(key)
+    if mode == "mlp":
+        return {
+            "w1": dense_init(k1, d_h, d_h, dtype),
+            "b1": jnp.zeros((d_h,), dtype),
+            "w2": dense_init(k2, d_h, num_out, dtype),
+            "b2": jnp.zeros((num_out,), dtype),
+        }
+    return {"w": dense_init(k1, d_h, 1, dtype), "b": jnp.zeros((1,), dtype)}
+
+
+def head_apply(p, h, mode: str):
+    if mode == "mlp":
+        z = jax.nn.relu(h @ p["w1"] + p["b1"])
+        return z @ p["w2"] + p["b2"]
+    return (h @ p["w"] + p["b"])[..., 0]
+
+
+def ce_loss(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    acc = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
+    return jnp.mean(nll), jnp.mean(acc)
+
+
+def pairwise_hinge_loss(preds, labels):
+    """PairwiseHinge within batch (paper Appendix B) + OPA metric."""
+    dy = preds[:, None] - preds[None, :]
+    gt = (labels[:, None] > labels[None, :]).astype(jnp.float32)
+    loss = jnp.sum(gt * jnp.maximum(0.0, 1.0 - dy)) / jnp.maximum(jnp.sum(gt), 1.0)
+    opa = jnp.sum(gt * (dy > 0)) / jnp.maximum(jnp.sum(gt), 1.0)
+    return loss, opa
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def gather_segments(seg_inputs, idx):
+    """Pytree (B, J, ...) gathered at idx (B, S) -> (B, S, ...)."""
+    def g(x):
+        expand = idx.reshape(idx.shape + (1,) * (x.ndim - 2))
+        return jnp.take_along_axis(x, expand.astype(jnp.int32), axis=1)
+    return jax.tree_util.tree_map(g, seg_inputs)
+
+
+def _flatten_bs(tree):
+    return jax.tree_util.tree_map(lambda x: x.reshape((-1,) + x.shape[2:]), tree)
+
+
+class GSTBatch(NamedTuple):
+    """One batch of segmented inputs.
+
+    seg_inputs: pytree, leaves (B, J_max, ...) — per-segment model inputs.
+    seg_valid:  (B, J_max) 1/0.
+    graph_ids:  (B,) int32 row in the historical table.
+    labels:     (B,) int32 (ce) or float32 (ranking).
+    """
+    seg_inputs: Any
+    seg_valid: jnp.ndarray
+    graph_ids: jnp.ndarray
+    labels: jnp.ndarray
+
+
+class TrainState(NamedTuple):
+    backbone: Any
+    head: Any
+    opt_state: Any
+    table: tbl.EmbeddingTable
+    step: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    encode_fn: Callable,
+    optimizer,
+    variant: GSTVariant,
+    *,
+    num_sampled: int = 1,
+    keep_prob: float = 0.5,
+    head_mode: str = "mlp",
+    loss_kind: str = "ce",
+    agg: str = "mean",
+    aux_weight: float = 1e-2,
+):
+    """Returns ``step(state, batch, rng) -> (state, metrics)`` implementing
+    Algorithm 1 (gst*) / Algorithm 2 lines 1-10 (e-variants)."""
+    S = num_sampled
+    loss_pair = ce_loss if loss_kind == "ce" else pairwise_hinge_loss
+
+    def step(state: TrainState, batch: GSTBatch, rng):
+        B, J = batch.seg_valid.shape
+        r_sample, r_sed = jax.random.split(jax.random.fold_in(rng, state.step))
+        idx = seg.sample_segments(r_sample, batch.seg_valid, S)       # (B, S)
+        fresh_mask = seg.sampled_mask(idx, J) * batch.seg_valid       # (B, J)
+        sampled_inputs = _flatten_bs(gather_segments(batch.seg_inputs, idx))
+
+        # ---- stale embeddings (no grad) ---------------------------------
+        if variant.use_table:
+            h_stale, initialized = tbl.lookup(state.table, batch.graph_ids)
+            stale_valid = batch.seg_valid * initialized.astype(batch.seg_valid.dtype)
+        elif variant.recompute_stale:
+            h_all, _ = encode_fn(state.backbone, _flatten_bs(batch.seg_inputs))
+            h_stale = jax.lax.stop_gradient(h_all.reshape(B, J, -1))
+            stale_valid = batch.seg_valid
+        else:  # full / gst_one: no stale path
+            h_stale = None
+            stale_valid = jnp.zeros_like(batch.seg_valid)
+
+        # ---- SED / η weights (Eq. 1) ------------------------------------
+        if variant.use_sed:
+            eta, _ = seg.sed_weights(r_sed, batch.seg_valid, fresh_mask, keep_prob, S)
+            eta = eta * jnp.where(
+                fresh_mask > 0, 1.0,
+                stale_valid.astype(jnp.float32))  # uninitialized stale -> 0
+        elif variant.sampled_only:
+            eta = fresh_mask
+        elif variant.name == "full":
+            eta = batch.seg_valid.astype(jnp.float32)
+        else:
+            eta = (fresh_mask + (1.0 - fresh_mask) * stale_valid).astype(jnp.float32)
+
+        def loss_fn(trainable):
+            backbone, head = trainable
+            if variant.name == "full":
+                h_flat, aux = encode_fn(backbone, _flatten_bs(batch.seg_inputs))
+                h_comb = h_flat.reshape(B, J, -1)
+            else:
+                h_s_flat, aux = encode_fn(backbone, sampled_inputs)
+                h_s = h_s_flat.reshape(B, S, -1)
+                if h_stale is None:
+                    base = jnp.zeros((B, J, h_s.shape[-1]), h_s.dtype)
+                else:
+                    base = h_stale.astype(h_s.dtype)
+                # scatter fresh embeddings over the stale base
+                b_idx = jnp.arange(B)[:, None]
+                h_comb = base.at[b_idx, idx].set(h_s)
+
+            if head_mode == "segment_sum":
+                # per-segment scalar predictions; F' = Σ (paper §5.3)
+                scal = head_apply(head, h_comb, "segment_sum")        # (B, J)
+                denom = jnp.sum(batch.seg_valid, -1) if agg == "mean" else 1.0
+                preds = jnp.sum(scal * eta, axis=-1) / denom
+                loss, metric = loss_pair(preds, batch.labels)
+            else:
+                if variant.sampled_only:
+                    # GST-One: mean over the sampled segments only
+                    h_graph = jnp.sum(
+                        h_comb * fresh_mask[..., None].astype(h_comb.dtype), 1) / S
+                else:
+                    h_graph = seg.aggregate(h_comb, eta, batch.seg_valid, agg)
+                out = head_apply(head, h_graph, "mlp")
+                if loss_kind == "ce":
+                    loss, metric = loss_pair(out, batch.labels)
+                else:
+                    loss, metric = loss_pair(out[..., 0] if out.ndim > 1 else out,
+                                             batch.labels)
+            return loss + aux_weight * aux, (metric, h_comb)
+
+        (loss, (metric, h_comb)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)((state.backbone, state.head))
+        (new_backbone, new_head), new_opt, opt_metrics = optimizer.update(
+            (state.backbone, state.head), grads, state.opt_state)
+
+        new_table = state.table
+        if variant.use_table:
+            b_idx = jnp.arange(B)[:, None]
+            h_s_new = jax.lax.stop_gradient(
+                jnp.take_along_axis(h_comb, idx[..., None], axis=1))  # (B,S,d)
+            new_table = tbl.update_sampled(
+                state.table, batch.graph_ids, idx, h_s_new, state.step)
+
+        new_state = TrainState(new_backbone, new_head, new_opt, new_table,
+                               state.step + 1)
+        metrics = {"loss": loss, "metric": metric, **opt_metrics}
+        return new_state, metrics
+
+    return step
+
+
+def make_eval_step(encode_fn: Callable, *, head_mode: str = "mlp",
+                   loss_kind: str = "ce", agg: str = "mean"):
+    """Test-time: every segment fresh (paper's P(⊕ h_j, y) distribution)."""
+    loss_pair = ce_loss if loss_kind == "ce" else pairwise_hinge_loss
+
+    def step(state: TrainState, batch: GSTBatch):
+        B, J = batch.seg_valid.shape
+        h_flat, _ = encode_fn(state.backbone, _flatten_bs(batch.seg_inputs))
+        h_all = h_flat.reshape(B, J, -1)
+        eta = batch.seg_valid.astype(jnp.float32)
+        if head_mode == "segment_sum":
+            scal = head_apply(state.head, h_all, "segment_sum")
+            denom = jnp.sum(batch.seg_valid, -1) if agg == "mean" else 1.0
+            preds = jnp.sum(scal * eta, axis=-1) / denom
+            loss, metric = loss_pair(preds, batch.labels)
+        else:
+            h_graph = seg.aggregate(h_all, eta, batch.seg_valid, agg)
+            out = head_apply(state.head, h_graph, "mlp")
+            if loss_kind == "ce":
+                loss, metric = loss_pair(out, batch.labels)
+            else:
+                loss, metric = loss_pair(out[..., 0] if out.ndim > 1 else out,
+                                         batch.labels)
+        return {"loss": loss, "metric": metric}
+
+    return step
+
+
+def make_refresh_step(encode_fn: Callable):
+    """Algorithm 2 line 12: refresh T with the final backbone."""
+
+    def step(state: TrainState, batch: GSTBatch):
+        B, J = batch.seg_valid.shape
+        h_flat, _ = encode_fn(state.backbone, _flatten_bs(batch.seg_inputs))
+        h_all = h_flat.reshape(B, J, -1)
+        table = tbl.update_all(state.table, batch.graph_ids, h_all,
+                               batch.seg_valid, state.step)
+        return state._replace(table=table)
+
+    return step
+
+
+def make_finetune_step(optimizer, *, loss_kind: str = "ce", agg: str = "mean"):
+    """Algorithm 2 lines 13-18: train F' only, inputs from the (fresh) table."""
+    loss_pair = ce_loss if loss_kind == "ce" else pairwise_hinge_loss
+
+    def step(state: TrainState, batch: GSTBatch):
+        h_all, _ = tbl.lookup(state.table, batch.graph_ids)
+        eta = batch.seg_valid.astype(jnp.float32)
+        h_graph = seg.aggregate(h_all.astype(jnp.float32), eta, batch.seg_valid, agg)
+
+        def loss_fn(head):
+            out = head_apply(head, h_graph, "mlp")
+            if loss_kind == "ce":
+                return loss_pair(out, batch.labels)
+            return loss_pair(out[..., 0] if out.ndim > 1 else out, batch.labels)
+
+        (loss, metric), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.head)
+        new_head, new_opt, _ = optimizer.update(state.head, grads, state.opt_state)
+        return state._replace(head=new_head, opt_state=new_opt,
+                              step=state.step + 1), {"loss": loss, "metric": metric}
+
+    return step

@@ -1,0 +1,70 @@
+"""Segment sampling and Stale Embedding Dropout (paper §3.1, §3.4).
+
+All functions are mask-aware: graphs have up to ``J_max`` segments with a
+validity mask (XLA static shapes — DESIGN.md §4.1).  ``J^(i)`` in the paper
+is ``num_valid`` here.
+
+SED weights (Eq. 1), with keep probability p and S backprop segments:
+    η = p + (1-p)·J/S   for sampled (fresh) segments
+    η = 0               for stale segments dropped  (prob 1-p)
+    η = 1               for stale segments kept     (prob p)
+This keeps the aggregated embedding unbiased in the fresh part while damping
+the stale bias by the factor p (Theorem 4.1; see core/theory.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_segments(rng, seg_valid: jnp.ndarray, num_sampled: int) -> jnp.ndarray:
+    """Sample S distinct segment indices per graph (Gumbel top-k over valid).
+
+    seg_valid: (B, J) bool/0-1.  Returns idx: (B, S) int32 — indices of the
+    segments chosen for backprop.  Invalid slots are never chosen as long as
+    the graph has >= 1 valid segment (guaranteed by construction).
+    """
+    g = jax.random.gumbel(rng, seg_valid.shape)
+    scores = jnp.where(seg_valid > 0, g, -jnp.inf)
+    _, idx = jax.lax.top_k(scores, num_sampled)
+    return idx.astype(jnp.int32)
+
+
+def sampled_mask(idx: jnp.ndarray, J: int) -> jnp.ndarray:
+    """(B, S) indices -> (B, J) 0/1 mask of sampled segments."""
+    return jnp.sum(jax.nn.one_hot(idx, J, dtype=jnp.float32), axis=1)
+
+
+def sed_weights(rng, seg_valid, fresh_mask, keep_prob: float,
+                num_sampled: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 1 weights.  Returns (eta (B, J), drop_mask (B, J)).
+
+    seg_valid:  (B, J) 1 where the segment exists.
+    fresh_mask: (B, J) 1 where the segment was sampled for backprop.
+    drop_mask:  1 where a *stale* segment is dropped by SED.
+    """
+    seg_valid = seg_valid.astype(jnp.float32)
+    fresh_mask = fresh_mask.astype(jnp.float32)
+    J_i = jnp.sum(seg_valid, axis=-1, keepdims=True)            # (B, 1)
+    S = float(num_sampled)
+    drop = (jax.random.uniform(rng, seg_valid.shape) > keep_prob).astype(jnp.float32)
+    stale = seg_valid * (1.0 - fresh_mask)
+    eta_fresh = keep_prob + (1.0 - keep_prob) * J_i / S
+    eta = fresh_mask * eta_fresh + stale * (1.0 - drop)
+    return eta * seg_valid, drop * stale
+
+
+def aggregate(h_segments, weights, seg_valid, mode: str = "mean"):
+    """⊕ with weights.  h_segments: (B, J, d); weights/seg_valid: (B, J).
+
+    mean: Σ η_j h_j / J^(i)  (the paper's mean-pooling ⊕, η-weighted)
+    sum:  Σ η_j h_j          (TpuGraphs: per-segment predictions summed)
+    """
+    w = (weights * seg_valid.astype(weights.dtype))[..., None]
+    s = jnp.sum(h_segments * w.astype(h_segments.dtype), axis=1)
+    if mode == "sum":
+        return s
+    J_i = jnp.sum(seg_valid.astype(jnp.float32), axis=-1, keepdims=True)
+    return s / jnp.maximum(J_i, 1.0).astype(s.dtype)

@@ -1,0 +1,3 @@
+from repro.data.tokens import make_property_docs, doc_batch_iterator, make_lm_stream
+
+__all__ = ["make_property_docs", "doc_batch_iterator", "make_lm_stream"]

@@ -1,0 +1,20 @@
+from repro.graphs.data import make_malnet_like, make_tpugraphs_like, SyntheticGraph
+from repro.graphs.partition import partition_graph, PARTITIONERS
+from repro.graphs.batching import (
+    SegmentedDataset,
+    pad_segment,
+    segment_dataset,
+    batch_iterator,
+)
+
+__all__ = [
+    "make_malnet_like",
+    "make_tpugraphs_like",
+    "SyntheticGraph",
+    "partition_graph",
+    "PARTITIONERS",
+    "SegmentedDataset",
+    "pad_segment",
+    "segment_dataset",
+    "batch_iterator",
+]

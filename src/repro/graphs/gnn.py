@@ -1,0 +1,172 @@
+"""GNN backbones for the paper-faithful track: GCN, SAGE, GraphGPS-lite.
+
+GraphGym-style design space (paper Table 5): pre-process MLP layers, message
+passing layers, post-process MLP layers, PReLU, mean aggregation.  The
+backbone F maps one padded segment -> one embedding (mean-pooled over valid
+nodes); batching over segments is a vmap.
+
+GraphGPS-lite follows the GPS recipe (local MPNN + global attention per
+layer) [25]; the Performer approximation is unnecessary at segment size
+(<= m_GST nodes), so global attention is exact over the segment — same
+asymptotics as the paper's setup because segments are size-bounded.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    backbone: str = "sage"       # gcn | sage | gps
+    n_feat: int = 8
+    hidden: int = 64
+    n_pre: int = 1
+    n_mp: int = 2
+    n_post: int = 1
+    num_heads: int = 4           # gps global attention heads
+    use_pallas: bool = False     # route neighbor aggregation through the
+                                 # segment_spmm Pallas kernel (TPU target;
+                                 # interpret mode on CPU — tests only)
+
+
+def _prelu_init(dtype=jnp.float32):
+    return {"a": jnp.full((1,), 0.25, dtype)}
+
+
+def _prelu(p, x):
+    return jnp.where(x >= 0, x, p["a"] * x)
+
+
+def _mp_params(key, cfg: GNNConfig, dtype=jnp.float32):
+    d = cfg.hidden
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if cfg.backbone == "gcn":
+        return {"w": dense_init(k1, d, d, dtype), "prelu": _prelu_init(dtype)}
+    if cfg.backbone == "sage":
+        return {"w_self": dense_init(k1, d, d, dtype),
+                "w_nbr": dense_init(k2, d, d, dtype),
+                "prelu": _prelu_init(dtype)}
+    if cfg.backbone == "gps":
+        kq, kk, kv, ko = jax.random.split(k3, 4)
+        return {
+            "w_msg": dense_init(k1, d, d, dtype),
+            "w_gate_src": dense_init(k2, d, d, dtype),
+            "w_gate_dst": dense_init(k4, d, d, dtype),
+            "attn": {"wq": dense_init(kq, d, d, dtype),
+                     "wk": dense_init(kk, d, d, dtype),
+                     "wv": dense_init(kv, d, d, dtype),
+                     "wo": dense_init(ko, d, d, dtype)},
+            "mlp_in": dense_init(jax.random.fold_in(k3, 1), d, 2 * d, dtype),
+            "mlp_out": dense_init(jax.random.fold_in(k3, 2), 2 * d, d, dtype),
+            "prelu": _prelu_init(dtype),
+        }
+    raise ValueError(cfg.backbone)
+
+
+def gnn_init(key, cfg: GNNConfig, dtype=jnp.float32):
+    keys = jax.random.split(key, cfg.n_pre + cfg.n_mp + cfg.n_post + 1)
+    p = {"pre": [], "mp": [], "post": []}
+    d_in = cfg.n_feat
+    for i in range(cfg.n_pre):
+        p["pre"].append({"w": dense_init(keys[i], d_in, cfg.hidden, dtype),
+                         "b": jnp.zeros((cfg.hidden,), dtype),
+                         "prelu": _prelu_init(dtype)})
+        d_in = cfg.hidden
+    for i in range(cfg.n_mp):
+        p["mp"].append(_mp_params(keys[cfg.n_pre + i], cfg, dtype))
+    for i in range(cfg.n_post):
+        p["post"].append({"w": dense_init(keys[cfg.n_pre + cfg.n_mp + i],
+                                          cfg.hidden, cfg.hidden, dtype),
+                          "b": jnp.zeros((cfg.hidden,), dtype),
+                          "prelu": _prelu_init(dtype)})
+    return p
+
+
+def _agg_mean(h_src, dst, edge_valid, m, *, src=None, h_full=None,
+              use_pallas=False):
+    """Masked mean aggregation of messages at dst nodes.
+
+    use_pallas (requires src + h_full=(m, d) node features): the reduction
+    runs through the segment_spmm kernel (one-hot MXU matmuls) instead of
+    jax.ops.segment_sum — identical semantics, TPU-tiled execution.
+    """
+    if use_pallas and src is not None and h_full is not None:
+        from repro.kernels.segment_spmm import segment_spmm
+        summed = segment_spmm(h_full, src, dst, edge_valid,
+                              interpret=jax.default_backend() != "tpu")
+    else:
+        msg = h_src * edge_valid[:, None]
+        summed = jax.ops.segment_sum(msg, dst, num_segments=m)
+    deg = jax.ops.segment_sum(edge_valid, dst, num_segments=m)
+    return summed / jnp.maximum(deg, 1.0)[:, None], deg
+
+
+def _mp_layer(p, cfg: GNNConfig, h, edges, edge_valid, node_valid):
+    m = h.shape[0]
+    src, dst = edges[:, 0], edges[:, 1]
+    if cfg.backbone == "gcn":
+        # symmetric-normalized aggregation with self loops
+        deg = jax.ops.segment_sum(edge_valid, dst, num_segments=m) + 1.0
+        norm = jax.lax.rsqrt(deg)
+        msg = (h * norm[:, None])[src] * edge_valid[:, None]
+        agg = jax.ops.segment_sum(msg, dst, num_segments=m) * norm[:, None]
+        out = _prelu(p["prelu"], (h * (norm ** 2)[:, None] + agg) @ p["w"])
+        return out * node_valid[:, None]
+    if cfg.backbone == "sage":
+        mean_nbr, _ = _agg_mean(h[src], dst, edge_valid, m, src=src, h_full=h,
+                                use_pallas=cfg.use_pallas)
+        out = _prelu(p["prelu"], h @ p["w_self"] + mean_nbr @ p["w_nbr"])
+        return out * node_valid[:, None]
+    if cfg.backbone == "gps":
+        # local: gated message passing (GatedGCN-flavored)
+        gate = jax.nn.sigmoid(h[src] @ p["w_gate_src"] + h[dst] @ p["w_gate_dst"])
+        msgs = gate * (h[src] @ p["w_msg"])
+        local, _ = _agg_mean(msgs, dst, edge_valid, m)
+        # global: exact masked self-attention over segment nodes
+        d = cfg.hidden
+        hd = d // cfg.num_heads
+        q = (h @ p["attn"]["wq"]).reshape(m, cfg.num_heads, hd)
+        k = (h @ p["attn"]["wk"]).reshape(m, cfg.num_heads, hd)
+        v = (h @ p["attn"]["wv"]).reshape(m, cfg.num_heads, hd)
+        logits = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(hd)
+        logits = jnp.where(node_valid[None, None, :] > 0, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        glob = jnp.einsum("hqk,khd->qhd", probs, v).reshape(m, d) @ p["attn"]["wo"]
+        h = h + local + glob
+        h = h + _prelu(p["prelu"], h @ p["mlp_in"]) @ p["mlp_out"]
+        return h * node_valid[:, None]
+    raise ValueError(cfg.backbone)
+
+
+def _encode_one(params, cfg: GNNConfig, x, edges, edge_valid, node_valid):
+    h = x
+    for lp in params["pre"]:
+        h = _prelu(lp["prelu"], h @ lp["w"] + lp["b"])
+    h = h * node_valid[:, None]
+    for lp in params["mp"]:
+        h = _mp_layer(lp, cfg, h, edges, edge_valid, node_valid)
+    for lp in params["post"]:
+        h = _prelu(lp["prelu"], h @ lp["w"] + lp["b"])
+    h = h * node_valid[:, None]
+    denom = jnp.maximum(jnp.sum(node_valid), 1.0)
+    return jnp.sum(h, axis=0) / denom  # mean pool over valid nodes
+
+
+def make_encode_fn(cfg: GNNConfig) -> Callable:
+    """Returns encode_fn(params, seg_inputs) -> (emb (N, hidden), aux=0.)
+    matching the GST core's backbone interface."""
+
+    def encode(params, seg_inputs):
+        f = partial(_encode_one, params, cfg)
+        emb = jax.vmap(f)(seg_inputs["x"], seg_inputs["edges"],
+                          seg_inputs["edge_valid"], seg_inputs["node_valid"])
+        return emb, jnp.zeros((), jnp.float32)
+
+    return encode

@@ -1,0 +1,58 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU —
+the kernels are written for the TPU target and validated in interpret mode
+against the pure-jnp oracles in ref.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.sed_pool import sed_pool as _sed_pool
+from repro.kernels.segment_spmm import segment_spmm as _segment_spmm
+from repro.kernels.swa_attention import swa_attention as _swa_attention
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("num_nodes", "use_pallas"))
+def neighbor_aggregate(h, src, dst, edge_valid, *, num_nodes: int,
+                       use_pallas: bool = True):
+    """Masked neighbor mean (GNN message aggregation).
+
+    Returns (mean (m, d), deg (m,)).  Sum runs on the MXU via segment_spmm;
+    degree is a cheap O(e) reduction kept in jnp.
+    """
+    if use_pallas:
+        s = _segment_spmm(h, src, dst, edge_valid, interpret=_default_interpret())
+    else:
+        s = ref.segment_spmm_ref(h, src, dst, edge_valid, num_nodes)
+    deg = jax.ops.segment_sum(edge_valid, dst, num_segments=num_nodes)
+    return s / jnp.maximum(deg, 1.0)[:, None], deg
+
+
+@partial(jax.jit, static_argnames=("keep_prob", "num_sampled", "agg", "use_pallas"))
+def sed_aggregate(h, seg_valid, fresh_mask, drop_mask, *, keep_prob: float,
+                  num_sampled: int, agg: str = "mean", use_pallas: bool = True):
+    """Fused Eq.-1 η-weighting + ⊕ pooling over segments."""
+    if use_pallas:
+        return _sed_pool(h, seg_valid, fresh_mask, drop_mask,
+                         keep_prob=keep_prob, num_sampled=num_sampled, agg=agg,
+                         interpret=_default_interpret())
+    return ref.sed_pool_ref(h, seg_valid, fresh_mask, drop_mask, keep_prob,
+                            num_sampled, agg)
+
+
+@partial(jax.jit, static_argnames=("window", "use_pallas"))
+def sliding_window_attention(q, k, v, *, window: int, use_pallas: bool = True):
+    """Causal sliding-window flash attention (sub-quadratic prefill)."""
+    if use_pallas:
+        return _swa_attention(q, k, v, window=window,
+                              interpret=_default_interpret())
+    return ref.swa_attention_ref(q, k, v, window)

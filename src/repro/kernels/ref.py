@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_spmm_ref(h, src, dst, w, num_nodes: int):
+    """Weighted neighbor scatter-add:  out[v] = Σ_{e: dst_e = v} w_e · h[src_e].
+
+    h: (m, d); src/dst: (e,) int32; w: (e,) float — padding edges carry w=0.
+    """
+    msg = h[src] * w[:, None]
+    return jax.ops.segment_sum(msg, dst, num_segments=num_nodes)
+
+
+def sed_pool_ref(h, seg_valid, fresh_mask, drop_mask, keep_prob: float,
+                 num_sampled: int, agg: str = "mean"):
+    """Fused SED η-weighting (Eq. 1) + segment aggregation ⊕.
+
+    h: (B, J, d); masks: (B, J).  Matches core.segment.sed_weights +
+    core.segment.aggregate composed (given the same drop draw).
+    """
+    seg_valid = seg_valid.astype(jnp.float32)
+    fresh = fresh_mask.astype(jnp.float32)
+    drop = drop_mask.astype(jnp.float32)
+    J_i = jnp.sum(seg_valid, axis=-1, keepdims=True)
+    eta_fresh = keep_prob + (1.0 - keep_prob) * J_i / float(num_sampled)
+    stale = seg_valid * (1.0 - fresh)
+    eta = (fresh * eta_fresh + stale * (1.0 - drop)) * seg_valid
+    s = jnp.sum(h * eta[..., None].astype(h.dtype), axis=1)
+    if agg == "sum":
+        return s
+    return s / jnp.maximum(J_i, 1.0).astype(s.dtype)
+
+
+def swa_attention_ref(q, k, v, window: int):
+    """Causal sliding-window attention oracle.
+
+    q/k/v: (B, S, H, D); key j visible to query i iff  i-window < j <= i.
+    """
+    import math
+    B, S, H, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = (j <= i) & (j > i - window)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

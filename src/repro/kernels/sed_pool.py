@@ -1,0 +1,72 @@
+"""Pallas TPU kernel: fused Stale-Embedding-Dropout + segment pooling.
+
+The GST aggregation h = ⊕_j η_j h_j (Eq. 1) is small compute but, executed
+naively, makes four HBM passes over the (B, J, d) segment-embedding tensor
+(η build, mask, weighted sum, normalize).  This kernel fuses the whole thing
+into one pass: the η weights are computed in-register from the three masks
+and keep-prob, and the J-reduction happens in VMEM.
+
+Grid: (batch blocks, feature blocks); J (≤ J_max, small) is unrolled inside
+the kernel body as part of the block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_B_BLK = 8
+DEFAULT_D_BLK = 128
+
+
+def _sed_pool_kernel(h_ref, valid_ref, fresh_ref, drop_ref, out_ref, *,
+                     keep_prob: float, num_sampled: int, agg: str):
+    h = h_ref[...]                           # (b_blk, J, d_blk)
+    valid = valid_ref[...].astype(jnp.float32)   # (b_blk, J)
+    fresh = fresh_ref[...].astype(jnp.float32)
+    drop = drop_ref[...].astype(jnp.float32)
+    J_i = jnp.sum(valid, axis=-1, keepdims=True)           # (b_blk, 1)
+    eta_fresh = keep_prob + (1.0 - keep_prob) * J_i / float(num_sampled)
+    stale = valid * (1.0 - fresh)
+    eta = (fresh * eta_fresh + stale * (1.0 - drop)) * valid  # (b_blk, J)
+    s = jnp.sum(h.astype(jnp.float32) * eta[..., None], axis=1)  # (b_blk, d_blk)
+    if agg == "mean":
+        s = s / jnp.maximum(J_i, 1.0)
+    out_ref[...] = s.astype(out_ref.dtype)
+
+
+def sed_pool(h, seg_valid, fresh_mask, drop_mask, *, keep_prob: float,
+             num_sampled: int, agg: str = "mean", b_blk: int = DEFAULT_B_BLK,
+             d_blk: int = DEFAULT_D_BLK, interpret: bool = False):
+    """h: (B, J, d); masks: (B, J) -> (B, d) pooled graph embedding."""
+    B, J, d = h.shape
+    b_blk = min(b_blk, B)
+    d_blk = min(d_blk, d)
+    pad_b = (-B) % b_blk
+    pad_d = (-d) % d_blk
+    if pad_b:
+        h = jnp.pad(h, ((0, pad_b), (0, 0), (0, 0)))
+        seg_valid = jnp.pad(seg_valid, ((0, pad_b), (0, 0)))
+        fresh_mask = jnp.pad(fresh_mask, ((0, pad_b), (0, 0)))
+        drop_mask = jnp.pad(drop_mask, ((0, pad_b), (0, 0)))
+    if pad_d:
+        h = jnp.pad(h, ((0, 0), (0, 0), (0, pad_d)))
+    grid = ((B + pad_b) // b_blk, (d + pad_d) // d_blk)
+    out = pl.pallas_call(
+        functools.partial(_sed_pool_kernel, keep_prob=keep_prob,
+                          num_sampled=num_sampled, agg=agg),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_blk, J, d_blk), lambda bb, db: (bb, 0, db)),
+            pl.BlockSpec((b_blk, J), lambda bb, db: (bb, 0)),
+            pl.BlockSpec((b_blk, J), lambda bb, db: (bb, 0)),
+            pl.BlockSpec((b_blk, J), lambda bb, db: (bb, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_blk, d_blk), lambda bb, db: (bb, db)),
+        out_shape=jax.ShapeDtypeStruct((B + pad_b, d + pad_d), h.dtype),
+        interpret=interpret,
+    )(h, seg_valid, fresh_mask, drop_mask)
+    return out[:B, :d]

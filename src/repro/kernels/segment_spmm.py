@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: padded-edge-list neighbor aggregation (GNN hot spot).
+
+GPU GNN frameworks implement scatter-add with atomics.  TPU adaptation
+(DESIGN.md §4.3): express gather AND scatter as **one-hot matmuls** so the
+whole message-passing reduction runs on the MXU with no dynamic memory:
+
+    G[e, n] = 1{src_e = n}            (gather matrix,  built via iota compare)
+    S[e, n] = 1{dst_e = n}            (scatter matrix)
+    out     = Sᵀ @ (diag(w) @ (G @ h))
+
+Grid: (edge blocks, feature blocks).  The node dimension m (= the paper's
+bounded segment size m_GST) stays resident in VMEM — this is exactly why GST
+bounds the segment size: the working set (m × d_blk block of h and out plus
+an e_blk × m one-hot tile) fits VMEM for m ≤ 1024 at d_blk = 128.
+
+Accumulation over edge blocks relies on TPU Pallas' sequential grid:
+the out block is zero-initialised at the first edge block and accumulated
+in-place afterwards.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_E_BLK = 256
+DEFAULT_D_BLK = 128
+
+
+def _spmm_kernel(src_ref, dst_ref, w_ref, h_ref, out_ref, *, m: int):
+    eb = pl.program_id(0)
+    src = src_ref[:, 0]                    # (e_blk,)
+    dst = dst_ref[:, 0]
+    w = w_ref[:, 0]                        # (e_blk,) float, 0 on padding
+    h = h_ref[...]                         # (m, d_blk)
+    e_blk = src.shape[0]
+    node_ids = jax.lax.broadcasted_iota(jnp.int32, (e_blk, m), 1)
+    gather = (src[:, None] == node_ids).astype(h.dtype)     # (e_blk, m)
+    scatter = (dst[:, None] == node_ids).astype(h.dtype)    # (e_blk, m)
+    msgs = jnp.dot(gather, h, preferred_element_type=jnp.float32)
+    msgs = msgs * w[:, None].astype(jnp.float32)
+    contrib = jnp.dot(scatter.T, msgs.astype(h.dtype),
+                      preferred_element_type=jnp.float32)   # (m, d_blk)
+
+    @pl.when(eb == 0)
+    def _init():
+        out_ref[...] = contrib.astype(out_ref.dtype)
+
+    @pl.when(eb != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + contrib.astype(out_ref.dtype)
+
+
+def segment_spmm(h, src, dst, w, *, e_blk: int = DEFAULT_E_BLK,
+                 d_blk: int = DEFAULT_D_BLK, interpret: bool = False):
+    """out[v] = Σ_{e: dst_e=v} w_e · h[src_e].   h: (m, d); src/dst/w: (e,)."""
+    m, d = h.shape
+    e = src.shape[0]
+    e_blk = min(e_blk, e)
+    d_blk = min(d_blk, d)
+    # pad edge dim to a multiple of e_blk (w = 0 ⇒ no contribution)
+    pad_e = (-e) % e_blk
+    if pad_e:
+        src = jnp.pad(src, (0, pad_e))
+        dst = jnp.pad(dst, (0, pad_e))
+        w = jnp.pad(w, (0, pad_e))
+    pad_d = (-d) % d_blk
+    if pad_d:
+        h = jnp.pad(h, ((0, 0), (0, pad_d)))
+    grid = ((e + pad_e) // e_blk, (d + pad_d) // d_blk)
+    out = pl.pallas_call(
+        functools.partial(_spmm_kernel, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((e_blk, 1), lambda eb, db: (eb, 0)),
+            pl.BlockSpec((e_blk, 1), lambda eb, db: (eb, 0)),
+            pl.BlockSpec((e_blk, 1), lambda eb, db: (eb, 0)),
+            pl.BlockSpec((m, d_blk), lambda eb, db: (0, db)),
+        ],
+        out_specs=pl.BlockSpec((m, d_blk), lambda eb, db: (0, db)),
+        out_shape=jax.ShapeDtypeStruct((m, d + pad_d), jnp.float32),
+        interpret=interpret,
+    )(src[:, None], dst[:, None], w[:, None], h)
+    return out[:, :d].astype(h.dtype)

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: blockwise sliding-window flash attention (prefill).
+
+Used by the dense architectures' long-context variant (DESIGN.md §Skips):
+window W bounds the key range per query, so prefill cost is O(S·W) instead
+of O(S²) — the sub-quadratic requirement of the long_500k shape.
+
+Flash-attention-style online softmax in VMEM scratch; the kv range per query
+block is static: nkv = W/blk + 1 trailing blocks, so the grid is
+(B·H, S/blk, nkv) and BlockSpec index maps slide the kv window.  Out-of-range
+(clamped) kv blocks are neutralised through the *virtual* position mask.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLK = 128
+NEG_INF = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, out_ref, m_scr, l_scr, acc_scr, *,
+                blk: int, nkv: int, window: int, scale: float):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (blk, D)
+    k = k_ref[0].astype(jnp.float32)              # (blk, D)
+    v = v_ref[0].astype(jnp.float32)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    vb = qb - (nkv - 1) + kb                       # virtual kv block index
+    q_pos = qb * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+    k_pos = vb * blk + jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window) & (vb >= 0)
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m_prev = m_scr[...]                            # (blk, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(scores, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(scores - m_new)                    # (blk, blk)
+    alpha = jnp.exp(m_prev - m_new)                # (blk, 1)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kb == nkv - 1)
+    def _finalize():
+        out_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                      ).astype(out_ref.dtype)
+
+
+def swa_attention(q, k, v, *, window: int, blk: int = DEFAULT_BLK,
+                  interpret: bool = False):
+    """q/k/v: (B, S, H, D) -> (B, S, H, D), causal sliding-window attention."""
+    B, S, H, D = q.shape
+    blk = min(blk, S)
+    assert S % blk == 0, (S, blk)
+    assert window % blk == 0 or window >= S, (window, blk)
+    nkv = min(window // blk + 1, S // blk) if window < S else S // blk
+    nkv = max(nkv, 1)
+    scale = 1.0 / math.sqrt(D)
+    # (B, S, H, D) -> (B*H, S, D)
+    qr = jnp.moveaxis(q, 2, 1).reshape(B * H, S, D)
+    kr = jnp.moveaxis(k, 2, 1).reshape(B * H, S, D)
+    vr = jnp.moveaxis(v, 2, 1).reshape(B * H, S, D)
+
+    def kv_map(bh, qb, kb):
+        vb = qb - (nkv - 1) + kb
+        return (bh, jnp.maximum(vb, 0), 0)
+
+    out = pl.pallas_call(
+        functools.partial(_swa_kernel, blk=blk, nkv=nkv, window=window,
+                          scale=scale),
+        grid=(B * H, S // blk, nkv),
+        in_specs=[
+            pl.BlockSpec((1, blk, D), lambda bh, qb, kb: (bh, qb, 0)),
+            pl.BlockSpec((1, blk, D), kv_map),
+            pl.BlockSpec((1, blk, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, blk, D), lambda bh, qb, kb: (bh, qb, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, 1), jnp.float32),
+            pltpu.VMEM((blk, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return jnp.moveaxis(out.reshape(B, H, S, D), 1, 2)

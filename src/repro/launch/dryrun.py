@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): prove every (architecture × input
+shape × mesh) combination lowers AND compiles under the production meshes,
+and extract the roofline terms (deliverable g) from the compiled artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out EXPERIMENTS_dryrun.json
+
+The XLA_FLAGS line above MUST run before any jax import (jax pins the
+device count at first init) — which is why it is the first statement of the
+module and why this flag is set nowhere else (tests/benches see 1 device).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_step_spec, decode_plan, gst_geometry
+from repro.roofline.analysis import analyze_compiled, param_counts
+
+
+def run_one(arch_id: str, shape_name: str, multi_pod: bool, *,
+            variant: str = "gst_efd", dtype=jnp.bfloat16, verbose: bool = True,
+            unroll: bool = True, dispatch: str = "einsum",
+            cache_update: str = "onehot", attn_impl: str = "naive",
+            mla_absorbed: bool = True, head_aligned: bool = False,
+            gqa: str = "repeat"):
+    # Unroll layer scans so cost_analysis counts every layer (XLA counts a
+    # while-loop body once; see models/transformer.py SCAN_UNROLL).
+    from repro.models import transformer as _T
+    from repro.models import common as _C
+    from repro.models import moe as _M
+    from repro.models import mla as _MLA
+    _T.SCAN_UNROLL = unroll
+    _M.DISPATCH_MODE = dispatch
+    _C.CACHE_UPDATE = cache_update
+    _C.ATTN_IMPL = attn_impl
+    _C.GQA_IMPL = gqa
+    _MLA.ABSORBED_DECODE = mla_absorbed
+    cfg = get_config(arch_id)
+    from repro.launch import sharding as _SH
+    _SH.OVERRIDES = (_SH.head_aligned_overrides(
+        cfg, make_production_mesh(multi_pod=multi_pod)) if head_aligned else [])
+    shape = INPUT_SHAPES[shape_name]
+    if not cfg.supports_shape(shape):
+        return {"arch": arch_id, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped (DESIGN.md §Skips)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for s in mesh.devices.shape:
+        chips *= s
+    t0 = time.time()
+    spec = build_step_spec(cfg, shape_name, mesh, dtype=dtype, variant=variant)
+    with mesh:
+        jitted = jax.jit(
+            spec.fn,
+            in_shardings=spec.in_shardings,
+            out_shardings=spec.out_shardings,
+            donate_argnums=spec.donate_argnums)
+        lowered = jitted.lower(*spec.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # useful-FLOPs accounting
+    moe = cfg.moe
+    # params tree is the first arg's backbone for train, else the params arg
+    param_shapes = spec.args[0].backbone if shape.kind == "train" else spec.args[0]
+    n_total, n_active = param_counts(param_shapes, moe.top_k, moe.num_experts)
+    if shape.kind == "train":
+        J, L = gst_geometry(cfg, shape)
+        tokens = shape.global_batch * L * cfg.gst_backprop_segments
+        kind = "train"
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        kind = "infer"
+    else:
+        tokens = shape.global_batch * 1
+        kind = "infer"
+
+    rep = analyze_compiled(compiled, chips=chips, n_active=n_active,
+                           tokens=tokens, kind=kind)
+    rep.update({
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "multi(2,16,16)" if multi_pod else "single(16,16)",
+        "status": "ok", "variant": variant if shape.kind == "train" else None,
+        "opts": {"dispatch": dispatch, "cache_update": cache_update,
+                 "attn_impl": attn_impl, "mla_absorbed": mla_absorbed,
+                 "unroll": unroll, "head_aligned": head_aligned,
+                 "gqa": gqa},
+        "params_total": n_total, "params_active": n_active,
+        "tokens_per_step": tokens,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    })
+    if shape.kind == "decode":
+        plan = decode_plan(cfg, shape)
+        rep["decode_plan"] = {"cache_len": plan.cache_len, "window": plan.window,
+                              "ring": plan.ring, "seq_shard": plan.seq_shard}
+    if verbose:
+        ma = rep.get("memory_analysis", {})
+        print(f"[{rep['mesh']}] {arch_id} x {shape_name}: OK "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s) "
+              f"dominant={rep['dominant']} "
+              f"terms={ {k: f'{v:.3e}' for k, v in rep['terms_seconds'].items()} } "
+              f"args/dev={ma.get('argument_size_in_bytes', 0)/1e9:.2f}GB "
+              f"temp/dev={ma.get('temp_size_in_bytes', 0)/1e9:.2f}GB",
+              flush=True)
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="gst_efd")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep layer scans rolled (fast compile; FLOP/byte "
+                         "totals count scan bodies once — lowering proof only)")
+    ap.add_argument("--dispatch", default="einsum", choices=["einsum", "gather"])
+    ap.add_argument("--cache-update", default="onehot", choices=["onehot", "dus"])
+    ap.add_argument("--attn-impl", default="naive", choices=["naive", "chunked"])
+    ap.add_argument("--mla-naive", action="store_true")
+    ap.add_argument("--head-aligned-sharding", action="store_true")
+    ap.add_argument("--gqa", default="repeat", choices=["repeat", "grouped"])
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_one(
+                        arch, shape, mp, variant=args.variant,
+                        unroll=not args.no_unroll, dispatch=args.dispatch,
+                        cache_update=args.cache_update,
+                        attn_impl=args.attn_impl,
+                        mla_absorbed=not args.mla_naive,
+                        head_aligned=args.head_aligned_sharding,
+                        gqa=args.gqa))
+                except Exception as e:
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": "multi" if mp else "single",
+                                    "status": f"FAIL: {e}"})
+                    print(f"FAIL {arch} x {shape} multi={mp}: {e}", flush=True)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1, default=str)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if "skip" in r["status"])
+    print(f"\n{n_ok} ok, {n_skip} skipped, {len(results) - n_ok - n_skip} failed "
+          f"of {len(results)}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Sharding rules: parameter-path patterns -> PartitionSpecs (DESIGN.md §5).
+
+Scheme: FSDP over the ('pod','data') axes × tensor parallel over 'model'.
+Rules give a spec for the TRAILING dims of a leaf; leading dims (e.g. the
+stacked layer axis of scan runs, the expert axis handled explicitly) are
+replicated by padding with None.  Every sharded dim is divisibility-checked
+against the mesh axis size and falls back to replication when it does not
+divide — head counts like 56 or 20 on a 16-way model axis replicate rather
+than fail to lower.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import fsdp_axes, model_axis
+
+# (regex over param path, trailing-dim logical spec)
+# logical axes: "fsdp" -> ('pod','data'), "model" -> 'model', None -> replicate
+_RULES: Sequence[Tuple[str, Tuple]] = (
+    (r"experts/w_(in|gate)$", ("model", "fsdp", None)),
+    (r"experts/w_out$", ("model", None, "fsdp")),
+    (r"router$", ("fsdp", "model")),
+    (r"(^|/)embed$", ("model", "fsdp")),           # (vocab, d)
+    (r"lm_head$", ("fsdp", "model")),              # (d, vocab)
+    (r"conv_w$", (None, "model")),                 # (W, d_inner)
+    # column-parallel projections (d_in, d_out): out dim over model
+    (r"(wq|wk|wv|wg|wr|wq_a|wq_b|wkv_a|wk_b|wv_b|w_in|w_gate|w_msg|"
+     r"w_gate_src|w_gate_dst|w_decay_a|mlp_in|w1)$", ("fsdp", "model")),
+    # row-parallel projections (d_in, d_out): in dim over model
+    (r"(wo|w_out|w_rec|w_decay_b|mlp_out|w2)$", ("model", "fsdp")),
+)
+
+
+def _axis_size(mesh: Mesh, logical, multi: bool) -> int:
+    if logical is None:
+        return 1
+    if logical == "fsdp":
+        n = 1
+        for a in fsdp_axes(mesh):
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape.get(logical, 1)
+
+
+def _resolve(mesh: Mesh, logical):
+    if logical is None:
+        return None
+    if logical == "fsdp":
+        ax = fsdp_axes(mesh)
+        return ax if len(ax) > 1 else (ax[0] if ax else None)
+    return logical if logical in mesh.axis_names else None
+
+
+# §Perf override hook: (regex, trailing spec) entries checked BEFORE _RULES.
+# Used by the head-aligned-sharding experiment: when head counts don't divide
+# the model axis (56 or 20 heads on 16-way TP; kv=8 on 16), column-sharding
+# the QKV projections splits heads across devices and GSPMD re-aligns them
+# with all-gathers around every attention — replicating those columns trades
+# parameter memory for the collectives.  Set via launch/dryrun.py
+# --head-aligned-sharding; cleared by default.
+OVERRIDES: list = []
+
+
+def head_aligned_overrides(cfg, mesh) -> list:
+    n_model = mesh.shape.get("model", 1)
+    o = []
+    misaligned = (cfg.num_heads and cfg.num_heads % n_model) or \
+                 (cfg.num_kv_heads and cfg.num_kv_heads % n_model)
+    if misaligned:
+        # Q sharding must tile the KV-group structure or GSPMD reshards the
+        # whole cache around every attention; when either head count doesn't
+        # divide the model axis, replicate the whole attention projection set
+        # (the model axis still shards the FFN, which is the FLOPs majority).
+        o.append((r"(wq|wq_b)$", ("fsdp", None)))
+        o.append((r"(wk|wv)$", ("fsdp", None)))
+        o.append((r"wo$", (None, "fsdp")))
+    return o
+
+
+def spec_for_path(mesh: Mesh, path: str, shape: Tuple[int, ...]) -> P:
+    for pat, trailing in list(OVERRIDES) + list(_RULES):
+        if re.search(pat, path):
+            trailing = trailing[-len(shape):] if len(shape) < len(trailing) else trailing
+            full = (None,) * (len(shape) - len(trailing)) + tuple(trailing)
+            axes = []
+            for dim, logical in zip(shape, full):
+                if logical is not None and dim % _axis_size(mesh, logical, True) == 0:
+                    axes.append(_resolve(mesh, logical))
+                else:
+                    axes.append(None)
+            return P(*axes)
+    return P()  # replicate (norm scales, biases, 1-D params)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def tree_shardings(mesh: Mesh, tree_shapes: Any) -> Any:
+    """Map a pytree of ShapeDtypeStructs/arrays to NamedShardings via rules."""
+    def f(path, leaf):
+        spec = spec_for_path(mesh, _path_str(path), tuple(leaf.shape))
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(f, tree_shapes)
+
+
+# ---------------------------------------------------------------------------
+# data / state shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(mesh: Mesh, batch: int, ndim: int) -> P:
+    """Shard leading batch dim over the fsdp axes when divisible."""
+    n = _axis_size(mesh, "fsdp", True)
+    lead = _resolve(mesh, "fsdp") if (n > 1 and batch % n == 0) else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def batch_sharding(mesh: Mesh, tree_shapes: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, batch_spec(mesh, l.shape[0], l.ndim)),
+        tree_shapes)
+
+
+def table_sharding(mesh: Mesh, table_shapes) -> Any:
+    """Historical embedding table: graph-id rows over the fsdp axes."""
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, batch_spec(mesh, l.shape[0], l.ndim)),
+        table_shapes)
+
+
+def cache_spec(mesh: Mesh, path: str, shape: Tuple[int, ...],
+               seq_shard: bool = False) -> P:
+    """KV/state caches.
+
+    Cache kinds by leaf name; a leading stacked-layer axis (scan runs,
+    whisper stacked decoder) is detected by ndim and always replicated:
+
+        k/v    (L?, B, C, KV, hd) — batch over fsdp, KV heads over model
+        ckv/kr (L?, B, C, r)      — batch over fsdp (latent replicated)
+        conv   (L?, B, W-1, d_in) — batch over fsdp, channels over model
+        ssm    (L?, B, H, P, N)   — batch over fsdp, heads over model
+        state  (L?, B, H, N, N)   — batch over fsdp, heads over model
+        shift* (L?, B, d)         — batch over fsdp
+
+    ``seq_shard=True`` (long_500k, batch=1): shard the *sequence* dim of
+    attention caches over the fsdp axes instead — sequence-parallel decode
+    (DESIGN.md §5); XLA partitions the softmax reduction across shards.
+    """
+    n_fsdp = _axis_size(mesh, "fsdp", True)
+    n_model = _axis_size(mesh, "model", True)
+    fsdp = _resolve(mesh, "fsdp")
+    model = _resolve(mesh, "model")
+    name = path.rsplit("/", 1)[-1]
+    ndim = len(shape)
+    # (kind, base ndim without the stacked-layer axis)
+    if name in ("k", "v") or (name not in ("ckv", "kr", "conv", "ssm", "state",
+                                           "shift_tm", "shift_cm") and ndim >= 5):
+        kind, base = "kv", 4
+    elif name in ("ckv", "kr"):
+        kind, base = "latent", 3
+    elif name == "conv":
+        kind, base = "conv", 3
+    elif name in ("ssm", "state"):
+        kind, base = "heads", 4
+    elif name in ("shift_tm", "shift_cm"):
+        kind, base = "shift", 2
+    else:
+        kind, base = "other", ndim
+    off = ndim - base  # 1 if a stacked-layer axis leads, else 0
+    axes: list = [None] * ndim
+    if off < 0 or off > 1:
+        return P(*axes)
+    b_i = off  # batch dim index
+    if kind == "kv":
+        seq_i, kv_i = off + 1, off + 2
+        if seq_shard:
+            if shape[seq_i] % n_fsdp == 0:
+                axes[seq_i] = fsdp
+        elif n_fsdp > 1 and shape[b_i] % n_fsdp == 0:
+            axes[b_i] = fsdp
+        if shape[kv_i] % n_model == 0:
+            axes[kv_i] = model
+    elif kind == "latent":
+        seq_i = off + 1
+        if seq_shard:
+            if shape[seq_i] % n_fsdp == 0:
+                axes[seq_i] = fsdp
+        elif n_fsdp > 1 and shape[b_i] % n_fsdp == 0:
+            axes[b_i] = fsdp
+    elif kind == "conv":
+        if n_fsdp > 1 and shape[b_i] % n_fsdp == 0:
+            axes[b_i] = fsdp
+        if shape[off + 2] % n_model == 0:
+            axes[off + 2] = model
+    elif kind == "heads":
+        if n_fsdp > 1 and shape[b_i] % n_fsdp == 0:
+            axes[b_i] = fsdp
+        if shape[off + 1] % n_model == 0:
+            axes[off + 1] = model
+    elif kind == "shift":
+        if n_fsdp > 1 and shape[b_i] % n_fsdp == 0:
+            axes[b_i] = fsdp
+    return P(*axes)
+
+
+def cache_sharding(mesh: Mesh, cache_shapes, *, seq_shard: bool = False):
+    def f(path, leaf):
+        return NamedSharding(
+            mesh, cache_spec(mesh, _path_str(path), tuple(leaf.shape), seq_shard))
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+
+def replicated(mesh: Mesh, tree_shapes: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, P()), tree_shapes)

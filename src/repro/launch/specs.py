@@ -1,0 +1,282 @@
+"""Per-(architecture × input-shape) step functions, argument specs and
+shardings for the multi-pod dry-run and the launchers.
+
+train_4k    lowers the **GST+EFD train step** (the paper's technique, §3):
+            sampled-segment backprop + historical-table lookup + SED +
+            table write-back + AdamW update.
+prefill_32k lowers ``prefill``   (full forward, emits KV caches).
+decode_32k  lowers ``serve_step`` (1 token, cache of seq_len).
+long_500k   lowers ``serve_step`` with the long-context plan per family:
+            SSM state / ring-buffer sliding window / full (seq-sharded)
+            latent cache for MLA — DESIGN.md §Skips.
+
+Everything is built from ShapeDtypeStructs via jax.eval_shape — no
+allocation happens for the full-size configs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES
+from repro.core import gst as G
+from repro.core.embedding_table import EmbeddingTable
+from repro.launch import sharding as SH
+from repro.models import build_model
+from repro.optim import make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# long-context decode plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DecodePlan:
+    cache_len: int
+    window: int = 0
+    ring: bool = False
+    seq_shard: bool = False   # shard cache sequence dim over fsdp axes (B=1)
+
+
+def decode_plan(cfg: ArchConfig, shape: InputShape) -> DecodePlan:
+    if shape.name != "long_500k":
+        return DecodePlan(cache_len=shape.seq_len)
+    if cfg.family == "ssm":
+        return DecodePlan(cache_len=1)  # recurrent state only
+    if cfg.use_mla:
+        # DeepSeek MLA: the compressed latent cache IS the long-context
+        # feature — keep the full 524k latent, sequence-sharded over data.
+        return DecodePlan(cache_len=shape.seq_len, seq_shard=True)
+    if cfg.name == "arctic-480b":
+        # GQA kv=8 @ 524k fits when sequence-sharded (DESIGN.md §Skips)
+        return DecodePlan(cache_len=shape.seq_len, seq_shard=True)
+    # dense / vlm / hybrid: ring-buffer sliding window (sub-quadratic variant)
+    return DecodePlan(cache_len=cfg.sliding_window, window=cfg.sliding_window,
+                      ring=True)
+
+
+# ---------------------------------------------------------------------------
+# GST segmentation of the train shape
+# ---------------------------------------------------------------------------
+
+
+def gst_geometry(cfg: ArchConfig, shape: InputShape) -> Tuple[int, int]:
+    """(J segments, segment length) for the train shape."""
+    J = cfg.gst_num_segments
+    assert shape.seq_len % J == 0
+    return J, shape.seq_len // J
+
+
+def _f(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def seg_input_specs(cfg: ArchConfig, B: int, J: int, L: int, dtype):
+    """ShapeDtypeStructs for one GST batch's segment inputs."""
+    spec: Dict[str, Any] = {"tokens": _f((B, J, L), jnp.int32)}
+    if cfg.family == "vlm":
+        spec["patches"] = _f((B, J, cfg.vision_prefix_len, cfg.d_model), dtype)
+    if cfg.is_encoder_decoder:
+        spec = {"frames": _f((B, J, L, cfg.d_model), dtype)}  # audio: frames only
+    return spec
+
+
+def serve_input_specs(cfg: ArchConfig, B: int, S: int, dtype):
+    spec: Dict[str, Any] = {"tokens": _f((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        spec["patches"] = _f((B, cfg.vision_prefix_len, cfg.d_model), dtype)
+    if cfg.is_encoder_decoder:
+        spec["frames"] = _f((B, cfg.encoder_seq_len, cfg.d_model), dtype)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StepSpec:
+    """Everything jax.jit needs: fn, arg specs, shardings, donations."""
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def make_encode_fn(model, cfg: ArchConfig):
+    def encode(backbone, seg_inputs):
+        return model.encode_segment(backbone, seg_inputs)
+    return encode
+
+
+def build_train_spec(cfg: ArchConfig, shape: InputShape, mesh, *,
+                     dtype=jnp.bfloat16, variant: str = "gst_efd") -> StepSpec:
+    model = build_model(cfg)
+    B = shape.global_batch
+    J, L = gst_geometry(cfg, shape)
+    d_h = cfg.d_model
+    n_table = max(cfg.gst_table_size, B)
+
+    opt = make_optimizer("adamw", lr=1e-4, weight_decay=0.01, max_grad_norm=1.0)
+    encode = make_encode_fn(model, cfg)
+    gst_step = G.make_train_step(
+        encode, opt, G.VARIANTS[variant], num_sampled=cfg.gst_backprop_segments,
+        keep_prob=cfg.gst_keep_prob, head_mode="mlp", loss_kind="ce", agg="mean")
+
+    def train_step(state: G.TrainState, batch: G.GSTBatch, seed):
+        rng = jax.random.PRNGKey(seed)
+        return gst_step(state, batch, rng)
+
+    # ---- arg shapes via eval_shape (no allocation) -----------------------
+    backbone_shapes = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), dtype))
+    head_shapes = jax.eval_shape(
+        lambda: G.head_init(jax.random.PRNGKey(1), d_h, cfg.gst_num_classes,
+                            "mlp", dtype))
+    opt_shapes = jax.eval_shape(
+        lambda: opt.init((backbone_shapes, head_shapes)))
+    table_shapes = EmbeddingTable(
+        emb=_f((n_table, J, d_h), dtype),
+        age=_f((n_table, J), jnp.int32),
+        initialized=_f((n_table, J), jnp.bool_),
+    )
+    state_shapes = G.TrainState(
+        backbone=backbone_shapes, head=head_shapes, opt_state=opt_shapes,
+        table=table_shapes, step=_f((), jnp.int32))
+    batch_shapes = G.GSTBatch(
+        seg_inputs=seg_input_specs(cfg, B, J, L, dtype),
+        seg_valid=_f((B, J), jnp.float32),
+        graph_ids=_f((B,), jnp.int32),
+        labels=_f((B,), jnp.int32))
+    seed_shape = _f((), jnp.int32)
+
+    # ---- shardings --------------------------------------------------------
+    state_sh = G.TrainState(
+        backbone=SH.tree_shardings(mesh, backbone_shapes),
+        head=SH.tree_shardings(mesh, head_shapes),
+        opt_state={
+            "step": NamedSharding(mesh, P()),
+            "mu": SH.tree_shardings(mesh, opt_shapes["mu"]),
+            "nu": SH.tree_shardings(mesh, opt_shapes["nu"]),
+        },
+        table=SH.table_sharding(mesh, table_shapes),
+        step=NamedSharding(mesh, P()))
+    batch_sh = G.GSTBatch(
+        seg_inputs=SH.batch_sharding(mesh, batch_shapes.seg_inputs),
+        seg_valid=NamedSharding(mesh, SH.batch_spec(mesh, B, 2)),
+        graph_ids=NamedSharding(mesh, SH.batch_spec(mesh, B, 1)),
+        labels=NamedSharding(mesh, SH.batch_spec(mesh, B, 1)))
+    metrics_sh = {"loss": NamedSharding(mesh, P()),
+                  "metric": NamedSharding(mesh, P()),
+                  "grad_norm": NamedSharding(mesh, P())}
+    return StepSpec(
+        name=f"{cfg.name}:{shape.name}:{variant}",
+        fn=train_step,
+        args=(state_shapes, batch_shapes, seed_shape),
+        in_shardings=(state_sh, batch_sh, NamedSharding(mesh, P())),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,))
+
+
+def build_prefill_spec(cfg: ArchConfig, shape: InputShape, mesh, *,
+                       dtype=jnp.bfloat16) -> StepSpec:
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    def prefill_step(params, inputs):
+        return model.prefill(params, inputs)
+
+    param_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), dtype))
+    input_shapes = serve_input_specs(cfg, B, S, dtype)
+    out_shapes = jax.eval_shape(prefill_step, param_shapes, input_shapes)
+    param_sh = SH.tree_shardings(mesh, param_shapes)
+    input_sh = SH.batch_sharding(mesh, input_shapes)
+    logits_sh = NamedSharding(mesh, SH.batch_spec(mesh, B, 3))
+    caches_sh = SH.cache_sharding(mesh, out_shapes[1])
+    return StepSpec(
+        name=f"{cfg.name}:{shape.name}",
+        fn=prefill_step,
+        args=(param_shapes, input_shapes),
+        in_shardings=(param_sh, input_sh),
+        out_shardings=(logits_sh, caches_sh))
+
+
+def build_decode_spec(cfg: ArchConfig, shape: InputShape, mesh, *,
+                      dtype=jnp.bfloat16) -> StepSpec:
+    model = build_model(cfg)
+    B = shape.global_batch
+    plan = decode_plan(cfg, shape)
+
+    def decode_step(params, token, caches, cache_pos):
+        return model.decode_step(params, token, caches, cache_pos,
+                                 window=plan.window, ring=plan.ring)
+
+    param_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), dtype))
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(B, plan.cache_len, dtype))
+    if cfg.is_encoder_decoder:
+        # cross-attention K/V computed at prefill; static shape here
+        from repro.models import encdec
+        hd = cfg.resolved_head_dim
+        xkv = (_f((cfg.num_layers, B, cfg.encoder_seq_len, cfg.num_kv_heads, hd), dtype),
+               _f((cfg.num_layers, B, cfg.encoder_seq_len, cfg.num_kv_heads, hd), dtype))
+        cache_shapes = {"self": cache_shapes, "cross": xkv}
+    token_shape = _f((B, 1), jnp.int32)
+    pos_shape = _f((B,), jnp.int32)
+    out_shapes = jax.eval_shape(decode_step, param_shapes, token_shape,
+                                cache_shapes, pos_shape)
+    param_sh = SH.tree_shardings(mesh, param_shapes)
+    cache_sh = SH.cache_sharding(mesh, cache_shapes, seq_shard=plan.seq_shard)
+    return StepSpec(
+        name=f"{cfg.name}:{shape.name}",
+        fn=decode_step,
+        args=(param_shapes, token_shape, cache_shapes, pos_shape),
+        in_shardings=(param_sh,
+                      NamedSharding(mesh, SH.batch_spec(mesh, B, 2)),
+                      cache_sh,
+                      NamedSharding(mesh, SH.batch_spec(mesh, B, 1))),
+        out_shardings=(NamedSharding(mesh, SH.batch_spec(mesh, B, 3)), cache_sh),
+        donate_argnums=(2,))
+
+
+def build_step_spec(cfg: ArchConfig, shape_name: str, mesh, *,
+                    dtype=jnp.bfloat16, variant: str = "gst_efd") -> StepSpec:
+    shape = INPUT_SHAPES[shape_name]
+    if not cfg.supports_shape(shape):
+        raise ValueError(f"{cfg.name} skips {shape.name} (DESIGN.md §Skips)")
+    if shape.kind == "train":
+        return build_train_spec(cfg, shape, mesh, dtype=dtype, variant=variant)
+    if shape.kind == "prefill":
+        return build_prefill_spec(cfg, shape, mesh, dtype=dtype)
+    return build_decode_spec(cfg, shape, mesh, dtype=dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, *, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-ins for every model input of this shape —
+    the public helper named by the assignment brief."""
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        J, L = gst_geometry(cfg, shape)
+        return {
+            "seg_inputs": seg_input_specs(cfg, shape.global_batch, J, L, dtype),
+            "seg_valid": _f((shape.global_batch, J), jnp.float32),
+            "graph_ids": _f((shape.global_batch,), jnp.int32),
+            "labels": _f((shape.global_batch,), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        return serve_input_specs(cfg, shape.global_batch, shape.seq_len, dtype)
+    plan = decode_plan(cfg, shape)
+    return {
+        "token": _f((shape.global_batch, 1), jnp.int32),
+        "cache_pos": _f((shape.global_batch,), jnp.int32),
+        "cache_len": plan.cache_len,
+    }

@@ -1,0 +1,160 @@
+"""Training launcher — both tracks, CPU-runnable at reduced scale.
+
+Examples:
+    # paper track: GST+EFD on synthetic MalNet with a SAGE backbone
+    PYTHONPATH=src python -m repro.launch.train --track graph \
+        --backbone sage --variant gst_efd --epochs 30
+
+    # sequence track: GST+EFD property training with a reduced assigned arch
+    PYTHONPATH=src python -m repro.launch.train --track seq \
+        --arch internlm2-1.8b --reduced --steps 200
+
+    # plain-LM objective (the non-GST baseline of the framework)
+    PYTHONPATH=src python -m repro.launch.train --track lm \
+        --arch olmo-1b --reduced --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.core import gst as G
+from repro.core.embedding_table import init_table
+from repro.data.tokens import doc_batch_iterator, make_lm_stream, make_property_docs
+from repro.models import build_model
+from repro.optim import cosine_schedule, make_optimizer
+
+
+def train_graph(args):
+    from repro.graphs.experiment import run_experiment
+    r = run_experiment(
+        dataset=args.dataset, backbone=args.backbone, variant=args.variant,
+        n_graphs=args.n_graphs, epochs=args.epochs,
+        finetune_epochs=args.finetune_epochs, keep_prob=args.keep_prob,
+        seed=args.seed)
+    print(f"[graph/{args.dataset}] {args.backbone} {args.variant}: "
+          f"train={r.train_metric:.3f} test={r.test_metric:.3f} "
+          f"{r.ms_per_iter:.1f} ms/iter")
+    return r
+
+
+def train_seq(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    model = build_model(cfg)
+    J, L = cfg.gst_num_segments, args.seg_len
+    docs = make_property_docs(n_docs=args.n_docs, n_segments=J, seg_len=L,
+                              vocab=cfg.vocab_size,
+                              n_topics=cfg.gst_num_classes, seed=args.seed)
+    key = jax.random.key(args.seed)
+    params = model.init(key)
+    head = G.head_init(jax.random.fold_in(key, 1), cfg.d_model,
+                       cfg.gst_num_classes, "mlp")
+    opt = make_optimizer("adamw", lr=args.lr, weight_decay=0.01)
+    state = G.TrainState(params, head, opt.init((params, head)),
+                         init_table(args.n_docs, J, cfg.d_model),
+                         jnp.zeros((), jnp.int32))
+
+    def encode(backbone, seg_inputs):
+        return model.encode_segment(backbone, seg_inputs)
+
+    step = jax.jit(G.make_train_step(
+        encode, opt, G.VARIANTS[args.variant], keep_prob=args.keep_prob))
+    rng = np.random.default_rng(args.seed)
+    it = 0
+    t0 = time.time()
+    while it < args.steps:
+        for tup in doc_batch_iterator(docs, args.batch_size, rng=rng):
+            batch = G.GSTBatch({"tokens": jnp.asarray(tup[0]["tokens"])},
+                               jnp.asarray(tup[1]), jnp.asarray(tup[2]),
+                               jnp.asarray(tup[3]))
+            state, m = step(state, batch, jax.random.key(it))
+            it += 1
+            if it % args.log_every == 0:
+                print(f"step {it}: loss={float(m['loss']):.4f} "
+                      f"acc={float(m['metric']):.3f} "
+                      f"({(time.time()-t0)/it*1e3:.0f} ms/step)", flush=True)
+            if it >= args.steps:
+                break
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, it, {"backbone": state.backbone,
+                                            "head": state.head})
+    return state
+
+
+def train_lm(args):
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    model = build_model(cfg)
+    data = make_lm_stream(args.n_docs, args.seg_len + 1, cfg.vocab_size,
+                          seed=args.seed)
+    params = model.init(jax.random.key(args.seed))
+    opt = make_optimizer("adamw", lr=args.lr,
+                         schedule=cosine_schedule(args.lr, args.steps, 10))
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, tokens):
+        def loss_fn(p):
+            h, aux = model.forward_with_aux(p, {"tokens": tokens[:, :-1]})
+            logits = model.logits(p, h)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+            nll = -jnp.take_along_axis(logp, tokens[:, 1:, None], -1)[..., 0]
+            return jnp.mean(nll) + 1e-2 * aux
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, _ = opt.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(args.seed)
+    t0 = time.time()
+    for it in range(args.steps):
+        ids = rng.integers(0, len(data), args.batch_size)
+        params, opt_state, loss = step(params, opt_state, jnp.asarray(data[ids]))
+        if (it + 1) % args.log_every == 0:
+            print(f"step {it+1}: lm_loss={float(loss):.4f} "
+                  f"({(time.time()-t0)/(it+1)*1e3:.0f} ms/step)", flush=True)
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--track", default="graph", choices=["graph", "seq", "lm"])
+    # graph track
+    ap.add_argument("--dataset", default="malnet", choices=["malnet", "tpugraphs"])
+    ap.add_argument("--backbone", default="sage", choices=["gcn", "sage", "gps"])
+    ap.add_argument("--n-graphs", type=int, default=100)
+    ap.add_argument("--epochs", type=int, default=30)
+    ap.add_argument("--finetune-epochs", type=int, default=10)
+    # shared
+    ap.add_argument("--variant", default="gst_efd", choices=list(G.VARIANTS))
+    ap.add_argument("--keep-prob", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    # seq/lm track
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seg-len", type=int, default=64)
+    ap.add_argument("--n-docs", type=int, default=64)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    if args.track == "graph":
+        train_graph(args)
+    elif args.track == "seq":
+        train_seq(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

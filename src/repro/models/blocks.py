@@ -1,0 +1,228 @@
+"""Uniform block interface over all layer kinds.
+
+Every block kind exposes:
+    block_init(kind, key, cfg, dtype)                     -> params pytree
+    block_forward(kind, p, x, cfg, mode, ...)             -> (x, new_cache, aux)
+    init_block_cache(kind, cfg, batch, cache_len, dtype)  -> cache pytree
+with a *kind-stable pytree structure*, so a run of equal-kind layers can be
+stacked and driven by ``lax.scan`` (see transformer.py).
+
+Kinds:
+    attn       — pre-norm GQA attention + dense MLP (window-maskable)
+    mla_dense  — MLA attention + dense MLP            (DeepSeek-V3 dense layers)
+    mla_moe    — MLA attention + MoE                  (DeepSeek-V3 MoE layers)
+    gqa_moe    — GQA attention + MoE (+ dense residual)        (Arctic)
+    mamba      — Mamba2/SSD block                     (Zamba2 backbone)
+    rwkv       — RWKV6 time-mix + channel-mix
+    shared_attn — same structure as ``attn``; parameters shared across
+                  occurrences (Zamba2), caches per-occurrence.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import mla as mla_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import (
+    attn_decode,
+    attn_forward,
+    attn_params,
+    make_norm,
+    mlp_forward,
+    mlp_params,
+)
+
+
+def _norm(cfg: ArchConfig, d: int, dtype):
+    return make_norm(cfg.norm, d, dtype)
+
+
+def block_init(kind: str, key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n1, _ = _norm(cfg, d, dtype)
+    n2, _ = _norm(cfg, d, dtype)
+    if kind in ("attn", "shared_attn"):
+        return {
+            "norm1": n1,
+            "attn": attn_params(k1, d, cfg.num_heads, cfg.num_kv_heads, hd, dtype),
+            "norm2": n2,
+            "mlp": mlp_params(k2, d, cfg.d_ff, cfg.act, dtype),
+        }
+    if kind == "mla_dense":
+        return {
+            "norm1": n1,
+            "mla": mla_mod.mla_params(k1, cfg, dtype),
+            "norm2": n2,
+            "mlp": mlp_params(k2, d, cfg.d_ff, cfg.act, dtype),
+        }
+    if kind == "mla_moe":
+        return {
+            "norm1": n1,
+            "mla": mla_mod.mla_params(k1, cfg, dtype),
+            "norm2": n2,
+            "moe": moe_mod.moe_params(k2, d, cfg.moe, cfg.act, dtype),
+        }
+    if kind == "gqa_moe":
+        return {
+            "norm1": n1,
+            "attn": attn_params(k1, d, cfg.num_heads, cfg.num_kv_heads, hd, dtype),
+            "norm2": n2,
+            "moe": moe_mod.moe_params(k2, d, cfg.moe, cfg.act, dtype),
+        }
+    if kind == "mamba":
+        return {"norm1": n1, "mamba": mamba_mod.mamba2_params(k1, cfg, dtype)}
+    if kind == "rwkv":
+        return {
+            "norm1": n1,
+            "tm": rwkv_mod.rwkv_timemix_params(k1, cfg, dtype),
+            "norm2": n2,
+            "cm": rwkv_mod.rwkv_channelmix_params(k2, cfg, dtype),
+        }
+    raise ValueError(kind)
+
+
+def init_block_cache(kind: str, cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    if kind in ("attn", "shared_attn", "gqa_moe"):
+        shp = (batch, cache_len, cfg.num_kv_heads, hd)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    if kind in ("mla_dense", "mla_moe"):
+        return {
+            "ckv": jnp.zeros((batch, cache_len, cfg.mla_kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, cache_len, cfg.mla_rope_head_dim), dtype),
+        }
+    if kind == "mamba":
+        d_inner, H, P, N = mamba_mod.mamba2_dims(cfg)
+        W = cfg.ssm.conv_width
+        return {
+            "conv": jnp.zeros((batch, W - 1, d_inner), dtype),
+            "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        }
+    if kind == "rwkv":
+        H, N = rwkv_mod.rwkv_dims(cfg)
+        return {
+            "state": jnp.zeros((batch, H, N, N), jnp.float32),
+            "shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+            "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+        }
+    raise ValueError(kind)
+
+
+def _apply_norm(cfg: ArchConfig, p, x):
+    _, fn = make_norm(cfg.norm, cfg.d_model, x.dtype)
+    return fn(p, x)
+
+
+def block_forward(
+    kind: str,
+    p,
+    x,
+    cfg: ArchConfig,
+    *,
+    mode: str,                      # "full" | "decode"
+    positions=None,                 # (B, S) absolute positions (full mode)
+    positions_thw=None,             # (B, S, 3) M-RoPE ids (vlm)
+    cache=None,
+    cache_pos=None,                 # (B,) decode position
+    window: int = 0,                # sliding-window size; 0 = full attention
+    ring: bool = False,             # decode cache is a ring buffer
+    emit_cache: bool = False,       # full mode: return (k, v) as cache (prefill)
+) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    aux = jnp.zeros((), jnp.float32)
+    hd = cfg.resolved_head_dim
+    mrope = cfg.mrope_sections if cfg.family == "vlm" else ()
+
+    if kind in ("attn", "shared_attn", "gqa_moe"):
+        h = _apply_norm(cfg, p["norm1"], x)
+        if mode == "full":
+            o, (k, v) = attn_forward(
+                p["attn"], h, num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+                head_dim=hd, positions=positions, rope_theta=cfg.rope_theta,
+                causal=True, window=window, mrope_sections=mrope,
+                positions_thw=positions_thw)
+            new_cache = {"k": k, "v": v} if emit_cache else None
+        else:
+            o, ck, cv = attn_decode(
+                p["attn"], h, cache["k"], cache["v"], cache_pos,
+                num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads, head_dim=hd,
+                rope_theta=cfg.rope_theta, window=window, ring=ring,
+                mrope_sections=mrope, positions_thw=positions_thw)
+            new_cache = {"k": ck, "v": cv}
+        x = x + o
+        h = _apply_norm(cfg, p["norm2"], x)
+        if kind == "gqa_moe":
+            o, aux = moe_mod.moe_forward(p["moe"], h, cfg.moe, cfg.act)
+        else:
+            o = mlp_forward(p["mlp"], h, cfg.act)
+        return x + o, new_cache, aux
+
+    if kind in ("mla_dense", "mla_moe"):
+        h = _apply_norm(cfg, p["norm1"], x)
+        if mode == "full":
+            o, (ckv, kr) = mla_mod.mla_forward(p["mla"], h, cfg, positions)
+            new_cache = {"ckv": ckv, "kr": kr} if emit_cache else None
+        else:
+            o, ckv, kr = mla_mod.mla_decode(
+                p["mla"], h, cache["ckv"], cache["kr"], cache_pos, cfg,
+                absorbed=mla_mod.ABSORBED_DECODE)
+            new_cache = {"ckv": ckv, "kr": kr}
+        x = x + o
+        h = _apply_norm(cfg, p["norm2"], x)
+        if kind == "mla_moe":
+            o, aux = moe_mod.moe_forward(p["moe"], h, cfg.moe, cfg.act)
+        else:
+            o = mlp_forward(p["mlp"], h, cfg.act)
+        return x + o, new_cache, aux
+
+    if kind == "mamba":
+        h = _apply_norm(cfg, p["norm1"], x)
+        if mode == "full":
+            o, (conv, ssm) = mamba_mod.mamba2_forward(p["mamba"], h, cfg)
+            new_cache = {"conv": conv, "ssm": ssm} if emit_cache else None
+        else:
+            o, (conv, ssm) = mamba_mod.mamba2_decode(
+                p["mamba"], h, cache["conv"], cache["ssm"], cfg)
+            new_cache = {"conv": conv, "ssm": ssm}
+        return x + o, new_cache, aux
+
+    if kind == "rwkv":
+        h = _apply_norm(cfg, p["norm1"], x)
+        if mode == "full":
+            o, (state, last) = rwkv_mod.rwkv_timemix(p["tm"], h, cfg)
+            x = x + o
+            h2 = _apply_norm(cfg, p["norm2"], x)
+            o2, last2 = rwkv_mod.rwkv_channelmix(p["cm"], h2)
+            new_cache = (
+                {"state": state, "shift_tm": last, "shift_cm": last2}
+                if emit_cache else None)
+            return x + o2, new_cache, aux
+        o, (state, last) = rwkv_mod.rwkv_timemix(
+            p["tm"], h, cfg, state=cache["state"], shift_prev=cache["shift_tm"])
+        x = x + o
+        h2 = _apply_norm(cfg, p["norm2"], x)
+        o2, last2 = rwkv_mod.rwkv_channelmix(p["cm"], h2, shift_prev=cache["shift_cm"])
+        new_cache = {"state": state, "shift_tm": last, "shift_cm": last2}
+        return x + o2, new_cache, aux
+
+    raise ValueError(kind)
+
+
+def resolve_kind(cfg: ArchConfig, raw_kind: str) -> str:
+    """Map a config-level layer kind to a block kind."""
+    if raw_kind == "attn":
+        return "attn"
+    if raw_kind == "dense":
+        return "mla_dense" if cfg.use_mla else "attn"
+    if raw_kind == "moe":
+        return "mla_moe" if cfg.use_mla else "gqa_moe"
+    if raw_kind in ("mamba", "rwkv", "shared_attn"):
+        return raw_kind
+    raise ValueError(raw_kind)

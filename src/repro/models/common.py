@@ -1,0 +1,400 @@
+"""Shared model components: init helpers, norms, rotary / M-RoPE, attention
+(full / sliding-window / cached decode), and MLP blocks.
+
+All components are pure functions over nested-dict parameter pytrees — no
+module framework.  Naming convention for parameters matters: the launch-layer
+sharding rules (``repro.launch.sharding``) match on path substrings like
+``w_in``/``w_out``/``embed``/``experts`` to assign PartitionSpecs.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    """Truncated-normal fan-in init (LeCun-ish), matmul weight (d_in, d_out)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_params(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_params(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    if p is not None and "scale" in p:
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def nonparam_ln(x, eps: float = 1e-5):
+    """OLMo-style LayerNorm without learnable affine. [arXiv:2402.00838]"""
+    return layernorm(None, x, eps)
+
+
+def make_norm(kind: str, d: int, dtype=jnp.float32):
+    """Returns (params, apply_fn). ``nonparam_ln`` carries an empty dict so the
+    pytree structure stays uniform across layer kinds."""
+    if kind == "rmsnorm":
+        return rmsnorm_params(d, dtype), rmsnorm
+    if kind == "layernorm":
+        return layernorm_params(d, dtype), layernorm
+    if kind == "nonparam_ln":
+        return {}, lambda p, x: nonparam_ln(x)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    half = x.shape[-1] // 2
+    inv = rope_freqs(x.shape[-1], theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x, positions_thw, theta: float, sections: Tuple[int, ...]):
+    """Qwen2-VL M-RoPE. [arXiv:2409.12191]
+
+    x: (B, S, H, D); positions_thw: (B, S, 3) temporal/height/width position ids.
+    ``sections`` splits the D//2 rotary frequencies into (t, h, w) groups; each
+    group rotates by its own position id.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(x.shape[-1], theta)  # (half,)
+    # per-frequency position: section 0 -> t, 1 -> h, 2 -> w
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections), total_repeat_length=half)  # (half,)
+    pos = jnp.take_along_axis(
+        positions_thw.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None, :], positions_thw.shape[:2] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )  # (B, S, half)
+    ang = pos * inv  # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32):
+    """Whisper-style sinusoidal embeddings."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / max(d // 2 - 1, 1)))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+# Decode-cache write implementation (EXPERIMENTS.md §Perf):
+#   "onehot" — cache*(1-oh) + oh*new: two full-cache reads + one write.
+#   "dus"    — vmapped dynamic_update_slice: one slice write; with buffer
+#              donation the cache is updated in place (3x less HBM traffic).
+CACHE_UPDATE = "onehot"
+
+
+def write_cache(cache, new, idx):
+    """cache: (B, C, ...); new: (B, 1, ...); idx: (B,) target slot."""
+    if CACHE_UPDATE == "onehot":
+        oh = jax.nn.one_hot(idx, cache.shape[1], dtype=cache.dtype)  # (B, C)
+        oh = oh.reshape(oh.shape + (1,) * (cache.ndim - 2))
+        return cache * (1.0 - oh) + oh * new
+    def one(c, n, i):  # c: (C, ...) per-example slice
+        return lax.dynamic_update_slice(c, n.astype(c.dtype),
+                                        (i,) + (0,) * (c.ndim - 1))
+    return jax.vmap(one)(cache, new, idx)
+
+
+def attn_params(key, d_model: int, num_heads: int, num_kv: int, head_dim: int, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(kk, d_model, num_kv * head_dim, dtype),
+        "wv": dense_init(kv, d_model, num_kv * head_dim, dtype),
+        "wo": dense_init(ko, num_heads * head_dim, d_model, dtype, scale=1.0 / math.sqrt(num_heads * head_dim)),
+    }
+
+
+def _repeat_kv(k, num_heads: int):
+    """(B, S, KV, D) -> (B, S, H, D) by repeating kv groups."""
+    num_kv = k.shape[-2]
+    if num_kv == num_heads:
+        return k
+    rep = num_heads // num_kv
+    return jnp.repeat(k, rep, axis=-2)
+
+
+# GQA attention implementation (EXPERIMENTS.md §Perf):
+#   "repeat"  — materialize K/V repeated to H heads (paper-era baseline;
+#               at decode this re-reads the cache x(H/KV)).
+#   "grouped" — einsum directly against the KV-head cache with a query-group
+#               axis: exact same math, no repeated cache materialization.
+GQA_IMPL = "repeat"
+
+
+def _grouped_attn(q, k, v, mask_fn, dtype):
+    """q: (B,Sq,H,D); k/v: (B,Sk,KV,D); mask_fn(logits (B,KV,G,Sq,Sk))."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    scale = 1.0 / math.sqrt(D)
+    logits = jnp.einsum("bqkgd,bckd->bkgqc", qg, k).astype(jnp.float32) * scale
+    logits = mask_fn(logits)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqc,bckd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, D)
+
+
+def sdpa(q, k, v, *, causal: bool, window: int = 0, q_offset=0, kv_valid_len=None):
+    """Reference scaled-dot-product attention with optional causal +
+    sliding-window masking.  q: (B, Sq, H, D), k/v: (B, Sk, KV, D).
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (decode: Sk-1).
+    ``window``: if > 0, keys older than ``window`` positions are masked.
+    ``kv_valid_len``: (B,) number of valid cache entries (decode).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    q_pos = jnp.arange(Sq) + q_offset  # (Sq,)
+    k_pos = jnp.arange(Sk)  # (Sk,)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+
+    if GQA_IMPL == "grouped" and k.shape[2] != H:
+        def mask_fn(logits):  # (B, KV, G, Sq, Sk)
+            lg = jnp.where(mask[None, None, None], logits, -1e30)
+            if kv_valid_len is not None:
+                vm = k_pos[None, :] < kv_valid_len[:, None]
+                lg = jnp.where(vm[:, None, None, None, :], lg, -1e30)
+            return lg
+        return _grouped_attn(q, k, v, mask_fn, q.dtype)
+
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scale = 1.0 / math.sqrt(D)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    if kv_valid_len is not None:
+        vmask = k_pos[None, :] < kv_valid_len[:, None]  # (B, Sk)
+        logits = jnp.where(vmask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# Prefill attention implementation (EXPERIMENTS.md §Perf):
+#   "naive"   — materializes the (B, H, S, S) logits tensor.
+#   "chunked" — flash-style online softmax over KV chunks (lax.scan):
+#               peak activation O(S·chunk) instead of O(S²).  The Pallas
+#               swa_attention kernel is the TPU-tiled realization of the
+#               same schedule; this is its jnp lowering for any backend.
+ATTN_IMPL = "naive"
+ATTN_CHUNK = 1024
+
+
+def chunked_causal_attention(q, k, v, *, window: int = 0, chunk: int = 1024):
+    """Online-softmax causal (optionally windowed) attention over KV chunks.
+    q/k/v: (B, S, H|KV, D) -> (B, S, H, D)."""
+    B, S, H, D = q.shape
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    scale = 1.0 / math.sqrt(D)
+    nc = S // chunk
+    q_pos = jnp.arange(S)
+    qf = q.astype(jnp.float32)
+
+    def body(carry, i):
+        m_prev, l_prev, acc = carry
+        ks = lax.dynamic_slice_in_dim(k, i * chunk, chunk, axis=1)
+        vs = lax.dynamic_slice_in_dim(v, i * chunk, chunk, axis=1)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qf, ks.astype(jnp.float32)) * scale
+        k_pos = i * chunk + jnp.arange(chunk)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha.swapaxes(1, 2) + jnp.einsum(
+            "bhqk,bkhd->bqhd", p, vs.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, H, S, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, S, 1), jnp.float32)
+    a0 = jnp.zeros((B, S, H, D), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), jnp.arange(nc))
+    out = acc / jnp.maximum(l, 1e-30).swapaxes(1, 2)
+    return out.astype(q.dtype)
+
+
+def attn_forward(p, x, *, num_heads: int, num_kv: int, head_dim: int,
+                 positions, rope_theta: float, causal: bool = True,
+                 window: int = 0, mrope_sections: Tuple[int, ...] = (),
+                 positions_thw=None, kv_override=None):
+    """Full attention over a sequence (train / prefill).  Returns (out, (k, v))
+    so the prefill path can emit the cache.  ``kv_override``: (k, v) from an
+    encoder for cross-attention."""
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    q = q.reshape(B, S, num_heads, head_dim)
+    if kv_override is None:
+        k = (x @ p["wk"]).reshape(B, S, num_kv, head_dim)
+        v = (x @ p["wv"]).reshape(B, S, num_kv, head_dim)
+        if rope_theta:
+            if mrope_sections:
+                q = apply_mrope(q, positions_thw, rope_theta, mrope_sections)
+                k = apply_mrope(k, positions_thw, rope_theta, mrope_sections)
+            else:
+                q = apply_rope(q, positions, rope_theta)
+                k = apply_rope(k, positions, rope_theta)
+    else:
+        k, v = kv_override
+        if rope_theta:
+            q = apply_rope(q, positions, rope_theta)
+    if (ATTN_IMPL == "chunked" and causal and kv_override is None
+            and S > ATTN_CHUNK and S % ATTN_CHUNK == 0):
+        out = chunked_causal_attention(q, k, v, window=window, chunk=ATTN_CHUNK)
+    else:
+        out = sdpa(q, k, v, causal=causal and kv_override is None, window=window)
+    out = out.reshape(B, S, num_heads * head_dim) @ p["wo"]
+    return out, (k, v)
+
+
+def attn_decode(p, x, cache_k, cache_v, cache_pos, *, num_heads: int, num_kv: int,
+                head_dim: int, rope_theta: float, window: int = 0,
+                ring: bool = False, mrope_sections: Tuple[int, ...] = (),
+                positions_thw=None):
+    """One-token cached decode.  x: (B, 1, d); cache_k/v: (B, C, KV, D);
+    cache_pos: (B,) int32 absolute position of the new token.
+
+    ``ring``: cache is a ring buffer of size C (sliding-window archs at 500k):
+    the write index is ``cache_pos % C`` and all C slots attend once full.
+    Keys are stored post-RoPE so ring eviction needs no re-rotation.
+    """
+    B = x.shape[0]
+    C = cache_k.shape[1]
+    q = (x @ p["wq"]).reshape(B, 1, num_heads, head_dim)
+    k = (x @ p["wk"]).reshape(B, 1, num_kv, head_dim)
+    v = (x @ p["wv"]).reshape(B, 1, num_kv, head_dim)
+    if rope_theta:
+        pos = cache_pos[:, None]
+        if mrope_sections:
+            q = apply_mrope(q, positions_thw, rope_theta, mrope_sections)
+            k = apply_mrope(k, positions_thw, rope_theta, mrope_sections)
+        else:
+            q = apply_rope(q, pos, rope_theta)
+            k = apply_rope(k, pos, rope_theta)
+    write_idx = (cache_pos % C) if ring else jnp.minimum(cache_pos, C - 1)
+    cache_k = write_cache(cache_k, k, write_idx)
+    cache_v = write_cache(cache_v, v, write_idx)
+    valid = jnp.minimum(cache_pos + 1, C)  # (B,)
+    k_pos = jnp.arange(C)[None, :]  # slot index
+    vmask = k_pos < valid[:, None]  # (B, C)
+    if GQA_IMPL == "grouped" and num_kv != num_heads:
+        def mask_fn(logits):  # (B, KV, G, 1, C)
+            return jnp.where(vmask[:, None, None, None, :], logits, -1e30)
+        out = _grouped_attn(q, cache_k, cache_v, mask_fn, x.dtype)
+    else:
+        kh = _repeat_kv(cache_k, num_heads)
+        vh = _repeat_kv(cache_v, num_heads)
+        scale = 1.0 / math.sqrt(head_dim)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kh).astype(jnp.float32) * scale
+        logits = jnp.where(vmask[:, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vh)
+    out = out.reshape(B, 1, num_heads * head_dim) @ p["wo"]
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP / FFN
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32):
+    if act in ("silu", "swiglu"):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_in": dense_init(k1, d_model, d_ff, dtype),
+            "w_gate": dense_init(k2, d_model, d_ff, dtype),
+            "w_out": dense_init(k3, d_ff, d_model, dtype, scale=1.0 / math.sqrt(d_ff)),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_in": dense_init(k1, d_model, d_ff, dtype),
+        "w_out": dense_init(k2, d_ff, d_model, dtype, scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def mlp_forward(p, x, act: str):
+    if act in ("silu", "swiglu"):
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])) @ p["w_out"]
+    if act == "gelu":
+        return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]
+    if act == "relu_sq":
+        return jnp.square(jax.nn.relu(x @ p["w_in"])) @ p["w_out"]
+    raise ValueError(act)

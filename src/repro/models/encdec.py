@@ -1,0 +1,176 @@
+"""Whisper-style encoder-decoder backbone. [arXiv:2212.04356]
+
+Per the assignment, the mel-spectrogram + conv feature extractor is a STUB:
+the model consumes precomputed frame embeddings (B, encoder_seq_len, d_model)
+supplied by ``input_specs()``.  We implement the transformer backbone:
+  * encoder — non-causal self-attention blocks over frames (+ sinusoidal pos),
+  * decoder — causal self-attention + cross-attention to encoder output,
+  * decode path — self-attn KV cache + precomputed cross-attn K/V.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+
+
+def _unroll() -> bool:
+    from repro.models import transformer
+    return transformer.SCAN_UNROLL
+from repro.models.common import (
+    attn_decode,
+    attn_forward,
+    attn_params,
+    dense_init,
+    embed_init,
+    layernorm,
+    layernorm_params,
+    mlp_forward,
+    mlp_params,
+    sinusoidal_positions,
+)
+
+
+def _enc_block_init(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    hd = cfg.resolved_head_dim
+    return {
+        "norm1": layernorm_params(cfg.d_model, dtype),
+        "attn": attn_params(k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, hd, dtype),
+        "norm2": layernorm_params(cfg.d_model, dtype),
+        "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _dec_block_init(key, cfg: ArchConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    hd = cfg.resolved_head_dim
+    return {
+        "norm1": layernorm_params(cfg.d_model, dtype),
+        "self_attn": attn_params(k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, hd, dtype),
+        "norm_x": layernorm_params(cfg.d_model, dtype),
+        "cross_attn": attn_params(k2, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, hd, dtype),
+        "norm2": layernorm_params(cfg.d_model, dtype),
+        "mlp": mlp_params(k3, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    ke, kd, kt, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ke, cfg.num_encoder_layers)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    stack = lambda blocks: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    return {
+        "embed": embed_init(kt, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_blocks": stack([_enc_block_init(k, cfg, dtype) for k in enc_keys]),
+        "enc_final": layernorm_params(cfg.d_model, dtype),
+        "dec_blocks": stack([_dec_block_init(k, cfg, dtype) for k in dec_keys]),
+        "final_norm": layernorm_params(cfg.d_model, dtype),
+        "lm_head": dense_init(kh, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """frames: (B, T, d_model) stub frame embeddings -> (B, T, d_model)."""
+    hd = cfg.resolved_head_dim
+    x = frames + sinusoidal_positions(frames.shape[1], cfg.d_model, frames.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1])[None], frames.shape[:2])
+
+    def body(h, p):
+        a = layernorm(p["norm1"], h)
+        o, _ = attn_forward(p["attn"], a, num_heads=cfg.num_heads,
+                            num_kv=cfg.num_kv_heads, head_dim=hd, positions=pos,
+                            rope_theta=0.0, causal=False)
+        h = h + o
+        m = layernorm(p["norm2"], h)
+        return h + mlp_forward(p["mlp"], m, cfg.act), None
+
+    x, _ = lax.scan(body, x, params["enc_blocks"], unroll=_unroll())
+    return layernorm(params["enc_final"], x)
+
+
+def cross_kv(params, cfg: ArchConfig, enc_out):
+    """Precompute per-layer cross-attention K/V from encoder output."""
+    hd = cfg.resolved_head_dim
+
+    def body(_, p):
+        B, T, _ = enc_out.shape
+        k = (enc_out @ p["cross_attn"]["wk"]).reshape(B, T, cfg.num_kv_heads, hd)
+        v = (enc_out @ p["cross_attn"]["wv"]).reshape(B, T, cfg.num_kv_heads, hd)
+        return None, (k, v)
+
+    _, kv = lax.scan(body, None, params["dec_blocks"], unroll=_unroll())
+    return kv  # pytree with leading layer axis
+
+
+def decoder_forward(params, cfg: ArchConfig, tokens, enc_out, *, emit_cache=False):
+    """Teacher-forced decoder pass. Returns (hidden, self_kv_cache or None)."""
+    hd = cfg.resolved_head_dim
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x = x + sinusoidal_positions(S, cfg.d_model, x.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    xkv = cross_kv(params, cfg, enc_out)
+
+    def body(h, xs):
+        p, (ck, cv) = xs
+        a = layernorm(p["norm1"], h)
+        o, (k, v) = attn_forward(p["self_attn"], a, num_heads=cfg.num_heads,
+                                 num_kv=cfg.num_kv_heads, head_dim=hd,
+                                 positions=pos, rope_theta=0.0, causal=True)
+        h = h + o
+        c = layernorm(p["norm_x"], h)
+        o, _ = attn_forward(p["cross_attn"], c, num_heads=cfg.num_heads,
+                            num_kv=cfg.num_kv_heads, head_dim=hd, positions=pos,
+                            rope_theta=0.0, causal=False, kv_override=(ck, cv))
+        h = h + o
+        m = layernorm(p["norm2"], h)
+        h = h + mlp_forward(p["mlp"], m, cfg.act)
+        return h, (k, v) if emit_cache else None
+
+    x, kv = lax.scan(body, x, (params["dec_blocks"], xkv), unroll=_unroll())
+    return layernorm(params["final_norm"], x), kv
+
+
+def init_self_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    shp = (cfg.num_layers, batch, cache_len, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+
+
+def decode_step(params, cfg: ArchConfig, token, self_cache, xkv, cache_pos):
+    """token: (B, 1); self_cache: stacked (L, B, C, KV, hd); xkv: cross K/V."""
+    hd = cfg.resolved_head_dim
+    B = token.shape[0]
+    x = params["embed"][token]
+    # sinusoidal position embedding gathered at the current step
+    d = cfg.d_model
+    full = sinusoidal_positions(self_cache["k"].shape[2], d, x.dtype)
+    x = x + full[cache_pos][:, None, :]
+
+    def body(h, xs):
+        p, ck_l, cv_l, (xk, xv) = xs
+        a = layernorm(p["norm1"], h)
+        o, nk, nv = attn_decode(p["self_attn"], a, ck_l, cv_l, cache_pos,
+                                num_heads=cfg.num_heads, num_kv=cfg.num_kv_heads,
+                                head_dim=hd, rope_theta=0.0)
+        h = h + o
+        c = layernorm(p["norm_x"], h)
+        pos = cache_pos[:, None]
+        o, _ = attn_forward(p["cross_attn"], c, num_heads=cfg.num_heads,
+                            num_kv=cfg.num_kv_heads, head_dim=hd, positions=pos,
+                            rope_theta=0.0, causal=False, kv_override=(xk, xv))
+        h = h + o
+        m = layernorm(p["norm2"], h)
+        h = h + mlp_forward(p["mlp"], m, cfg.act)
+        return h, (nk, nv)
+
+    x, (nk, nv) = lax.scan(body, x, (params["dec_blocks"], self_cache["k"],
+                            self_cache["v"], xkv), unroll=_unroll())
+    x = layernorm(params["final_norm"], x)
+    logits = x @ params["lm_head"]
+    return logits, {"k": nk, "v": nv}

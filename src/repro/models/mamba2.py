@@ -1,0 +1,172 @@
+"""Mamba2 (SSD) block — chunked-scan training, O(1)-state decode.
+
+[arXiv:2411.15242 uses Mamba2 blocks; SSD formulation from Mamba2 paper.]
+
+TPU adaptation: the GPU reference implements a fused CUDA scan.  We use the
+SSD *matmul* form — intra-chunk attention-like matmuls (MXU-friendly) plus an
+inter-chunk ``lax.scan`` over chunk states — which is the TPU-native way to
+express a selective scan (systolic matmuls instead of warp-level scans).
+
+State-space recurrence per head h with scalar decay:
+    a_t = exp(A_h * dt_t)                        (A_h < 0, dt_t > 0)
+    H_t = a_t * H_{t-1} + dt_t * B_t ⊗ x_t       H: (d_head, d_state)
+    y_t = H_t @ C_t + D_h * x_t
+with B_t, C_t shared across heads (n_groups = 1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init, rmsnorm, rmsnorm_params
+
+
+def mamba2_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    heads = cfg.ssm.num_ssm_heads
+    assert d_inner % heads == 0, (d_inner, heads)
+    return d_inner, heads, d_inner // heads, cfg.ssm.state_size
+
+
+def mamba2_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    d_inner, H, P, N = mamba2_dims(cfg)
+    ks = jax.random.split(key, 5)
+    # in_proj emits [x (d_inner), z (d_inner), B (N), C (N), dt (H)]
+    return {
+        "w_in": dense_init(ks[0], d, 2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.conv_width, d_inner)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),  # A = -exp(A_log)
+        "D": jnp.ones((H,), dtype),
+        "out_norm": rmsnorm_params(d_inner, dtype),
+        "w_out": dense_init(ks[2], d_inner, d, dtype, scale=1.0 / math.sqrt(d_inner)),
+    }
+
+
+def _split_in(p, x, cfg: ArchConfig):
+    d_inner, H, P, N = mamba2_dims(cfg)
+    z = x @ p["w_in"]
+    xs = z[..., :d_inner]
+    gate = z[..., d_inner : 2 * d_inner]
+    Bm = z[..., 2 * d_inner : 2 * d_inner + N]
+    Cm = z[..., 2 * d_inner + N : 2 * d_inner + 2 * N]
+    dt = z[..., 2 * d_inner + 2 * N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return xs, gate, Bm, Cm, dt
+
+
+def _causal_conv(p, xs, conv_state=None):
+    """Depthwise causal conv, width W.  xs: (B, S, d_inner).
+    conv_state: (B, W-1, d_inner) rolling buffer for decode."""
+    W = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xs.shape[:1] + (W - 1,) + xs.shape[2:], xs.dtype)
+        xp = jnp.concatenate([pad, xs], axis=1)
+        new_state = xp[:, -(W - 1):] if W > 1 else None
+    else:
+        xp = jnp.concatenate([conv_state.astype(xs.dtype), xs], axis=1)
+        new_state = xp[:, -(W - 1):] if W > 1 else None
+    out = sum(xp[:, i : i + xs.shape[1]] * p["conv_w"][i] for i in range(W))
+    out = jax.nn.silu(out + p["conv_b"])
+    return out, new_state
+
+
+def ssd_chunked(xs, Bm, Cm, dt, A, init_state=None, chunk: int = 256):
+    """Chunked SSD scan.
+
+    xs: (B, S, H, P); Bm/Cm: (B, S, N); dt: (B, S, H); A: (H,) negative.
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    Bsz, S, H, P = xs.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    f32 = jnp.float32
+
+    xs_c = xs.reshape(Bsz, n_chunks, chunk, H, P).astype(f32)
+    B_c = Bm.reshape(Bsz, n_chunks, chunk, N).astype(f32)
+    C_c = Cm.reshape(Bsz, n_chunks, chunk, N).astype(f32)
+    dt_c = dt.reshape(Bsz, n_chunks, chunk, H).astype(f32)
+
+    log_a = A[None, None, None, :] * dt_c                       # (B, nc, q, H) <= 0
+    cum = jnp.cumsum(log_a, axis=2)                             # L_t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # L_t - L_s (B,nc,q,q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # clamp BEFORE exp: exp of the (positive, huge) upper-triangular entries
+    # would overflow and poison gradients through the mask (NaN = inf * 0)
+    seg = jnp.where(tri[None, None, :, :, None], seg, -1e30)
+    decay = jnp.exp(seg)
+
+    # intra-chunk: y[t] = sum_{s<=t} (C_t.B_s) decay[t,s] dt_s x_s
+    cb = jnp.einsum("bctn,bcsn->bcts", C_c, B_c)                # (B,nc,q,q)
+    xdt = xs_c * dt_c[..., None]                                # (B,nc,q,H,P)
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp", cb, decay, xdt)
+
+    # chunk-boundary contributions
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)             # exp(L_Q - L_s) (B,nc,q,H)
+    chunk_state = jnp.einsum("bcsn,bcsh,bcshp->bchpn", B_c, dt_c * decay_to_end, xs_c)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # (B,nc,H)
+    state0 = jnp.zeros((Bsz, H, P, N), f32) if init_state is None else init_state.astype(f32)
+
+    def carry_fn(h_prev, inp):
+        cs, cd = inp  # (B,H,P,N), (B,H)
+        h_new = h_prev * cd[:, :, None, None] + cs
+        return h_new, h_prev
+
+    # scan over chunks (time axis first)
+    cs_t = jnp.moveaxis(chunk_state, 1, 0)                      # (nc,B,H,P,N)
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)                      # (nc,B,H)
+    final_state, h_prevs = lax.scan(carry_fn, state0, (cs_t, cd_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                       # (B,nc,H,P,N) state entering chunk
+
+    # inter-chunk: y[t] += C_t . (exp(L_t) * h_prev)
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp", C_c, jnp.exp(cum), h_prevs)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(xs.dtype), final_state
+
+
+def mamba2_forward(p, x, cfg: ArchConfig, init_state=None, conv_state=None):
+    """Full-sequence forward.  x: (B, S, d_model).
+    Returns (out, (conv_state, ssm_state))."""
+    d_inner, H, P, N = mamba2_dims(cfg)
+    xs, gate, Bm, Cm, dt = _split_in(p, x, cfg)
+    xs, new_conv = _causal_conv(p, xs, conv_state)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = ssd_chunked(
+        xs.reshape(x.shape[0], x.shape[1], H, P), Bm, Cm, dt, A,
+        init_state=init_state, chunk=cfg.ssm.chunk_size,
+    )
+    y = y + (p["D"].astype(jnp.float32)[None, None, :, None]
+             * xs.reshape(y.shape).astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(x.shape[0], x.shape[1], d_inner)
+    y = rmsnorm(p["out_norm"], y) * jax.nn.silu(gate)
+    return y @ p["w_out"], (new_conv, state)
+
+
+def mamba2_decode(p, x, conv_state, ssm_state, cfg: ArchConfig):
+    """Single-token decode.  x: (B, 1, d_model);
+    conv_state: (B, W-1, d_inner); ssm_state: (B, H, P, N)."""
+    d_inner, H, P, N = mamba2_dims(cfg)
+    Bsz = x.shape[0]
+    xs, gate, Bm, Cm, dt = _split_in(p, x, cfg)
+    xs, new_conv = _causal_conv(p, xs, conv_state)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xs_h = xs.reshape(Bsz, H, P).astype(jnp.float32)
+    dt1 = dt[:, 0]                                              # (B, H)
+    a = jnp.exp(A[None] * dt1)                                  # (B, H)
+    upd = jnp.einsum("bhp,bn->bhpn", xs_h * dt1[..., None], Bm[:, 0].astype(jnp.float32))
+    new_state = ssm_state.astype(jnp.float32) * a[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm[:, 0].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xs_h
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y) * jax.nn.silu(gate)
+    return y @ p["w_out"], (new_conv, new_state.astype(ssm_state.dtype))

@@ -1,0 +1,136 @@
+"""Multi-head Latent Attention (DeepSeek-V3). [arXiv:2412.19437]
+
+MLA compresses K/V into a low-rank latent c_kv (rank r_kv) plus a shared
+RoPE key (rope_head_dim); Q is likewise generated through a low-rank
+projection.  The decode cache stores only (c_kv, k_rope):
+  cache bytes per token = r_kv + rope_head_dim  (vs 2 * H * head_dim for MHA)
+— the paper's key serving win; our decode path exploits exactly that.
+
+Two execution modes:
+  * ``naive``  — expand the latent to per-head K/V, standard SDPA
+                 (train / prefill; simple & matmul-friendly).
+  * ``absorbed`` — fold W_uk into the query and W_uv into the output
+                 projection so decode attends directly in latent space;
+                 per-step FLOPs drop from O(H*dh*S) expansion to O(r_kv*S).
+                 This is a §Perf optimization toggle (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import apply_rope, dense_init
+
+
+# Decode-mode toggle (EXPERIMENTS.md §Perf): absorbed is exact and cheaper;
+# naive is the paper-era baseline formulation.
+ABSORBED_DECODE = True
+
+
+def mla_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.num_heads
+    r_kv, r_q = cfg.mla_kv_lora_rank, cfg.mla_q_lora_rank
+    dn, dr, dv = cfg.mla_nope_head_dim, cfg.mla_rope_head_dim, cfg.mla_v_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": dense_init(ks[0], d, r_q, dtype),                  # d -> q latent
+        "wq_b": dense_init(ks[1], r_q, H * (dn + dr), dtype),      # q latent -> per-head q
+        "wkv_a": dense_init(ks[2], d, r_kv + dr, dtype),           # d -> kv latent + shared rope k
+        "wk_b": dense_init(ks[3], r_kv, H * dn, dtype),            # latent -> per-head k_nope
+        "wv_b": dense_init(ks[4], r_kv, H * dv, dtype),            # latent -> per-head v
+        "wo": dense_init(ks[5], H * dv, d, dtype, scale=1.0 / math.sqrt(H * dv)),
+    }
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.mla_nope_head_dim, cfg.mla_rope_head_dim, cfg.mla_v_head_dim
+    q = (x @ p["wq_a"]) @ p["wq_b"]
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ p["wkv_a"]  # (B, S, r_kv + dr)
+    c_kv, k_rope = kv[..., : cfg.mla_kv_lora_rank], kv[..., cfg.mla_kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(p, x, cfg: ArchConfig, positions, causal: bool = True):
+    """Naive (expanded) MLA over a full sequence. Returns (out, (c_kv, k_rope))
+    so prefill can emit the compressed cache."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.mla_nope_head_dim, cfg.mla_rope_head_dim, cfg.mla_v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _project_qkv(p, x, cfg, positions)
+    k_nope = (c_kv @ p["wk_b"]).reshape(B, S, H, dn)
+    v = (c_kv @ p["wv_b"]).reshape(B, S, H, dv)
+    scale = 1.0 / math.sqrt(dn + dr)
+    logits = (
+        jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+        + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    if causal:
+        qp = jnp.arange(S)
+        mask = qp[None, :] <= qp[:, None]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = out.reshape(B, S, H * dv) @ p["wo"]
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(p, x, cache_ckv, cache_krope, cache_pos, cfg: ArchConfig,
+               absorbed: bool = True):
+    """One-token MLA decode against the compressed cache.
+
+    cache_ckv: (B, C, r_kv); cache_krope: (B, C, dr); cache_pos: (B,).
+    ``absorbed=True`` computes attention in latent space:
+        logits = (q_nope @ W_uk^T) @ c_kv^T + q_rope @ k_rope^T
+        out    = (probs @ c_kv) @ W_uv  then head-merge through wo.
+    """
+    B = x.shape[0]
+    C = cache_ckv.shape[1]
+    H = cfg.num_heads
+    dn, dr, dv = cfg.mla_nope_head_dim, cfg.mla_rope_head_dim, cfg.mla_v_head_dim
+    r_kv = cfg.mla_kv_lora_rank
+    pos = cache_pos[:, None]
+    q_nope, q_rope, c_kv_new, k_rope_new = _project_qkv(p, x, cfg, pos)
+    # write new latent into cache
+    from repro.models.common import write_cache
+    write_idx = jnp.minimum(cache_pos, C - 1)
+    cache_ckv = write_cache(cache_ckv, c_kv_new, write_idx)
+    cache_krope = write_cache(cache_krope, k_rope_new, write_idx)
+    valid = jnp.minimum(cache_pos + 1, C)
+    scale = 1.0 / math.sqrt(dn + dr)
+    if absorbed:
+        wk_b = p["wk_b"].reshape(r_kv, H, dn)
+        # absorb W_uk into q: (B,1,H,dn) x (r,H,dn) -> (B,1,H,r)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, wk_b)
+        logits = (
+            jnp.einsum("bqhr,bkr->bhqk", q_lat, cache_ckv)
+            + jnp.einsum("bqhd,bkd->bhqk", q_rope, cache_krope)
+        ).astype(jnp.float32) * scale
+    else:
+        k_nope = (cache_ckv @ p["wk_b"]).reshape(B, C, H, dn)
+        logits = (
+            jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+            + jnp.einsum("bqhd,bkd->bhqk", q_rope, cache_krope)
+        ).astype(jnp.float32) * scale
+    k_idx = jnp.arange(C)[None, :]
+    logits = jnp.where((k_idx < valid[:, None])[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    if absorbed:
+        ctx = jnp.einsum("bhqk,bkr->bqhr", probs, cache_ckv)  # (B,1,H,r)
+        wv_b = p["wv_b"].reshape(r_kv, H, dv)
+        out = jnp.einsum("bqhr,rhd->bqhd", ctx, wv_b)
+    else:
+        v = (cache_ckv @ p["wv_b"]).reshape(B, C, H, dv)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = out.reshape(B, 1, H * dv) @ p["wo"]
+    return out, cache_ckv, cache_krope

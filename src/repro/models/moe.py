@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN with GShard-style one-hot dispatch.
+
+TPU adaptation: instead of GPU-style token permutation + grouped GEMM, we
+build dispatch/combine one-hot tensors and route with einsums — this lowers
+to MXU matmuls plus (under expert sharding on the ``model`` mesh axis)
+reduce-scatter/all-reduce collectives, the standard JAX/TPU MoE formulation
+(GShard / Switch / Mesh-TF lineage).
+
+Supports:
+  * top-k routing with capacity factor + token dropping (capacity-bounded),
+  * optional always-on shared experts (DeepSeek-V3 [arXiv:2412.19437]),
+  * optional dense residual FFN in parallel (Arctic [hf:Snowflake/...]),
+  * load-balance auxiliary loss (Switch-style).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.common import dense_init, mlp_forward, mlp_params
+
+
+def moe_params(key, d_model: int, cfg: MoEConfig, act: str, dtype=jnp.float32):
+    keys = jax.random.split(key, 6)
+    E, F = cfg.num_experts, cfg.expert_d_ff
+    scale_in = 1.0 / math.sqrt(d_model)
+    scale_out = 1.0 / math.sqrt(F)
+    p = {
+        "router": dense_init(keys[0], d_model, E, dtype=jnp.float32, scale=scale_in),
+        "experts": {
+            "w_in": (jax.random.truncated_normal(keys[1], -2, 2, (E, d_model, F)) * scale_in).astype(dtype),
+            "w_gate": (jax.random.truncated_normal(keys[2], -2, 2, (E, d_model, F)) * scale_in).astype(dtype),
+            "w_out": (jax.random.truncated_normal(keys[3], -2, 2, (E, F, d_model)) * scale_out).astype(dtype),
+        },
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_params(keys[4], d_model, F * cfg.num_shared_experts, act, dtype)
+    if cfg.dense_d_ff:
+        p["dense"] = mlp_params(keys[5], d_model, cfg.dense_d_ff, act, dtype)
+    return p
+
+
+def _top_k_gating(logits, k: int):
+    """logits: (T, E) float32 -> (gates (T,E), mask (T,E) in {0,1})."""
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)  # (T, k)
+    mask = jnp.sum(jax.nn.one_hot(top_idx, E, dtype=probs.dtype), axis=1)  # (T, E)
+    gates = probs * mask
+    denom = jnp.sum(gates, axis=-1, keepdims=True)
+    gates = gates / jnp.maximum(denom, 1e-9)  # renormalize over selected
+    return gates, mask, probs
+
+
+# Dispatch implementation toggle (see EXPERIMENTS.md §Perf):
+#   "einsum" — GShard-style one-hot dispatch/combine einsums.  Paper-era
+#              baseline; dispatch matmul costs O(T·E·C·d) FLOPs, which
+#              DWARFS the expert FFN at DeepSeek scale (E=256, C~5k).
+#   "gather" — scatter/gather dispatch: expert_in built with .at[].add on
+#              (expert, slot) indices, combine via take + weighted sum.
+#              O(T·k·d) data movement, zero dispatch matmul FLOPs.
+DISPATCH_MODE = "einsum"
+
+
+def _expert_ffn(we, expert_in, act):
+    if act in ("silu", "swiglu"):
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, we["w_gate"])) * \
+            jnp.einsum("ecd,edf->ecf", expert_in, we["w_in"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", expert_in, we["w_in"]))
+    return jnp.einsum("ecf,efd->ecd", h, we["w_out"])  # (E, C, D)
+
+
+def moe_forward(p, x, cfg: MoEConfig, act: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    Capacity-bounded dispatch: each expert processes at most
+    C = ceil(T/E * capacity_factor * k) tokens; overflow tokens are dropped
+    (their routed contribution is zero — shared/dense paths still apply).
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.top_k
+    xt = x.reshape(T, D)
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T, E)
+    gates, mask, probs = _top_k_gating(logits, K)
+
+    # Switch-style load balance aux loss
+    frac_tokens = jnp.mean(mask, axis=0)            # (E,)
+    frac_probs = jnp.mean(probs, axis=0)            # (E,)
+    aux = jnp.sum(frac_tokens * frac_probs) * (E / K)
+
+    cap = max(int(math.ceil(T / E * cfg.capacity_factor * K)), K)
+    cap = min(cap, T)
+    # position of each token within its expert queue (per expert, over tokens)
+    pos_in_expert = jnp.cumsum(mask, axis=0) * mask - 1.0  # (T, E), -1 where unrouted
+    keep = (pos_in_expert < cap) & (mask > 0)
+    pos_c = jnp.clip(pos_in_expert, 0, cap - 1).astype(jnp.int32)
+    we = p["experts"]
+
+    if DISPATCH_MODE == "einsum":
+        # dispatch: (T, E, C) one-hot over capacity slot
+        oh_cap = jax.nn.one_hot(pos_c, cap, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+        combine = oh_cap * gates[..., None].astype(x.dtype)  # (T, E, C)
+        expert_in = jnp.einsum("tec,td->ecd", oh_cap, xt)  # (E, C, D)
+        expert_out = _expert_ffn(we, expert_in, act)
+        routed = jnp.einsum("tec,ecd->td", combine, expert_out)  # (T, D)
+    else:
+        # gather/scatter dispatch: per (token, k) assignment indices
+        top_gates, top_idx = jax.lax.top_k(gates, K)            # (T, K)
+        slot = jnp.take_along_axis(pos_c, top_idx, axis=1)      # (T, K)
+        kept = jnp.take_along_axis(keep, top_idx, axis=1)       # (T, K)
+        e_flat = top_idx.reshape(-1)                            # (T*K,)
+        s_flat = slot.reshape(-1)
+        w_flat = jnp.where(kept, top_gates, 0.0).reshape(-1).astype(x.dtype)
+        # dropped tokens scatter into a sacrificial overflow slot (cap index
+        # C) that is sliced off before the FFN
+        s_safe = jnp.where(kept.reshape(-1), s_flat, cap)
+        x_rep = jnp.repeat(xt, K, axis=0)                       # (T*K, D)
+        expert_in = jnp.zeros((E, cap + 1, D), x.dtype).at[e_flat, s_safe].add(
+            jnp.where(kept.reshape(-1)[:, None], x_rep, 0))
+        expert_out = _expert_ffn(we, expert_in[:, :cap], act)   # (E, C, D)
+        gathered = expert_out[e_flat, jnp.minimum(s_flat, cap - 1)]  # (T*K, D)
+        routed = jnp.sum((gathered * w_flat[:, None]).reshape(T, K, D), axis=1)
+
+    out = routed
+    if "shared" in p:
+        out = out + mlp_forward(p["shared"], xt, act)
+    if "dense" in p:
+        out = out + mlp_forward(p["dense"], xt, act)
+    return out.reshape(B, S, D), aux.astype(jnp.float32)

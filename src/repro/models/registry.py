@@ -1,0 +1,114 @@
+"""Model registry — a uniform functional API over all 10 architectures.
+
+Model methods (all pure, jit-able):
+    init(rng, dtype)                        -> params
+    forward(params, batch_inputs)           -> hidden (B, S, d_model)
+    logits(params, hidden)                  -> (B, S, vocab)
+    encode_segment(params, seg_inputs)      -> (B, d_model)   GST backbone F
+    prefill(params, batch_inputs)           -> (last_logits, caches)
+    init_cache(batch, cache_len, dtype)     -> caches
+    decode_step(params, token, caches, pos) -> (logits, caches)
+
+``batch_inputs`` is a dict: {"tokens": (B, S) int32, optional "patches"
+(VLM stub embeddings), optional "frames" (audio stub embeddings)}.
+``window`` (sliding-window attention) is a call-time option used by the
+long_500k variant for dense archs (see DESIGN.md §Skips).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- init -------------------------------------------------------------
+    def init(self, rng, dtype=jnp.float32):
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_params(rng, self.cfg, dtype)
+        return transformer.init_params(rng, self.cfg, dtype)
+
+    # -- full-sequence forward (train / GST segment encode) ---------------
+    def forward(self, params, inputs: Dict[str, Any], *, window: int = 0):
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            enc_out = encdec.encode(params, cfg, inputs["frames"])
+            hidden, _ = encdec.decoder_forward(params, cfg, inputs["tokens"], enc_out)
+            return hidden
+        hidden, _, aux = transformer.forward_hidden(
+            params, cfg, inputs["tokens"], patches=inputs.get("patches"),
+            mode="full", window=window)
+        return hidden
+
+    def forward_with_aux(self, params, inputs: Dict[str, Any], *, window: int = 0):
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            return self.forward(params, inputs), jnp.zeros((), jnp.float32)
+        hidden, _, aux = transformer.forward_hidden(
+            params, cfg, inputs["tokens"], patches=inputs.get("patches"),
+            mode="full", window=window)
+        return hidden, aux
+
+    def logits(self, params, hidden):
+        if self.cfg.is_encoder_decoder:
+            return hidden @ params["lm_head"]
+        return transformer.lm_logits(params, self.cfg, hidden)
+
+    # -- GST backbone F: segment -> embedding ------------------------------
+    def encode_segment(self, params, inputs: Dict[str, Any]):
+        """Mean-pooled final hidden state = segment embedding h_j (GST's F)."""
+        if self.cfg.is_encoder_decoder:
+            # audio GST: the *encoder* embeds frame segments (DESIGN.md §3)
+            enc = encdec.encode(params, self.cfg, inputs["frames"])
+            out = jnp.mean(enc, axis=1)
+            return out, jnp.zeros((), jnp.float32)
+        hidden, aux = self.forward_with_aux(params, inputs)
+        return jnp.mean(hidden, axis=1), aux
+
+    # -- serving ------------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int, dtype):
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_self_cache(self.cfg, batch, cache_len, dtype)
+        return transformer.init_cache(self.cfg, batch, cache_len, dtype)
+
+    def prefill(self, params, inputs: Dict[str, Any], *, window: int = 0):
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            enc_out = encdec.encode(params, cfg, inputs["frames"])
+            hidden, kv = encdec.decoder_forward(params, cfg, inputs["tokens"],
+                                                enc_out, emit_cache=True)
+            logits = hidden[:, -1:] @ params["lm_head"]
+            xkv = encdec.cross_kv(params, cfg, enc_out)
+            return logits, {"self": {"k": kv[0], "v": kv[1]}, "cross": xkv}
+        hidden, caches, _ = transformer.forward_hidden(
+            params, cfg, inputs["tokens"], patches=inputs.get("patches"),
+            mode="full", window=window, emit_cache=True)
+        logits = transformer.lm_logits(params, cfg, hidden[:, -1:])
+        return logits, caches
+
+    def decode_step(self, params, token, caches, cache_pos, *,
+                    extras: Optional[Dict[str, Any]] = None,
+                    window: int = 0, ring: bool = False):
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            logits, new_self = encdec.decode_step(
+                params, cfg, token, caches["self"], caches["cross"], cache_pos)
+            return logits, {"self": new_self, "cross": caches["cross"]}
+        hidden, new_caches, _ = transformer.forward_hidden(
+            params, cfg, token, mode="decode", caches=caches,
+            cache_pos=cache_pos, window=window, ring=ring)
+        logits = transformer.lm_logits(params, cfg, hidden)
+        return logits, new_caches
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

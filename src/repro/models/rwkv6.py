@@ -1,0 +1,144 @@
+"""RWKV-6 "Finch" block — attention-free time-mix with data-dependent decay.
+
+[arXiv:2404.05892]
+
+Per-head (head size N) linear-attention-style state S ∈ R^{N×N} mapping
+key-channels to value-channels:
+    S_t[n, m] = w_t[n] * S_{t-1}[n, m] + k_t[n] * v_t[m]
+    y_t[m]    = Σ_n r_t[n] * (S_{t-1}[n, m] + u[n] * k_t[n] * v_t[m])
+where the decay w_t = exp(-exp(w0 + lora(x_t))) is **data-dependent** — the
+Finch contribution — and u is the per-channel "bonus" for the current token.
+
+Training/prefill runs a ``lax.scan`` over tokens (TPU adaptation: the GPU
+reference fuses this into a CUDA kernel; on TPU the per-step outer products
+batch into (B*H, N, N) VPU ops — a chunked matmul form is a §Perf follow-up).
+Decode is the same recurrence with a carried state, O(1) in sequence length.
+Channel-mix is a squared-ReLU MLP with token shift.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.common import dense_init, layernorm, layernorm_params
+
+
+def rwkv_dims(cfg: ArchConfig):
+    N = cfg.ssm.state_size  # head size (64 for rwkv6-7b)
+    H = cfg.d_model // N
+    return H, N
+
+
+def rwkv_timemix_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H, N = rwkv_dims(cfg)
+    lora = max(32, d // 64)
+    ks = jax.random.split(key, 10)
+    return {
+        # token-shift interpolation weights (static part; data-dep part via lora)
+        "mix_r": (jnp.ones((d,)) * 0.5).astype(dtype),
+        "mix_k": (jnp.ones((d,)) * 0.5).astype(dtype),
+        "mix_v": (jnp.ones((d,)) * 0.5).astype(dtype),
+        "mix_w": (jnp.ones((d,)) * 0.5).astype(dtype),
+        "mix_g": (jnp.ones((d,)) * 0.5).astype(dtype),
+        "wr": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wg": dense_init(ks[3], d, d, dtype),
+        "w_decay_a": dense_init(ks[4], d, lora, dtype),      # decay lora in
+        "w_decay_b": dense_init(ks[5], lora, d, dtype),      # decay lora out
+        "decay_base": (jnp.zeros((d,)) - 0.6).astype(dtype),  # w0
+        "bonus_u": (jnp.zeros((d,)) + 0.3).astype(dtype),
+        "out_gn_scale": jnp.ones((d,), dtype),               # per-head groupnorm
+        "out_gn_bias": jnp.zeros((d,), dtype),
+        "wo": dense_init(ks[6], d, d, dtype, scale=1.0 / math.sqrt(d)),
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B, S, d); prev: (B, d) last token of previous window (zeros at t=0).
+    Returns x shifted right by one along S."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _group_norm(p, y, H: int, N: int, eps: float = 1e-5):
+    B, S, d = y.shape
+    yh = y.reshape(B, S, H, N).astype(jnp.float32)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * lax.rsqrt(var + eps)
+    yh = yh.reshape(B, S, d)
+    return (yh * p["out_gn_scale"].astype(jnp.float32)
+            + p["out_gn_bias"].astype(jnp.float32)).astype(y.dtype)
+
+
+def rwkv_timemix(p, x, cfg: ArchConfig, state=None, shift_prev=None):
+    """x: (B, S, d). state: (B, H, N, N); shift_prev: (B, d).
+    Returns (out, (state, last_x))."""
+    B, S, d = x.shape
+    H, N = rwkv_dims(cfg)
+    if shift_prev is None:
+        shift_prev = jnp.zeros((B, d), x.dtype)
+    xp = _token_shift(x, shift_prev)
+
+    def mixed(name):
+        m = p[f"mix_{name}"]
+        return x * m + xp * (1.0 - m)
+
+    r = (mixed("r") @ p["wr"]).reshape(B, S, H, N)
+    k = (mixed("k") @ p["wk"]).reshape(B, S, H, N)
+    v = (mixed("v") @ p["wv"]).reshape(B, S, H, N)
+    g = mixed("g") @ p["wg"]
+    # data-dependent decay (Finch): w in (0, 1)
+    dd = jnp.tanh(mixed("w") @ p["w_decay_a"]) @ p["w_decay_b"]
+    w = jnp.exp(-jnp.exp((p["decay_base"] + dd).astype(jnp.float32)))  # (B,S,d)
+    w = w.reshape(B, S, H, N)
+    u = p["bonus_u"].astype(jnp.float32).reshape(H, N)
+
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+
+    def step(S_prev, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,N) each
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,N,N)
+        y = jnp.einsum("bhn,bhnm->bhm", r_t, S_prev + u[None, :, :, None] * kv)
+        S_new = w_t[..., :, None] * S_prev + kv
+        return S_new, y
+
+    xs = (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+          jnp.moveaxis(vf, 1, 0), jnp.moveaxis(w.astype(jnp.float32), 1, 0))
+    state_new, ys = lax.scan(step, state.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = _group_norm(p, y, H, N)
+    y = y * jax.nn.silu(g)
+    return y @ p["wo"], (state_new, x[:, -1, :])
+
+
+def rwkv_channelmix_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mix_k": (jnp.ones((d,)) * 0.5).astype(dtype),
+        "mix_r": (jnp.ones((d,)) * 0.5).astype(dtype),
+        "w_in": dense_init(ks[0], d, f, dtype),
+        "w_rec": dense_init(ks[1], d, d, dtype),
+        "w_out": dense_init(ks[2], f, d, dtype, scale=1.0 / math.sqrt(f)),
+    }
+
+
+def rwkv_channelmix(p, x, shift_prev=None):
+    B, S, d = x.shape
+    if shift_prev is None:
+        shift_prev = jnp.zeros((B, d), x.dtype)
+    xp = _token_shift(x, shift_prev)
+    xk = x * p["mix_k"] + xp * (1.0 - p["mix_k"])
+    xr = x * p["mix_r"] + xp * (1.0 - p["mix_r"])
+    h = jnp.square(jax.nn.relu(xk @ p["w_in"])) @ p["w_out"]
+    return jax.nn.sigmoid(xr @ p["w_rec"]) * h, x[:, -1, :]

@@ -1,0 +1,195 @@
+"""Generic decoder-only model assembled from blocks, scan-over-layers.
+
+Layers are grouped into *runs* of consecutive equal block kinds
+(e.g. DeepSeek-V3: [mla_dense x3, mla_moe x58]; Zamba2:
+[mamba x5, shared_attn x1] repeated).  Each run's parameters are stacked
+along a leading axis and driven with ``lax.scan`` — one traced body per run,
+keeping compile time O(#runs) instead of O(#layers).
+
+``shared_attn`` runs reference a single shared parameter set (Zamba2's
+shared block); their caches are still per-occurrence.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks as B
+from repro.models.common import embed_init, dense_init, make_norm
+
+
+# Dry-run accounting flag: XLA's cost_analysis counts a while-loop body ONCE
+# regardless of trip count, so the roofline pass unrolls the layer scans to
+# get honest FLOP/byte/collective totals (launch/specs.py sets this).  Real
+# training keeps scan (compile-time win); the lowered math is identical.
+SCAN_UNROLL = False
+
+
+def layer_runs(cfg: ArchConfig) -> List[Tuple[str, int]]:
+    kinds = [B.resolve_kind(cfg, k) for k in cfg.layer_kinds()]
+    runs: List[Tuple[str, int]] = []
+    for k in kinds:
+        if runs and runs[-1][0] == k and k != "shared_attn":
+            runs[-1] = (k, runs[-1][1] + 1)
+        else:
+            runs.append((k, 1))
+    return runs
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.float32):
+    runs = layer_runs(cfg)
+    keys = jax.random.split(key, len(runs) + 4)
+    params: dict = {"embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype)}
+    has_shared = any(k == "shared_attn" for k, _ in runs)
+    if has_shared:
+        params["shared_attn"] = B.block_init("shared_attn", keys[1], cfg, dtype)
+    run_params = []
+    for i, (kind, n) in enumerate(runs):
+        if kind == "shared_attn":
+            run_params.append({})  # parameters live in params["shared_attn"]
+            continue
+        ks = jax.random.split(keys[2 + i], n)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[B.block_init(kind, k, cfg, dtype) for k in ks])
+        run_params.append(stacked)
+    params["runs"] = run_params
+    nparams, _ = make_norm(cfg.norm, cfg.d_model, dtype)
+    params["final_norm"] = nparams
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[-1], cfg.d_model, cfg.vocab_size, dtype)
+    return params
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    caches = []
+    for kind, n in layer_runs(cfg):
+        one = B.init_block_cache(kind, cfg, batch, cache_len, dtype)
+        if kind == "shared_attn":
+            caches.append(one)
+        else:
+            caches.append(jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (n,) + x.shape), one))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _mrope_ids(cfg: ArchConfig, idx):
+    """Purely positional M-RoPE id mapping [arXiv:2409.12191]: the first
+    ``vision_prefix_len`` positions are a (t=0, h, w) grid; text positions
+    continue sequentially on all three axes after the max spatial id.  Shared
+    by full-forward and decode so caches stay consistent."""
+    P = cfg.vision_prefix_len
+    side = max(int(P ** 0.5), 1)
+    is_vis = idx < P
+    h_id = jnp.where(is_vis, (idx % max(P, 1)) // side, 0)
+    w_id = jnp.where(is_vis, (idx % max(P, 1)) % side, 0)
+    t_txt = idx - P + side  # text starts after max spatial id
+    return jnp.stack([jnp.where(is_vis, 0, t_txt),
+                      jnp.where(is_vis, h_id, t_txt),
+                      jnp.where(is_vis, w_id, t_txt)], axis=-1)
+
+
+def _build_positions(cfg: ArchConfig, batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.family != "vlm":
+        return pos, None
+    thw = _mrope_ids(cfg, jnp.arange(seq) + offset)
+    thw = jnp.broadcast_to(thw[None], (batch, seq, 3))
+    return pos, thw
+
+
+def _embed(params, cfg: ArchConfig, tokens, patches=None):
+    x = params["embed"][tokens]
+    if patches is not None and cfg.vision_prefix_len:
+        # stub modality frontend: precomputed patch embeddings overwrite the
+        # first vision_prefix_len slots (the carve-out allowed by the brief)
+        P = patches.shape[1]
+        x = lax.dynamic_update_slice(x, patches.astype(x.dtype), (0, 0, 0))
+    return x
+
+
+def _run_scan(kind, stacked_p, shared_p, x, cfg, *, mode, positions, positions_thw,
+              caches, cache_pos, window, ring, emit_cache):
+    """Apply one run. For shared_attn the (single) block applies once with the
+    shared params; otherwise scan over the stacked per-layer params."""
+    if kind == "shared_attn":
+        x, new_c, aux = B.block_forward(
+            kind, shared_p, x, cfg, mode=mode, positions=positions,
+            positions_thw=positions_thw, cache=caches, cache_pos=cache_pos,
+            window=window, ring=ring, emit_cache=emit_cache)
+        return x, new_c, aux
+
+    if caches is None:
+        def body_nc(carry, p_i):
+            h, aux_acc = carry
+            h, new_c, aux = B.block_forward(
+                kind, p_i, h, cfg, mode=mode, positions=positions,
+                positions_thw=positions_thw, cache=None, cache_pos=cache_pos,
+                window=window, ring=ring, emit_cache=emit_cache)
+            return (h, aux_acc + aux), new_c
+        (x, aux), new_caches = lax.scan(body_nc, (x, jnp.zeros((), jnp.float32)),
+                                        stacked_p, unroll=SCAN_UNROLL)
+        return x, new_caches, aux
+
+    def body(carry, xs):
+        h, aux_acc = carry
+        p_i, c_i = xs
+        h, new_c, aux = B.block_forward(
+            kind, p_i, h, cfg, mode=mode, positions=positions,
+            positions_thw=positions_thw, cache=c_i, cache_pos=cache_pos,
+            window=window, ring=ring, emit_cache=emit_cache)
+        return (h, aux_acc + aux), new_c
+
+    (x, aux), new_caches = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    (stacked_p, caches), unroll=SCAN_UNROLL)
+    return x, new_caches, aux
+
+
+def forward_hidden(params, cfg: ArchConfig, tokens, *, patches=None,
+                   caches=None, cache_pos=None, mode="full", window: int = 0,
+                   ring: bool = False, emit_cache: bool = False):
+    """Core stack application.  Returns (hidden, new_caches, aux_loss)."""
+    batch, seq = tokens.shape
+    if mode == "decode":
+        positions = cache_pos[:, None]
+        thw = _mrope_ids(cfg, cache_pos)[:, None, :] if cfg.family == "vlm" else None
+    else:
+        positions, thw = _build_positions(cfg, batch, seq)
+    x = _embed(params, cfg, tokens, patches)
+    runs = layer_runs(cfg)
+    new_caches = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, (kind, n) in enumerate(runs):
+        run_p = params["runs"][i] if kind != "shared_attn" else None
+        shared_p = params.get("shared_attn")
+        c = caches[i] if caches is not None else None
+        x, nc, aux = _run_scan(
+            kind, run_p, shared_p, x, cfg, mode=mode, positions=positions,
+            positions_thw=thw, caches=c, cache_pos=cache_pos, window=window,
+            ring=ring, emit_cache=emit_cache or mode == "decode")
+        new_caches.append(nc)
+        aux_total = aux_total + aux
+    _, norm_fn = make_norm(cfg.norm, cfg.d_model, x.dtype)
+    x = norm_fn(params["final_norm"], x)
+    return x, new_caches, aux_total
+
+
+def lm_logits(params, cfg: ArchConfig, hidden):
+    if cfg.tie_embeddings:
+        return hidden @ params["embed"].T
+    return hidden @ params["lm_head"]

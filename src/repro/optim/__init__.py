@@ -1,0 +1,17 @@
+from repro.optim.adamw import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    constant_schedule,
+    make_optimizer,
+)
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "clip_by_global_norm",
+    "cosine_schedule",
+    "constant_schedule",
+    "make_optimizer",
+]

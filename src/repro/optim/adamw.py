@@ -1,0 +1,98 @@
+"""AdamW + schedules + gradient clipping, pure JAX (no optax in this env).
+
+The paper trains with Adam (MalNet GCN/SAGE, TpuGraphs) and AdamW + cosine
+(GraphGPS) [Appendix B]; both are covered here.  Optimizer state is a pytree
+mirroring params, so it shards with the same PartitionSpecs (FSDP-friendly).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, total_steps: int, warmup: int = 0,
+                    final_frac: float = 0.0) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(base_lr: float) -> Callable:
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw_init(params, state_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                 weight_decay=0.0, max_grad_norm: float = 0.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = jnp.zeros((), jnp.float32)
+    if max_grad_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    step = state["step"] + 1
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** sf
+    bc2 = 1.0 - b2 ** sf
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["mu"])
+    flat_v = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"step": step, "mu": new_m, "nu": new_v}, {"grad_norm": gnorm}
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def make_optimizer(name: str = "adamw", *, lr=1e-3, schedule: Optional[Callable] = None,
+                   b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                   max_grad_norm: float = 1.0) -> Optimizer:
+    sched = schedule or constant_schedule(lr)
+    if name not in ("adam", "adamw"):
+        raise ValueError(name)
+    wd = weight_decay if name == "adamw" else 0.0
+
+    def update(params, grads, state):
+        return adamw_update(params, grads, state,
+                            lr=sched(state["step"]), b1=b1, b2=b2, eps=eps,
+                            weight_decay=wd, max_grad_norm=max_grad_norm)
+
+    return Optimizer(init=adamw_init, update=update)

@@ -1,0 +1,10 @@
+from repro.roofline.analysis import (
+    HW,
+    analyze_compiled,
+    collective_bytes,
+    model_flops,
+    param_counts,
+)
+
+__all__ = ["HW", "analyze_compiled", "collective_bytes", "model_flops",
+           "param_counts"]

@@ -1,0 +1,170 @@
+"""Three-term roofline model from a compiled dry-run artifact (deliverable g).
+
+    compute term    = HLO_FLOPs      / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes      / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+Hardware constants (assignment): TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+``cost_analysis()`` of an SPMD-partitioned executable reports *per-device*
+FLOPs/bytes (the module is the per-device program).  We therefore multiply
+by the device count to get global HLO_FLOPs before applying the formulas —
+verified in tests/test_roofline.py against an analytically-known matmul.
+
+Collective bytes are not in cost_analysis: we parse the optimized HLO text
+and, for each collective op, take max(result bytes, operand bytes) as the
+bytes moved per device — exact for all-reduce/all-to-all/collective-permute,
+an upper bound for all-gather (result) and reduce-scatter (operand).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # B/s per chip
+    link_bw: float = 50e9           # B/s per ICI link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum bytes moved per device, per collective kind, over the module."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)", stripped)
+        if not m:
+            continue
+        kind = m.group(2)
+        if f" {kind}(" not in stripped and f"{kind}(" not in stripped:
+            continue
+        if "-start" in stripped.split(kind)[0][-8:]:
+            pass  # async start counted; the matching -done has no new bytes
+        if f"{kind}-done" in stripped:
+            continue
+        # result bytes (may be a tuple type)
+        res_bytes = sum(_shape_bytes(d, s) for d, s in
+                        _SHAPE_RE.findall(m.group(1)))
+        # operand types (present in verbose HLO operand lists)
+        after = stripped.split(kind, 1)[1]
+        op_bytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(after))
+        out[kind] += float(max(res_bytes, op_bytes))
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def count_collective_ops(hlo_text: str) -> Dict[str, int]:
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        for k in _COLLECTIVES:
+            if re.search(rf"=\s*[^=]*\b{k}(-start)?\(", line):
+                counts[k] += 1
+    return counts
+
+
+def param_counts(param_shapes, moe_top_k: int = 0, moe_num_experts: int = 0
+                 ) -> Tuple[float, float]:
+    """(total params, active params).  Leaves under a path containing
+    'experts' are scaled by top_k/num_experts for the active count."""
+    import jax
+    total = 0.0
+    active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(param_shapes)[0]:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        n = float(np.prod(leaf.shape)) if leaf.shape else 1.0
+        total += n
+        if "experts" in pstr and moe_num_experts:
+            active += n * moe_top_k / moe_num_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(n_active: float, tokens: float, kind: str) -> float:
+    """Useful model FLOPs: 6·N·D for training, 2·N·D for inference."""
+    return (6.0 if kind == "train" else 2.0) * n_active * tokens
+
+
+def analyze_compiled(compiled, *, chips: int, hw: HW = HW(),
+                     n_active: Optional[float] = None,
+                     tokens: Optional[float] = None,
+                     kind: str = "train") -> Dict[str, Any]:
+    """Derive the three roofline terms + diagnostics from a compiled module."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    counts = count_collective_ops(hlo)
+
+    flops_global = flops_dev * chips
+    bytes_global = bytes_dev * chips
+    t_compute = flops_global / (chips * hw.peak_flops)
+    t_memory = bytes_global / (chips * hw.hbm_bw)
+    t_collective = coll["total"] / hw.link_bw  # per-device bytes over one link
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+
+    mem_stats = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                mem_stats[k] = int(getattr(ma, k))
+    except Exception as e:  # CPU backend may not implement it
+        mem_stats["error"] = str(e)
+
+    result = {
+        "chips": chips,
+        "flops_per_device": flops_dev,
+        "flops_global": flops_global,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll,
+        "collective_op_counts": counts,
+        "terms_seconds": terms,
+        "dominant": dominant,
+        "memory_analysis": mem_stats,
+    }
+    if n_active is not None and tokens is not None:
+        mf = model_flops(n_active, tokens, kind)
+        result["model_flops"] = mf
+        result["useful_flops_ratio"] = mf / flops_global if flops_global else 0.0
+        result["mfu_upper_bound"] = mf / (chips * hw.peak_flops) / max(
+            max(terms.values()), 1e-30)
+    return result

@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the real single-CPU environment (the 512-device override is
+# exclusively for launch/dryrun.py per the assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

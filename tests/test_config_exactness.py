@@ -1,0 +1,67 @@
+"""The 10 assigned architecture configs must match the assignment table
+LITERALLY — layer count, d_model, heads, kv heads, d_ff, vocab, family
+extras.  This is the executable form of deliverable (f)'s spec."""
+import pytest
+
+from repro.configs import get_config
+
+# (family, L, d_model, H, kv, d_ff, vocab)
+SPEC = {
+    "arctic-480b":        ("moe",    35, 7168, 56, 8, 4864, 32000),
+    "internlm2-1.8b":     ("dense",  24, 2048, 16, 8, 8192, 92544),
+    "internlm2-20b":      ("dense",  48, 6144, 48, 8, 16384, 92544),
+    "zamba2-1.2b":        ("hybrid", 38, 2048, 32, 32, 8192, 32000),
+    "olmo-1b":            ("dense",  16, 2048, 16, 16, 8192, 50304),
+    "rwkv6-7b":           ("ssm",    32, 4096, 0, 0, 14336, 65536),
+    "deepseek-v3-671b":   ("moe",    61, 7168, 128, 128, None, 129280),
+    "deepseek-coder-33b": ("dense",  62, 7168, 56, 8, 19200, 32256),
+    "whisper-large-v3":   ("audio",  32, 1280, 20, 20, 5120, 51866),
+    "qwen2-vl-7b":        ("vlm",    28, 3584, 28, 4, 18944, 152064),
+}
+
+
+@pytest.mark.parametrize("arch", list(SPEC))
+def test_config_matches_assignment(arch):
+    fam, L, d, H, kv, ff, V = SPEC[arch]
+    cfg = get_config(arch)
+    assert cfg.family == fam
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == kv
+    if ff is not None:
+        assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+    assert cfg.source, f"{arch}: missing citation"
+
+
+def test_family_extras():
+    a = get_config("arctic-480b")
+    assert a.moe.num_experts == 128 and a.moe.top_k == 2
+    assert a.moe.dense_d_ff == 4864          # dense residual path
+    d = get_config("deepseek-v3-671b")
+    assert d.moe.num_experts == 256 and d.moe.top_k == 8
+    assert d.moe.num_shared_experts == 1 and d.moe.expert_d_ff == 2048
+    assert d.use_mla
+    z = get_config("zamba2-1.2b")
+    assert z.ssm.state_size == 64
+    assert "shared_attn" in z.block_pattern and "mamba" in z.block_pattern
+    r = get_config("rwkv6-7b")
+    assert r.attn_free
+    w = get_config("whisper-large-v3")
+    assert w.is_encoder_decoder and w.encoder_seq_len == 1500
+    q = get_config("qwen2-vl-7b")
+    assert sum(q.mrope_sections) == q.resolved_head_dim // 2
+    assert q.vision_prefix_len > 0
+
+
+def test_every_arch_covers_its_shapes():
+    """supports_shape must allow everything except the documented skip."""
+    from repro.configs import ARCH_IDS, INPUT_SHAPES
+    skips = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in INPUT_SHAPES.values():
+            if not cfg.supports_shape(s):
+                skips.append((a, s.name))
+    assert skips == [("whisper-large-v3", "long_500k")]

@@ -1,0 +1,113 @@
+"""The §Perf optimization toggles must be EXACT rewrites, not approximations:
+every toggle's two modes produce allclose outputs (the hillclimb changes the
+cost model only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.common as C
+import repro.models.moe as M
+from repro.configs.base import MoEConfig
+
+
+@pytest.fixture(autouse=True)
+def _restore_toggles():
+    yield
+    C.CACHE_UPDATE = "onehot"
+    C.ATTN_IMPL = "naive"
+    C.GQA_IMPL = "repeat"
+    M.DISPATCH_MODE = "einsum"
+
+
+def test_moe_dispatch_modes_equal():
+    rng = np.random.default_rng(0)
+    for cf in (4.0, 0.4):  # ample + dropping capacity
+        cfg = MoEConfig(num_experts=8, top_k=2, expert_d_ff=32,
+                        capacity_factor=cf)
+        p = M.moe_params(jax.random.key(0), 16, cfg, "silu")
+        x = jnp.asarray(rng.normal(size=(2, 16, 16)), jnp.float32)
+        M.DISPATCH_MODE = "einsum"
+        o1, a1 = M.moe_forward(p, x, cfg, "silu")
+        M.DISPATCH_MODE = "gather"
+        o2, a2 = M.moe_forward(p, x, cfg, "silu")
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(float(a1), float(a2), rtol=1e-6)
+
+
+def test_cache_write_modes_equal():
+    rng = np.random.default_rng(1)
+    idx = jnp.asarray([0, 5, 7], jnp.int32)
+    for shape, nshape in [((3, 8, 2, 4), (3, 1, 2, 4)), ((3, 8, 4), (3, 1, 4))]:
+        cache = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        new = jnp.asarray(rng.normal(size=nshape), jnp.float32)
+        C.CACHE_UPDATE = "onehot"
+        a = C.write_cache(cache, new, idx)
+        C.CACHE_UPDATE = "dus"
+        b = C.write_cache(cache, new, idx)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_chunked_attention_equals_naive():
+    rng = np.random.default_rng(2)
+    B, S, H, KV, D = 2, 256, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    ref = C.sdpa(q, k, v, causal=True)
+    out = C.chunked_causal_attention(q, k, v, chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    refw = C.sdpa(q, k, v, causal=True, window=96)
+    outw = C.chunked_causal_attention(q, k, v, window=96, chunk=64)
+    np.testing.assert_allclose(np.asarray(outw), np.asarray(refw),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_full_model_invariant_under_all_toggles():
+    """End-to-end: a reduced MoE arch forward is identical under the
+    optimized configuration (gather dispatch + chunked attention)."""
+    from repro.configs import get_config, reduced
+    from repro.models import build_model
+    cfg = reduced(get_config("arctic-480b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    toks = jnp.asarray(np.random.default_rng(3).integers(
+        0, cfg.vocab_size, (2, 32)), jnp.int32)
+    M.DISPATCH_MODE, C.ATTN_IMPL = "einsum", "naive"
+    h1 = model.forward(params, {"tokens": toks})
+    M.DISPATCH_MODE, C.ATTN_IMPL = "gather", "chunked"
+    h2 = model.forward(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=5e-5, atol=5e-5)
+
+
+def test_grouped_gqa_equals_repeat():
+    rng = np.random.default_rng(4)
+    B, Sq, Sk, H, KV, D = 2, 16, 16, 8, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Sk, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Sk, KV, D)), jnp.float32)
+    for kwargs in [dict(causal=True), dict(causal=True, window=5),
+                   dict(causal=False, kv_valid_len=jnp.asarray([7, 12]))]:
+        C.GQA_IMPL = "repeat"
+        a = C.sdpa(q, k, v, **kwargs)
+        C.GQA_IMPL = "grouped"
+        b = C.sdpa(q, k, v, **kwargs)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+    p = C.attn_params(jax.random.key(0), 64, H, KV, D)
+    x = jnp.asarray(rng.normal(size=(B, 1, 64)), jnp.float32)
+    ck = jnp.asarray(rng.normal(size=(B, 8, KV, D)), jnp.float32)
+    cv = jnp.asarray(rng.normal(size=(B, 8, KV, D)), jnp.float32)
+    pos = jnp.asarray([3, 5], jnp.int32)
+    C.GQA_IMPL = "repeat"
+    o1, _, _ = C.attn_decode(p, x, ck, cv, pos, num_heads=H, num_kv=KV,
+                             head_dim=D, rope_theta=1e4)
+    C.GQA_IMPL = "grouped"
+    o2, _, _ = C.attn_decode(p, x, ck, cv, pos, num_heads=H, num_kv=KV,
+                             head_dim=D, rope_theta=1e4)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+    C.GQA_IMPL = "repeat"

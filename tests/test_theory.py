@@ -1,0 +1,99 @@
+"""Monte-Carlo validation of Theorem 4.1 (paper §4, Appendix A).
+
+SED with keep ratio p reduces the stale-embedding bias term by exactly the
+factor p, at the cost of an extra regularization (second-moment) term.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import segment as seg
+from repro.core.theory import delta_moments_et, delta_moments_sed
+
+
+def _simulate_delta(h, h_tilde, J, S, p, n_iter, use_sed, seed=0):
+    """Monte-Carlo E[δ_j] where δ = (η-weighted observed) - (true), per
+    segment, under the actual sampling machinery in core.segment (vmapped)."""
+    valid = jnp.ones((1, J))
+
+    def one(key):
+        k1, k2 = jax.random.split(key)
+        idx = seg.sample_segments(k1, valid, S)
+        fresh = seg.sampled_mask(idx, J)[0]  # (J,)
+        if use_sed:
+            eta, _ = seg.sed_weights(k2, valid, fresh[None], p, S)
+            observed = eta[0][:, None] * jnp.where(fresh[:, None] > 0, h, h_tilde)
+        else:
+            observed = jnp.where(fresh[:, None] > 0, h, h_tilde)
+        return observed - h
+
+    keys = jax.random.split(jax.random.key(seed), n_iter)
+    deltas = jax.jit(jax.vmap(one))(keys)
+    return np.asarray(jnp.mean(deltas, axis=0))
+
+
+@pytest.mark.parametrize("p", [0.25, 0.5, 0.75])
+def test_bias_reduced_by_factor_p(p):
+    rng = np.random.default_rng(0)
+    J, S, d = 6, 1, 4
+    h = jnp.asarray(rng.normal(size=(J, d)), jnp.float32)
+    h_tilde = h + jnp.asarray(rng.normal(size=(J, d)) * 0.5, jnp.float32)
+
+    # closed-form moments (theory.py)
+    et_mean, _ = delta_moments_et(h, h_tilde, J, S)
+    sed_mean, _ = delta_moments_sed(h, h_tilde, J, S, p)
+    # the stale-difference component: ET carries (J-S)/J (h̃-h); SED carries
+    # p (J-S)/J (h̃-h).  Verify the p factor on the closed forms:
+    stale_et = (J - S) / J * np.asarray(h_tilde - h)
+    np.testing.assert_allclose(np.asarray(et_mean), stale_et, rtol=1e-5)
+    # SED mean = p * stale bias + mean-zero-in-expectation fresh part:
+    fresh_part = (S / J) * (1 - p) * (J - S) / S * np.asarray(h) \
+        - (1 - p) * (J - S) / J * np.asarray(h)
+    np.testing.assert_allclose(np.asarray(sed_mean),
+                               p * stale_et + fresh_part, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(fresh_part, 0.0, atol=1e-6)  # cancels exactly
+
+    # Monte-Carlo through the real sampling code.  The SED estimator carries
+    # the high-variance up-weighted fresh term (σ ∝ (1-p)(J-S)/S·|h|), so its
+    # tolerance is scaled accordingly.
+    n = 40_000
+    mc_et = _simulate_delta(h, h_tilde, J, S, p, n, use_sed=False)
+    mc_sed = _simulate_delta(h, h_tilde, J, S, p, n, use_sed=True)
+    np.testing.assert_allclose(mc_et, stale_et, atol=0.05)
+    sigma = (1 - p) * (J - S) / S * float(jnp.max(jnp.abs(h)))
+    np.testing.assert_allclose(mc_sed, p * stale_et,
+                               atol=max(0.05, 5 * sigma / np.sqrt(n)))
+
+
+def test_limit_cases_match_theorem():
+    """p=1 degrades to ET; p=0 removes the stale bias entirely."""
+    rng = np.random.default_rng(1)
+    J, S, d = 5, 1, 3
+    h = jnp.asarray(rng.normal(size=(J, d)), jnp.float32)
+    h_tilde = h + 1.0
+    et_mean, et_second = delta_moments_et(h, h_tilde, J, S)
+    sed1_mean, sed1_second = delta_moments_sed(h, h_tilde, J, S, 1.0)
+    np.testing.assert_allclose(np.asarray(sed1_mean), np.asarray(et_mean),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(sed1_second),
+                               np.asarray(et_second), rtol=1e-6)
+    sed0_mean, sed0_second = delta_moments_sed(h, h_tilde, J, S, 0.0)
+    # bias gone...
+    stale_component = np.asarray(sed0_mean) @ np.asarray(h_tilde - h).T
+    # ...but regularization (second moment) strictly larger than ET's
+    assert float(jnp.sum(sed0_second)) > float(jnp.sum(et_second))
+
+
+def test_regularizer_grows_as_p_drops():
+    """The second-order term (regularizer) increases monotonically as p→0 —
+    the tradeoff Theorem 4.1 describes."""
+    rng = np.random.default_rng(2)
+    J, S = 8, 1
+    h = jnp.asarray(rng.normal(size=(J, 4)), jnp.float32)
+    h_tilde = h + jnp.asarray(rng.normal(size=(J, 4)) * 0.3, jnp.float32)
+    seconds = []
+    for p in [1.0, 0.75, 0.5, 0.25, 0.0]:
+        _, second = delta_moments_sed(h, h_tilde, J, S, p)
+        seconds.append(float(jnp.sum(second)))
+    assert all(seconds[i] <= seconds[i + 1] + 1e-6 for i in range(len(seconds) - 1))
