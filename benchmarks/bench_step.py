@@ -1,0 +1,187 @@
+"""Tracked GST step-time benchmark — the repo's perf trajectory anchor.
+
+Times one jitted train step and one eval step for every cell of
+``{gst, gst_efd, full} × {sage, gcn} × {pallas, reference}`` on the synthetic
+MalNet-like dataset, with the TrainState donated through the step (in-place
+embedding-table updates).  Also records the pallas_call count of the forward
+encode jaxpr — the fused path's contract is exactly one batched kernel
+launch per message-passing layer.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_step.py            # full grid
+    PYTHONPATH=src python benchmarks/bench_step.py --quick    # CI-sized
+    PYTHONPATH=src python benchmarks/bench_step.py --out custom.json
+
+Writes ``BENCH_gst_step.json`` (repo root by default).  On CPU the kernels
+run in Pallas interpret mode, so the pallas numbers measure the fused
+*structure* (launch count, donation) rather than TPU silicon speed; the
+reference rows are the apples-to-apples wall-clock baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.isdir(os.path.join(_REPO, "src")) and \
+        os.path.join(_REPO, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gst as G
+from repro.core.embedding_table import init_table
+from repro.graphs import batching as Bt
+from repro.graphs import data as D
+from repro.graphs.gnn import GNNConfig, gnn_init, make_encode_fn
+from repro.kernels.ops import count_pallas_calls
+from repro.optim import make_optimizer
+
+VARIANTS = ("gst", "gst_efd", "full")
+BACKBONES = ("sage", "gcn")
+
+
+def _median_ms(fn, n_iters: int) -> float:
+    times = []
+    for _ in range(n_iters):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(times))
+
+
+def bench_cell(ds, variant: str, backbone: str, use_pallas: bool, *,
+               batch_size: int, hidden: int, n_iters: int, warmup: int = 2):
+    tup = next(Bt.batch_iterator(ds, batch_size, rng=np.random.default_rng(0),
+                                 shuffle=False))
+    batch = G.GSTBatch({k: jnp.asarray(v) for k, v in tup[0].items()},
+                       jnp.asarray(tup[1]), jnp.asarray(tup[2]),
+                       jnp.asarray(tup[3]))
+    cfg = GNNConfig(backbone=backbone, n_feat=ds.x.shape[-1], hidden=hidden,
+                    use_pallas=use_pallas)
+    enc = make_encode_fn(cfg)
+    key = jax.random.key(0)
+    bb = gnn_init(key, cfg)
+    head = G.head_init(jax.random.fold_in(key, 1), hidden, 5, "mlp")
+    opt = make_optimizer("adam", lr=1e-3)
+    state = G.TrainState(bb, head, opt.init((bb, head)),
+                         init_table(ds.n, ds.j_max, hidden),
+                         jnp.zeros((), jnp.int32))
+    step = jax.jit(G.make_train_step(
+        enc, opt, G.VARIANTS[variant], keep_prob=0.5,
+        use_pallas=use_pallas), donate_argnums=(0,))
+    eval_step = jax.jit(G.make_eval_step(enc, use_pallas=use_pallas))
+
+    seg_flat = {k: v.reshape((-1,) + v.shape[2:])
+                for k, v in batch.seg_inputs.items()}
+    n_kernel_calls = count_pallas_calls(lambda p: enc(p, seg_flat)[0], bb)
+
+    # warmup (compile) then timed loop; state threads through donation
+    holder = {"state": state, "i": 0}
+
+    def one_train():
+        holder["state"], m = step(holder["state"], batch,
+                                  jax.random.key(holder["i"]))
+        holder["i"] += 1
+        return m["loss"]
+
+    for _ in range(warmup):
+        one_train()
+    train_ms = _median_ms(one_train, n_iters)
+
+    def one_eval():
+        return eval_step(holder["state"], batch)["loss"]
+
+    one_eval()
+    eval_ms = _median_ms(one_eval, n_iters)
+    return {
+        "variant": variant,
+        "backbone": backbone,
+        "use_pallas": use_pallas,
+        "train_ms": round(train_ms, 3),
+        "eval_ms": round(eval_ms, 3),
+        "pallas_calls_encode_fwd": n_kernel_calls,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--out", default=os.path.join(_REPO, "BENCH_gst_step.json"))
+    ap.add_argument("--n-graphs", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--max-seg-nodes", type=int, default=32)
+    args = ap.parse_args()
+    n_graphs = args.n_graphs or (16 if args.quick else 32)
+    n_iters = args.iters or (5 if args.quick else 20)
+
+    graphs = D.make_malnet_like(n_graphs=n_graphs, seed=0)
+    ds = Bt.segment_dataset(graphs, args.max_seg_nodes, method="bfs", seed=0)
+
+    results = []
+    print(f"{'variant':8s} {'backbone':8s} {'path':9s} "
+          f"{'train ms':>9s} {'eval ms':>8s} {'kernels':>7s}")
+    for variant in VARIANTS:
+        for backbone in BACKBONES:
+            for use_pallas in (False, True):
+                row = bench_cell(ds, variant, backbone, use_pallas,
+                                 batch_size=args.batch_size,
+                                 hidden=args.hidden, n_iters=n_iters)
+                results.append(row)
+                print(f"{variant:8s} {backbone:8s} "
+                      f"{'pallas' if use_pallas else 'reference':9s} "
+                      f"{row['train_ms']:9.2f} {row['eval_ms']:8.2f} "
+                      f"{row['pallas_calls_encode_fwd']:7d}", flush=True)
+
+    by_key = {(r["variant"], r["backbone"], r["use_pallas"]): r
+              for r in results}
+    hot = []
+    for backbone in BACKBONES:
+        ref_row = by_key[("gst_efd", backbone, False)]
+        pal_row = by_key[("gst_efd", backbone, True)]
+        hot.append({
+            "backbone": backbone,
+            "train_ms_reference": ref_row["train_ms"],
+            "train_ms_pallas": pal_row["train_ms"],
+            "train_ratio_pallas_over_reference":
+                round(pal_row["train_ms"] / max(ref_row["train_ms"], 1e-9), 3),
+        })
+
+    payload = {
+        "benchmark": "gst_step",
+        "unit": "ms_per_iter",
+        # gst_efd is the paper's complete method — the hot path this repo
+        # optimizes.  On CPU both paths run the same jnp/XLA ops except the
+        # kernels execute in Pallas interpret mode (structure check, not
+        # silicon speed); on TPU the one-hot matmuls land on the MXU.
+        "hot_path_summary": hot,
+        "config": {
+            "n_graphs": n_graphs, "batch_size": args.batch_size,
+            "hidden": args.hidden, "max_seg_nodes": args.max_seg_nodes,
+            "j_max": ds.j_max, "e_max": ds.e_max, "iters": n_iters,
+            "quick": args.quick,
+        },
+        "env": {
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "pallas_interpret": jax.default_backend() != "tpu",
+            "donated_train_state": True,
+        },
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core import embedding_table as tbl
 from repro.core import segment as seg
+from repro.kernels import ops as kops
 from repro.models.common import dense_init
 
 
@@ -136,6 +137,44 @@ class TrainState(NamedTuple):
     step: jnp.ndarray
 
 
+def _fused_sed_pool(h, seg_valid, fresh_mask, drop_mask, stale_valid, *,
+                    keep_prob: float, num_sampled: int, agg: str):
+    """Eq. 1 η-weighting + ⊕ pooling in ONE fused kernel pass (sed_pool).
+
+    Uninitialized stale slots are folded into the drop mask (η = 0), which is
+    exactly what the reference path's ``eta * where(fresh, 1, stale_valid)``
+    correction does.
+    """
+    drop_arg = 1.0 - (1.0 - drop_mask) * stale_valid.astype(jnp.float32)
+    return kops.sed_aggregate(
+        h, seg_valid.astype(jnp.float32), fresh_mask.astype(jnp.float32),
+        drop_arg, keep_prob=keep_prob, num_sampled=num_sampled, agg=agg,
+        use_pallas=True)
+
+
+def _fused_plain_pool(h, seg_valid, *, agg: str):
+    """η = 1 pooling through the same fused kernel (eval / finetune path):
+    with keep_prob = 1 every Eq.-1 weight collapses to the validity mask."""
+    valid = seg_valid.astype(jnp.float32)
+    return kops.sed_aggregate(h, valid, valid, jnp.zeros_like(valid),
+                              keep_prob=1.0, num_sampled=1, agg=agg,
+                              use_pallas=True)
+
+
+def _scalar_head_preds(scal, seg_valid, eta, agg: str, pool=None):
+    """Pool (B, J) per-segment scalar predictions into (B,) graph preds.
+
+    pool: optional fused (B, J, 1) -> (B, 1) kernel pooling (already carrying
+    its η weighting); None = the reference η-weighted sum.  Shared by the
+    train / eval / finetune steps so the two paths can't drift per-step.
+    """
+    if pool is not None:
+        return pool(scal[..., None])[..., 0]
+    denom = (jnp.maximum(jnp.sum(seg_valid, -1), 1.0)
+             if agg == "mean" else 1.0)
+    return jnp.sum(scal * eta, axis=-1) / denom
+
+
 # ---------------------------------------------------------------------------
 # step builders
 # ---------------------------------------------------------------------------
@@ -152,11 +191,19 @@ def make_train_step(
     loss_kind: str = "ce",
     agg: str = "mean",
     aux_weight: float = 1e-2,
+    use_pallas: bool = False,
 ):
     """Returns ``step(state, batch, rng) -> (state, metrics)`` implementing
-    Algorithm 1 (gst*) / Algorithm 2 lines 1-10 (e-variants)."""
+    Algorithm 1 (gst*) / Algorithm 2 lines 1-10 (e-variants).
+
+    use_pallas: for the SED variants (gst_ed / gst_efd) the Eq.-1 η-weighting
+    and the ⊕ pooling run as ONE fused sed_pool kernel pass over the
+    (B, J, d) tensor instead of the multi-HBM-pass jnp composition.  The jnp
+    path stays the oracle (parity asserted in tests/test_fused_path.py).
+    """
     S = num_sampled
     loss_pair = ce_loss if loss_kind == "ce" else pairwise_hinge_loss
+    fused_sed = use_pallas and variant.use_sed and not variant.sampled_only
 
     def step(state: TrainState, batch: GSTBatch, rng):
         B, J = batch.seg_valid.shape
@@ -178,8 +225,10 @@ def make_train_step(
             stale_valid = jnp.zeros_like(batch.seg_valid)
 
         # ---- SED / η weights (Eq. 1) ------------------------------------
+        drop_mask = None
         if variant.use_sed:
-            eta, _ = seg.sed_weights(r_sed, batch.seg_valid, fresh_mask, keep_prob, S)
+            eta, drop_mask = seg.sed_weights(r_sed, batch.seg_valid,
+                                             fresh_mask, keep_prob, S)
             eta = eta * jnp.where(
                 fresh_mask > 0, 1.0,
                 stale_valid.astype(jnp.float32))  # uninitialized stale -> 0
@@ -209,14 +258,23 @@ def make_train_step(
             if head_mode == "segment_sum":
                 # per-segment scalar predictions; F' = Σ (paper §5.3)
                 scal = head_apply(head, h_comb, "segment_sum")        # (B, J)
-                denom = jnp.sum(batch.seg_valid, -1) if agg == "mean" else 1.0
-                preds = jnp.sum(scal * eta, axis=-1) / denom
+                pool = (lambda x: _fused_sed_pool(
+                    x, batch.seg_valid, fresh_mask, drop_mask, stale_valid,
+                    keep_prob=keep_prob, num_sampled=S, agg=agg)
+                ) if fused_sed else None
+                preds = _scalar_head_preds(scal, batch.seg_valid, eta, agg,
+                                           pool)
                 loss, metric = loss_pair(preds, batch.labels)
             else:
                 if variant.sampled_only:
                     # GST-One: mean over the sampled segments only
                     h_graph = jnp.sum(
                         h_comb * fresh_mask[..., None].astype(h_comb.dtype), 1) / S
+                elif fused_sed:
+                    h_graph = _fused_sed_pool(
+                        h_comb, batch.seg_valid, fresh_mask, drop_mask,
+                        stale_valid, keep_prob=keep_prob, num_sampled=S,
+                        agg=agg)
                 else:
                     h_graph = seg.aggregate(h_comb, eta, batch.seg_valid, agg)
                 out = head_apply(head, h_graph, "mlp")
@@ -249,7 +307,8 @@ def make_train_step(
 
 
 def make_eval_step(encode_fn: Callable, *, head_mode: str = "mlp",
-                   loss_kind: str = "ce", agg: str = "mean"):
+                   loss_kind: str = "ce", agg: str = "mean",
+                   use_pallas: bool = False):
     """Test-time: every segment fresh (paper's P(⊕ h_j, y) distribution)."""
     loss_pair = ce_loss if loss_kind == "ce" else pairwise_hinge_loss
 
@@ -260,11 +319,15 @@ def make_eval_step(encode_fn: Callable, *, head_mode: str = "mlp",
         eta = batch.seg_valid.astype(jnp.float32)
         if head_mode == "segment_sum":
             scal = head_apply(state.head, h_all, "segment_sum")
-            denom = jnp.sum(batch.seg_valid, -1) if agg == "mean" else 1.0
-            preds = jnp.sum(scal * eta, axis=-1) / denom
+            pool = (lambda x: _fused_plain_pool(x, batch.seg_valid, agg=agg)
+                    ) if use_pallas else None
+            preds = _scalar_head_preds(scal, batch.seg_valid, eta, agg, pool)
             loss, metric = loss_pair(preds, batch.labels)
         else:
-            h_graph = seg.aggregate(h_all, eta, batch.seg_valid, agg)
+            if use_pallas:
+                h_graph = _fused_plain_pool(h_all, batch.seg_valid, agg=agg)
+            else:
+                h_graph = seg.aggregate(h_all, eta, batch.seg_valid, agg)
             out = head_apply(state.head, h_graph, "mlp")
             if loss_kind == "ce":
                 loss, metric = loss_pair(out, batch.labels)
@@ -290,16 +353,37 @@ def make_refresh_step(encode_fn: Callable):
     return step
 
 
-def make_finetune_step(optimizer, *, loss_kind: str = "ce", agg: str = "mean"):
-    """Algorithm 2 lines 13-18: train F' only, inputs from the (fresh) table."""
+def make_finetune_step(optimizer, *, head_mode: str = "mlp",
+                       loss_kind: str = "ce", agg: str = "mean",
+                       use_pallas: bool = False):
+    """Algorithm 2 lines 13-18: train F' only, inputs from the (fresh) table.
+
+    Supports both heads: the MLP graph head F' (pool then predict) and the
+    per-segment scalar head of the TpuGraphs track (predict then Σ / mean),
+    so gst_ef / gst_efd no longer silently skip the finetuning phase on the
+    segment_sum track.
+    """
     loss_pair = ce_loss if loss_kind == "ce" else pairwise_hinge_loss
 
     def step(state: TrainState, batch: GSTBatch):
         h_all, _ = tbl.lookup(state.table, batch.graph_ids)
+        h_all = h_all.astype(jnp.float32)
         eta = batch.seg_valid.astype(jnp.float32)
-        h_graph = seg.aggregate(h_all.astype(jnp.float32), eta, batch.seg_valid, agg)
+        if head_mode != "segment_sum":
+            if use_pallas:
+                h_graph = _fused_plain_pool(h_all, batch.seg_valid, agg=agg)
+            else:
+                h_graph = seg.aggregate(h_all, eta, batch.seg_valid, agg)
 
         def loss_fn(head):
+            if head_mode == "segment_sum":
+                scal = head_apply(head, h_all, "segment_sum")      # (B, J)
+                pool = (lambda x: _fused_plain_pool(x, batch.seg_valid,
+                                                    agg=agg)
+                        ) if use_pallas else None
+                preds = _scalar_head_preds(scal, batch.seg_valid, eta, agg,
+                                           pool)
+                return loss_pair(preds, batch.labels)
             out = head_apply(head, h_graph, "mlp")
             if loss_kind == "ce":
                 return loss_pair(out, batch.labels)

@@ -30,6 +30,9 @@ class ExperimentResult:
     train_metric: float
     test_metric: float
     ms_per_iter: float
+    use_pallas: bool = False
+    finetuned: bool = False      # whether the Algorithm-2 head-finetuning
+                                 # phase (lines 11-18) actually ran
     curve: List[Dict] = field(default_factory=list)
 
 
@@ -57,6 +60,7 @@ def run_experiment(
     seed: int = 0,
     test_frac: float = 0.25,
     record_curve: bool = False,
+    use_pallas: bool = False,
 ) -> ExperimentResult:
     var = G.VARIANTS[variant]
     if dataset == "malnet":
@@ -81,7 +85,8 @@ def run_experiment(
     ds_test = Bt.segment_dataset(test_graphs, max_seg_nodes, method=partition,
                                  seed=seed, j_max=ds.j_max, e_max=ds.e_max)
 
-    cfg = GNNConfig(backbone=backbone, n_feat=graphs[0].x.shape[1], hidden=hidden)
+    cfg = GNNConfig(backbone=backbone, n_feat=graphs[0].x.shape[1],
+                    hidden=hidden, use_pallas=use_pallas)
     enc = make_encode_fn(cfg)
     key = jax.random.key(seed)
     bb = gnn_init(key, cfg)
@@ -91,12 +96,16 @@ def run_experiment(
                          init_table(ds.n, ds.j_max, hidden),
                          jnp.zeros((), jnp.int32))
 
+    # TrainState is donated through the hot steps so the (n, J, d) embedding
+    # table scatters in-place instead of copying the largest array each iter.
     step = jax.jit(G.make_train_step(
         enc, opt, var, num_sampled=num_sampled, keep_prob=keep_prob,
-        head_mode=head_mode, loss_kind=loss_kind, agg=agg))
+        head_mode=head_mode, loss_kind=loss_kind, agg=agg,
+        use_pallas=use_pallas), donate_argnums=(0,))
     eval_step = jax.jit(G.make_eval_step(enc, head_mode=head_mode,
-                                         loss_kind=loss_kind, agg=agg))
-    refresh = jax.jit(G.make_refresh_step(enc))
+                                         loss_kind=loss_kind, agg=agg,
+                                         use_pallas=use_pallas))
+    refresh = jax.jit(G.make_refresh_step(enc), donate_argnums=(0,))
 
     def evaluate(ds_, st):
         ms, ws = [], []
@@ -126,15 +135,21 @@ def run_experiment(
                           "test": evaluate(ds_test, state)})
 
     # ---- head finetuning phase (Algorithm 2 lines 11-18) -----------------
-    if var.finetune_head and head_mode == "mlp":
+    # Runs for BOTH head modes: the MLP graph head and the TpuGraphs
+    # per-segment scalar head finetune from the refreshed table.
+    finetuned = False
+    if var.finetune_head:
         for tup in Bt.batch_iterator(ds, batch_size, rng=brng, shuffle=False):
             state = refresh(state, _to_batch(*tup))
         ft_opt = make_optimizer("adam", lr=lr * 0.5)
         state = state._replace(opt_state=ft_opt.init(state.head))
-        ft_step = jax.jit(G.make_finetune_step(ft_opt, loss_kind=loss_kind, agg=agg))
+        ft_step = jax.jit(G.make_finetune_step(
+            ft_opt, head_mode=head_mode, loss_kind=loss_kind, agg=agg,
+            use_pallas=use_pallas), donate_argnums=(0,))
         for fe in range(finetune_epochs):
             for tup in Bt.batch_iterator(ds, batch_size, rng=brng):
                 state, m = ft_step(state, _to_batch(*tup))
+                finetuned = True
             if record_curve:
                 curve.append({"epoch": epochs + fe, "train": float(m["metric"]),
                               "test": evaluate(ds_test, state)})
@@ -146,4 +161,5 @@ def run_experiment(
         variant=variant, backbone=backbone,
         train_metric=last_train,
         test_metric=evaluate(ds_test, state),
-        ms_per_iter=ms_per_iter, curve=curve)
+        ms_per_iter=ms_per_iter, use_pallas=use_pallas,
+        finetuned=finetuned, curve=curve)

@@ -32,8 +32,13 @@ class GNNConfig:
     n_post: int = 1
     num_heads: int = 4           # gps global attention heads
     use_pallas: bool = False     # route neighbor aggregation through the
-                                 # segment_spmm Pallas kernel (TPU target;
-                                 # interpret mode on CPU — tests only)
+                                 # batched segment_spmm Pallas kernel: ONE
+                                 # kernel launch per message-passing layer
+                                 # over all B·S segments (TPU target;
+                                 # interpret mode on CPU).  gcn + sage only;
+                                 # gps falls back to the jnp path (its
+                                 # per-edge vector messages don't fit the
+                                 # scalar-edge-weight SpMM form).
 
 
 def _prelu_init(dtype=jnp.float32):
@@ -89,21 +94,10 @@ def gnn_init(key, cfg: GNNConfig, dtype=jnp.float32):
     return p
 
 
-def _agg_mean(h_src, dst, edge_valid, m, *, src=None, h_full=None,
-              use_pallas=False):
-    """Masked mean aggregation of messages at dst nodes.
-
-    use_pallas (requires src + h_full=(m, d) node features): the reduction
-    runs through the segment_spmm kernel (one-hot MXU matmuls) instead of
-    jax.ops.segment_sum — identical semantics, TPU-tiled execution.
-    """
-    if use_pallas and src is not None and h_full is not None:
-        from repro.kernels.segment_spmm import segment_spmm
-        summed = segment_spmm(h_full, src, dst, edge_valid,
-                              interpret=jax.default_backend() != "tpu")
-    else:
-        msg = h_src * edge_valid[:, None]
-        summed = jax.ops.segment_sum(msg, dst, num_segments=m)
+def _agg_mean(h_src, dst, edge_valid, m):
+    """Masked mean aggregation of messages at dst nodes (jnp reference)."""
+    msg = h_src * edge_valid[:, None]
+    summed = jax.ops.segment_sum(msg, dst, num_segments=m)
     deg = jax.ops.segment_sum(edge_valid, dst, num_segments=m)
     return summed / jnp.maximum(deg, 1.0)[:, None], deg
 
@@ -120,8 +114,7 @@ def _mp_layer(p, cfg: GNNConfig, h, edges, edge_valid, node_valid):
         out = _prelu(p["prelu"], (h * (norm ** 2)[:, None] + agg) @ p["w"])
         return out * node_valid[:, None]
     if cfg.backbone == "sage":
-        mean_nbr, _ = _agg_mean(h[src], dst, edge_valid, m, src=src, h_full=h,
-                                use_pallas=cfg.use_pallas)
+        mean_nbr, _ = _agg_mean(h[src], dst, edge_valid, m)
         out = _prelu(p["prelu"], h @ p["w_self"] + mean_nbr @ p["w_nbr"])
         return out * node_valid[:, None]
     if cfg.backbone == "gps":
@@ -159,14 +152,81 @@ def _encode_one(params, cfg: GNNConfig, x, edges, edge_valid, node_valid):
     return jnp.sum(h, axis=0) / denom  # mean pool over valid nodes
 
 
+def _batched_degree(dst, edge_valid, m):
+    """(N, e) dst/valid -> (N, m) in-degree per segment (cheap O(e) reduce)."""
+    return jax.vmap(
+        lambda d, v: jax.ops.segment_sum(v, d, num_segments=m))(dst, edge_valid)
+
+
+def _encode_batched(params, cfg: GNNConfig, seg_inputs):
+    """Fused execution path: every message-passing layer is ONE batched
+    ``segment_spmm`` pallas_call over all N = B·S padded segments, instead of
+    N vmapped launches.  Semantically identical to vmap(_encode_one)
+    (asserted in tests/test_fused_path.py); gcn/sage only.
+
+    GCN's symmetric normalization folds into the kernel's scalar edge
+    weights:  w_e = norm[src_e] · norm[dst_e] · edge_valid_e, so
+    Σ_e w_e h[src_e] = norm[v] · Σ_{e→v} norm[src_e] h[src_e].
+    """
+    from repro.kernels.ops import batched_neighbor_sum
+
+    x = seg_inputs["x"]                       # (N, m, F)
+    edges = seg_inputs["edges"]               # (N, e, 2)
+    ev = seg_inputs["edge_valid"]             # (N, e)
+    nv = seg_inputs["node_valid"]             # (N, m)
+    src, dst = edges[..., 0], edges[..., 1]
+    m = x.shape[1]
+
+    h = x
+    for lp in params["pre"]:
+        h = _prelu(lp["prelu"], h @ lp["w"] + lp["b"])
+    h = h * nv[..., None]
+    # degree / norm / edge weights depend only on the graph structure —
+    # loop-invariant across message-passing layers, computed once
+    if cfg.backbone == "gcn":
+        deg = _batched_degree(dst, ev, m) + 1.0
+        norm = jax.lax.rsqrt(deg)                              # (N, m)
+        w = (jnp.take_along_axis(norm, src, axis=1)
+             * jnp.take_along_axis(norm, dst, axis=1) * ev)
+    elif cfg.backbone == "sage":
+        deg_c = jnp.maximum(_batched_degree(dst, ev, m), 1.0)
+    else:
+        raise ValueError(f"batched pallas path does not support "
+                         f"backbone={cfg.backbone!r}")
+    for lp in params["mp"]:
+        if cfg.backbone == "gcn":
+            agg = batched_neighbor_sum(h, src, dst, w)
+            h = _prelu(lp["prelu"],
+                       (h * (norm ** 2)[..., None] + agg) @ lp["w"])
+        else:
+            summed = batched_neighbor_sum(h, src, dst, ev)
+            mean_nbr = summed / deg_c[..., None]
+            h = _prelu(lp["prelu"], h @ lp["w_self"] + mean_nbr @ lp["w_nbr"])
+        h = h * nv[..., None]
+    for lp in params["post"]:
+        h = _prelu(lp["prelu"], h @ lp["w"] + lp["b"])
+    h = h * nv[..., None]
+    denom = jnp.maximum(jnp.sum(nv, axis=1), 1.0)
+    return jnp.sum(h, axis=1) / denom[:, None]
+
+
 def make_encode_fn(cfg: GNNConfig) -> Callable:
     """Returns encode_fn(params, seg_inputs) -> (emb (N, hidden), aux=0.)
-    matching the GST core's backbone interface."""
+    matching the GST core's backbone interface.
+
+    cfg.use_pallas (gcn/sage): the batched fused path — one pallas_call per
+    message-passing layer for the whole segment batch.  Otherwise (or for
+    gps): the jnp reference path, vmapped over segments.
+    """
+    fused = cfg.use_pallas and cfg.backbone in ("gcn", "sage")
 
     def encode(params, seg_inputs):
-        f = partial(_encode_one, params, cfg)
-        emb = jax.vmap(f)(seg_inputs["x"], seg_inputs["edges"],
-                          seg_inputs["edge_valid"], seg_inputs["node_valid"])
+        if fused:
+            emb = _encode_batched(params, cfg, seg_inputs)
+        else:
+            f = partial(_encode_one, params, cfg)
+            emb = jax.vmap(f)(seg_inputs["x"], seg_inputs["edges"],
+                              seg_inputs["edge_valid"], seg_inputs["node_valid"])
         return emb, jnp.zeros((), jnp.float32)
 
     return encode

@@ -1,15 +1,21 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
-segment_spmm  -- GNN neighbor aggregation as one-hot MXU matmuls
-sed_pool      -- fused SED (Eq. 1) + segment pooling
+segment_spmm  -- GNN neighbor aggregation as one-hot MXU matmuls; the batched
+                 variant runs every segment of a GST batch in ONE launch
+sed_pool      -- fused SED (Eq. 1) + segment pooling, custom-VJP differentiable
 swa_attention -- blockwise sliding-window flash attention (long_500k prefill)
 
 ops.py holds the jit'd wrappers (interpret=True on CPU); ref.py the oracles.
 """
 from repro.kernels.ops import (
+    batched_neighbor_sum,
+    count_pallas_calls,
     neighbor_aggregate,
     sed_aggregate,
     sliding_window_attention,
 )
 
-__all__ = ["neighbor_aggregate", "sed_aggregate", "sliding_window_attention"]
+__all__ = [
+    "batched_neighbor_sum", "count_pallas_calls", "neighbor_aggregate",
+    "sed_aggregate", "sliding_window_attention",
+]

@@ -14,11 +14,60 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.sed_pool import sed_pool as _sed_pool
 from repro.kernels.segment_spmm import segment_spmm as _segment_spmm
+from repro.kernels.segment_spmm import segment_spmm_batched as _segment_spmm_batched
 from repro.kernels.swa_attention import swa_attention as _swa_attention
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def batched_neighbor_sum(h, src, dst, w, *, use_pallas: bool = True):
+    """Batched weighted scatter-add over N segments in ONE kernel launch.
+
+    h: (N, m, d); src/dst/w: (N, e).  The GNN hot path: every message-passing
+    layer of graphs/gnn.py::_encode_batched makes exactly one call here,
+    and this wrapper owns the interpret-on-CPU decision.
+    """
+    if use_pallas:
+        return _segment_spmm_batched(h, src, dst, w,
+                                     interpret=_default_interpret())
+    return ref.segment_spmm_batched_ref(h, src, dst, w)
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` eqns in fn's jaxpr (recursing into sub-jaxprs).
+
+    The fused-path contract (one batched kernel launch per message-passing
+    layer rather than one per vmapped segment) is asserted with this in
+    tests/test_fused_path.py and recorded by benchmarks/bench_step.py.
+    """
+    try:  # jax >= 0.5 moved the jaxpr types; 0.4.x only has jax.core
+        from jax.extend import core as jcore
+    except ImportError:  # pragma: no cover
+        from jax import core as jcore
+
+    def subjaxprs(params):
+        for v in params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for u in vs:
+                if isinstance(u, jcore.ClosedJaxpr):
+                    yield u.jaxpr
+                elif isinstance(u, jcore.Jaxpr):
+                    yield u
+
+    def walk(jaxpr):
+        n = 0
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for sub in subjaxprs(eqn.params):
+                n += walk(sub)
+        return n
+
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return walk(closed.jaxpr)
 
 
 @partial(jax.jit, static_argnames=("num_nodes", "use_pallas"))

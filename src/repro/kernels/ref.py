@@ -14,6 +14,34 @@ def segment_spmm_ref(h, src, dst, w, num_nodes: int):
     return jax.ops.segment_sum(msg, dst, num_segments=num_nodes)
 
 
+def segment_spmm_batched_ref(h, src, dst, w):
+    """Batched oracle: out[n, v] = Σ_{e: dst[n,e]=v} w[n,e] · h[n, src[n,e]].
+
+    h: (N, m, d); src/dst: (N, e) int32; w: (N, e) float.
+    """
+    m = h.shape[1]
+    return jax.vmap(lambda hh, ss, dd, ww: segment_spmm_ref(hh, ss, dd, ww, m))(
+        h, src, dst, w)
+
+
+def sed_eta(seg_valid, fresh_mask, drop_mask, keep_prob: float,
+            num_sampled: int):
+    """The Eq.-1 η weights from the three masks: (eta (B, J), J_i (B, 1)).
+
+    Single source of truth shared by the sed_pool oracle AND the kernel's
+    custom VJP (sed_pool.py) so forward reference and backward cannot drift;
+    the in-kernel computation mirrors this formula in-register.
+    """
+    valid = seg_valid.astype(jnp.float32)
+    fresh = fresh_mask.astype(jnp.float32)
+    drop = drop_mask.astype(jnp.float32)
+    J_i = jnp.sum(valid, axis=-1, keepdims=True)
+    eta_fresh = keep_prob + (1.0 - keep_prob) * J_i / float(num_sampled)
+    stale = valid * (1.0 - fresh)
+    eta = (fresh * eta_fresh + stale * (1.0 - drop)) * valid
+    return eta, J_i
+
+
 def sed_pool_ref(h, seg_valid, fresh_mask, drop_mask, keep_prob: float,
                  num_sampled: int, agg: str = "mean"):
     """Fused SED η-weighting (Eq. 1) + segment aggregation ⊕.
@@ -21,13 +49,8 @@ def sed_pool_ref(h, seg_valid, fresh_mask, drop_mask, keep_prob: float,
     h: (B, J, d); masks: (B, J).  Matches core.segment.sed_weights +
     core.segment.aggregate composed (given the same drop draw).
     """
-    seg_valid = seg_valid.astype(jnp.float32)
-    fresh = fresh_mask.astype(jnp.float32)
-    drop = drop_mask.astype(jnp.float32)
-    J_i = jnp.sum(seg_valid, axis=-1, keepdims=True)
-    eta_fresh = keep_prob + (1.0 - keep_prob) * J_i / float(num_sampled)
-    stale = seg_valid * (1.0 - fresh)
-    eta = (fresh * eta_fresh + stale * (1.0 - drop)) * seg_valid
+    eta, J_i = sed_eta(seg_valid, fresh_mask, drop_mask, keep_prob,
+                       num_sampled)
     s = jnp.sum(h * eta[..., None].astype(h.dtype), axis=1)
     if agg == "sum":
         return s

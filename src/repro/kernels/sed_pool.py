@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import sed_eta
+
 
 DEFAULT_B_BLK = 8
 DEFAULT_D_BLK = 128
@@ -25,23 +27,19 @@ DEFAULT_D_BLK = 128
 def _sed_pool_kernel(h_ref, valid_ref, fresh_ref, drop_ref, out_ref, *,
                      keep_prob: float, num_sampled: int, agg: str):
     h = h_ref[...]                           # (b_blk, J, d_blk)
-    valid = valid_ref[...].astype(jnp.float32)   # (b_blk, J)
-    fresh = fresh_ref[...].astype(jnp.float32)
-    drop = drop_ref[...].astype(jnp.float32)
-    J_i = jnp.sum(valid, axis=-1, keepdims=True)           # (b_blk, 1)
-    eta_fresh = keep_prob + (1.0 - keep_prob) * J_i / float(num_sampled)
-    stale = valid * (1.0 - fresh)
-    eta = (fresh * eta_fresh + stale * (1.0 - drop)) * valid  # (b_blk, J)
+    # η built in-register from the three (b_blk, J) mask blocks — same shared
+    # formula as the oracle and the custom VJP (ref.sed_eta)
+    eta, J_i = sed_eta(valid_ref[...], fresh_ref[...], drop_ref[...],
+                       keep_prob, num_sampled)
     s = jnp.sum(h.astype(jnp.float32) * eta[..., None], axis=1)  # (b_blk, d_blk)
     if agg == "mean":
         s = s / jnp.maximum(J_i, 1.0)
     out_ref[...] = s.astype(out_ref.dtype)
 
 
-def sed_pool(h, seg_valid, fresh_mask, drop_mask, *, keep_prob: float,
-             num_sampled: int, agg: str = "mean", b_blk: int = DEFAULT_B_BLK,
-             d_blk: int = DEFAULT_D_BLK, interpret: bool = False):
-    """h: (B, J, d); masks: (B, J) -> (B, d) pooled graph embedding."""
+def _sed_pool_raw(h, seg_valid, fresh_mask, drop_mask, keep_prob: float,
+                  num_sampled: int, agg: str, b_blk: int, d_blk: int,
+                  interpret: bool):
     B, J, d = h.shape
     b_blk = min(b_blk, B)
     d_blk = min(d_blk, d)
@@ -70,3 +68,50 @@ def sed_pool(h, seg_valid, fresh_mask, drop_mask, *, keep_prob: float,
         interpret=interpret,
     )(h, seg_valid, fresh_mask, drop_mask)
     return out[:B, :d]
+
+
+# ``pallas_call`` has no transpose rule, so reverse-mode AD through the fused
+# pooling needs an explicit VJP.  ∂(Σ_j η_j h_j)/∂h_j = η_j (broadcast over d);
+# the masks are sampling artifacts with no useful cotangent (they come from
+# top_k / comparisons, where grads vanish anyway) and get zeros.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _sed_pool(h, seg_valid, fresh_mask, drop_mask, keep_prob, num_sampled,
+              agg, b_blk, d_blk, interpret):
+    return _sed_pool_raw(h, seg_valid, fresh_mask, drop_mask, keep_prob,
+                         num_sampled, agg, b_blk, d_blk, interpret)
+
+
+def _sed_fwd(h, seg_valid, fresh_mask, drop_mask, keep_prob, num_sampled,
+             agg, b_blk, d_blk, interpret):
+    out = _sed_pool_raw(h, seg_valid, fresh_mask, drop_mask, keep_prob,
+                        num_sampled, agg, b_blk, d_blk, interpret)
+    dtype_token = jnp.zeros((0,), h.dtype)
+    return out, (seg_valid, fresh_mask, drop_mask, dtype_token)
+
+
+def _sed_bwd(keep_prob, num_sampled, agg, b_blk, d_blk, interpret, res, g):
+    seg_valid, fresh_mask, drop_mask, dtype_token = res
+    eta, J_i = sed_eta(seg_valid, fresh_mask, drop_mask, keep_prob,
+                       num_sampled)
+    g = g.astype(jnp.float32)
+    if agg == "mean":
+        g = g / jnp.maximum(J_i, 1.0)
+    dh = (g[:, None, :] * eta[..., None]).astype(dtype_token.dtype)
+    return (dh, jnp.zeros_like(seg_valid), jnp.zeros_like(fresh_mask),
+            jnp.zeros_like(drop_mask))
+
+
+_sed_pool.defvjp(_sed_fwd, _sed_bwd)
+
+
+def sed_pool(h, seg_valid, fresh_mask, drop_mask, *, keep_prob: float,
+             num_sampled: int, agg: str = "mean", b_blk: int = DEFAULT_B_BLK,
+             d_blk: int = DEFAULT_D_BLK, interpret: bool = False):
+    """h: (B, J, d); masks: (B, J) -> (B, d) pooled graph embedding.
+
+    One fused pallas_call; differentiable wrt h (custom VJP — the mask
+    cotangents are zero, matching the reference path where gradients die at
+    the top_k / comparison that produced them).
+    """
+    return _sed_pool(h, seg_valid, fresh_mask, drop_mask, keep_prob,
+                     num_sampled, agg, b_blk, d_blk, interpret)

@@ -37,8 +37,9 @@ def train_graph(args):
         dataset=args.dataset, backbone=args.backbone, variant=args.variant,
         n_graphs=args.n_graphs, epochs=args.epochs,
         finetune_epochs=args.finetune_epochs, keep_prob=args.keep_prob,
-        seed=args.seed)
-    print(f"[graph/{args.dataset}] {args.backbone} {args.variant}: "
+        seed=args.seed, use_pallas=args.use_pallas)
+    print(f"[graph/{args.dataset}] {args.backbone} {args.variant}"
+          f"{' [pallas]' if args.use_pallas else ''}: "
           f"train={r.train_metric:.3f} test={r.test_metric:.3f} "
           f"{r.ms_per_iter:.1f} ms/iter")
     return r
@@ -65,8 +66,10 @@ def train_seq(args):
     def encode(backbone, seg_inputs):
         return model.encode_segment(backbone, seg_inputs)
 
+    # donate the state so the (n_docs, J, d_model) table updates in place
     step = jax.jit(G.make_train_step(
-        encode, opt, G.VARIANTS[args.variant], keep_prob=args.keep_prob))
+        encode, opt, G.VARIANTS[args.variant], keep_prob=args.keep_prob,
+        use_pallas=args.use_pallas), donate_argnums=(0,))
     rng = np.random.default_rng(args.seed)
     it = 0
     t0 = time.time()
@@ -135,6 +138,10 @@ def main():
     ap.add_argument("--finetune-epochs", type=int, default=10)
     # shared
     ap.add_argument("--variant", default="gst_efd", choices=list(G.VARIANTS))
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route the hot path through the fused Pallas kernels "
+                         "(batched segment_spmm + sed_pool; interpret mode "
+                         "when not on TPU)")
     ap.add_argument("--keep-prob", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--lr", type=float, default=1e-3)

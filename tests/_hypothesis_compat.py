@@ -1,0 +1,76 @@
+"""Deterministic fallback for ``hypothesis`` (tier-1 must collect without it).
+
+When hypothesis is installed (see requirements-dev.txt) the real library is
+re-exported unchanged.  When it is missing, ``given``/``settings``/``st``
+degrade to a tiny deterministic-cases runner: each strategy draws from a
+seeded numpy Generator and the test body runs ``max_examples`` times.  No
+shrinking, no database — just fixed-case coverage so the kernel/GST property
+tests keep running in minimal containers.
+
+Usage in test modules:
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # real hypothesis wins when available
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    def settings(max_examples: int = 10, deadline=None, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            n_default = getattr(fn, "_compat_max_examples", 10)
+
+            # Deliberately takes no parameters: the wrapped test receives all
+            # its arguments from the strategies, and a bare signature keeps
+            # pytest from mistaking strategy names for fixtures.
+            def wrapper():
+                rng = _np.random.default_rng(0)
+                for _ in range(n_default):
+                    fn(**{k: s.draw(rng) for k, s in strategies.items()})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco

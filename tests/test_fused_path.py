@@ -1,0 +1,302 @@
+"""The fused GST hot path: batched segment_spmm, fused SED pooling, donation.
+
+Contract under test (ISSUE 1):
+  * batched segment_spmm ≡ per-segment oracle, forward AND reverse-mode
+  * the cfg.use_pallas encode launches ONE batched pallas_call per
+    message-passing layer (counted in the jaxpr), not one per segment
+  * train/eval/finetune losses match the jnp path across all seven variants
+  * donating TrainState through the jitted step reuses the embedding-table
+    buffer in place (no per-step copy of the largest array in the system)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gst as G
+from repro.core.embedding_table import init_table
+from repro.graphs import batching as Bt
+from repro.graphs import data as D
+from repro.graphs.gnn import GNNConfig, gnn_init, make_encode_fn
+from repro.kernels import ref
+from repro.kernels.ops import count_pallas_calls
+from repro.kernels.segment_spmm import segment_spmm_batched
+from repro.optim import make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# batched kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("N,m,d,e,dtype", [
+    (1, 16, 8, 5, jnp.float32),
+    (5, 48, 40, 130, jnp.float32),
+    (3, 64, 130, 300, jnp.float32),   # d > d_blk-pad boundary
+    (4, 32, 64, 257, jnp.bfloat16),   # e not a block multiple
+])
+def test_batched_spmm_matches_oracle(N, m, d, e, dtype):
+    rng = np.random.default_rng(N * 1000 + e)
+    h = jnp.asarray(rng.normal(size=(N, m, d)), dtype)
+    src = jnp.asarray(rng.integers(0, m, (N, e)), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, m, (N, e)), jnp.int32)
+    w = jnp.asarray(rng.uniform(0, 1, (N, e)) * (rng.uniform(size=(N, e)) > 0.3),
+                    dtype)
+    out = segment_spmm_batched(h, src, dst, w, interpret=True)
+    want = ref.segment_spmm_batched_ref(
+        h.astype(jnp.float32), src, dst, w.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_batched_spmm_gradients_match_oracle():
+    """custom_vjp: ∂/∂h is the transposed SpMM, ∂/∂w the per-edge inner
+    product — both must match jax.grad through the jnp oracle."""
+    rng = np.random.default_rng(7)
+    N, m, d, e = 4, 24, 12, 50
+    h = jnp.asarray(rng.normal(size=(N, m, d)), jnp.float32)
+    src = jnp.asarray(rng.integers(0, m, (N, e)), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, m, (N, e)), jnp.int32)
+    w = jnp.asarray(rng.uniform(0, 1, (N, e)), jnp.float32)
+
+    def f_kernel(h, w):
+        return jnp.sum(jnp.sin(segment_spmm_batched(h, src, dst, w,
+                                                    interpret=True)))
+
+    def f_ref(h, w):
+        return jnp.sum(jnp.sin(ref.segment_spmm_batched_ref(h, src, dst, w)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1))(h, w)
+    gr = jax.grad(f_ref, argnums=(0, 1))(h, w)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# batched encode path: parity + kernel-launch count
+# ---------------------------------------------------------------------------
+
+
+def _flat_segments(n_graphs=2, max_seg_nodes=48, seed=0):
+    graphs = D.make_malnet_like(n_graphs=n_graphs, seed=seed)
+    ds = Bt.segment_dataset(graphs, max_seg_nodes=max_seg_nodes)
+    return {k: jnp.asarray(v.reshape((-1,) + v.shape[2:]))
+            for k, v in ds.seg_inputs(np.arange(n_graphs)).items()}
+
+
+@pytest.mark.parametrize("backbone", ["gcn", "sage"])
+def test_batched_encode_matches_vmap_path(backbone):
+    seg = _flat_segments()
+    cfg0 = GNNConfig(backbone=backbone, n_feat=8, hidden=32, use_pallas=False)
+    cfg1 = GNNConfig(backbone=backbone, n_feat=8, hidden=32, use_pallas=True)
+    params = gnn_init(jax.random.key(0), cfg0)
+    e0, _ = make_encode_fn(cfg0)(params, seg)
+    e1, _ = make_encode_fn(cfg1)(params, seg)
+    np.testing.assert_allclose(np.asarray(e0), np.asarray(e1),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("backbone", ["gcn", "sage"])
+def test_batched_encode_grad_matches_vmap_path(backbone):
+    seg = _flat_segments()
+    cfg0 = GNNConfig(backbone=backbone, n_feat=8, hidden=16, use_pallas=False)
+    cfg1 = GNNConfig(backbone=backbone, n_feat=8, hidden=16, use_pallas=True)
+    params = gnn_init(jax.random.key(1), cfg0)
+
+    def loss(cfg):
+        return lambda p: jnp.sum(make_encode_fn(cfg)(p, seg)[0] ** 2)
+
+    g0 = jax.tree_util.tree_leaves(jax.grad(loss(cfg0))(params))
+    g1 = jax.tree_util.tree_leaves(jax.grad(loss(cfg1))(params))
+    for a, b in zip(g0, g1):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_mp", [1, 3])
+def test_one_pallas_call_per_mp_layer(n_mp):
+    """The fused path's whole point: the forward jaxpr contains exactly n_mp
+    pallas_calls (one batched launch per message-passing layer), regardless
+    of how many segments are in the batch."""
+    seg = _flat_segments()
+    cfg = GNNConfig(backbone="sage", n_feat=8, hidden=16, n_mp=n_mp,
+                    use_pallas=True)
+    params = gnn_init(jax.random.key(0), cfg)
+    enc = make_encode_fn(cfg)
+    assert count_pallas_calls(lambda p: enc(p, seg)[0], params) == n_mp
+    # reference path: zero kernel launches
+    cfg0 = GNNConfig(backbone="sage", n_feat=8, hidden=16, n_mp=n_mp,
+                     use_pallas=False)
+    enc0 = make_encode_fn(cfg0)
+    assert count_pallas_calls(lambda p: enc0(p, seg)[0], params) == 0
+
+
+# ---------------------------------------------------------------------------
+# fused train/eval steps vs jnp path, all variants
+# ---------------------------------------------------------------------------
+
+
+def _gnn_setup(variant, use_pallas, head_mode="mlp", loss_kind="ce",
+               agg="mean", hidden=16, num_sampled=1):
+    graphs = D.make_malnet_like(n_graphs=8, seed=0)
+    ds = Bt.segment_dataset(graphs, max_seg_nodes=32)
+    tup = next(Bt.batch_iterator(ds, 4, rng=np.random.default_rng(0),
+                                 shuffle=False))
+    batch = G.GSTBatch({k: jnp.asarray(v) for k, v in tup[0].items()},
+                       jnp.asarray(tup[1]), jnp.asarray(tup[2]),
+                       jnp.asarray(tup[3]) if loss_kind == "ce"
+                       else jnp.asarray(tup[3], jnp.float32))
+    cfg = GNNConfig(backbone="sage", n_feat=8, hidden=hidden,
+                    use_pallas=use_pallas)
+    enc = make_encode_fn(cfg)
+    key = jax.random.key(0)
+    bb = gnn_init(key, cfg)
+    n_out = 5 if head_mode == "mlp" else 1
+    head = G.head_init(jax.random.fold_in(key, 1), hidden, n_out, head_mode)
+    opt = make_optimizer("adam", lr=1e-2)
+    state = G.TrainState(bb, head, opt.init((bb, head)),
+                         init_table(ds.n, ds.j_max, hidden),
+                         jnp.zeros((), jnp.int32))
+    step = jax.jit(G.make_train_step(
+        enc, opt, G.VARIANTS[variant], num_sampled=num_sampled, keep_prob=0.5,
+        head_mode=head_mode, loss_kind=loss_kind, agg=agg,
+        use_pallas=use_pallas))
+    eval_step = jax.jit(G.make_eval_step(enc, head_mode=head_mode,
+                                         loss_kind=loss_kind, agg=agg,
+                                         use_pallas=use_pallas))
+    return state, batch, step, eval_step
+
+
+@pytest.mark.parametrize("variant", list(G.VARIANTS))
+def test_train_step_fused_matches_reference(variant):
+    """Two optimizer steps (exercises table write-back + second-step lookup):
+    losses and metrics must agree between the fused and jnp paths."""
+    traces = {}
+    for up in (False, True):
+        state, batch, step, _ = _gnn_setup(variant, up)
+        ls = []
+        for i in range(2):
+            state, m = step(state, batch, jax.random.key(3))
+            ls.append((float(m["loss"]), float(m["metric"])))
+        traces[up] = ls
+    for (l0, m0), (l1, m1) in zip(traces[False], traces[True]):
+        np.testing.assert_allclose(l0, l1, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(m0, m1, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("head_mode,loss_kind,agg", [
+    ("mlp", "ce", "mean"),
+    ("segment_sum", "pairwise_hinge", "sum"),
+])
+def test_eval_step_fused_matches_reference(head_mode, loss_kind, agg):
+    outs = {}
+    for up in (False, True):
+        state, batch, step, eval_step = _gnn_setup(
+            "gst_efd", up, head_mode=head_mode, loss_kind=loss_kind, agg=agg)
+        state, _ = step(state, batch, jax.random.key(0))
+        m = eval_step(state, batch)
+        outs[up] = (float(m["loss"]), float(m["metric"]))
+    np.testing.assert_allclose(outs[False], outs[True], rtol=1e-4, atol=1e-5)
+
+
+def test_segment_sum_train_step_fused_matches_reference():
+    """The TpuGraphs-track shape: scalar per-segment head, hinge loss, Σ-agg,
+    SED variant — the fused path pools the (B, J) scalars through sed_pool."""
+    traces = {}
+    for up in (False, True):
+        state, batch, step, _ = _gnn_setup(
+            "gst_efd", up, head_mode="segment_sum",
+            loss_kind="pairwise_hinge", agg="sum")
+        state, m = step(state, batch, jax.random.key(1))
+        traces[up] = (float(m["loss"]), float(m["metric"]))
+    np.testing.assert_allclose(traces[False], traces[True],
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# finetuning with the scalar head (Algorithm 2 lines 11-18, TpuGraphs track)
+# ---------------------------------------------------------------------------
+
+
+def test_finetune_supports_segment_sum_head():
+    state, batch, step, _ = _gnn_setup(
+        "gst_efd", False, head_mode="segment_sum",
+        loss_kind="pairwise_hinge", agg="sum")
+    state, _ = step(state, batch, jax.random.key(0))
+    cfg = GNNConfig(backbone="sage", n_feat=8, hidden=16)
+    enc = make_encode_fn(cfg)
+    refresh = jax.jit(G.make_refresh_step(enc))
+    state = refresh(state, batch)
+    ft_opt = make_optimizer("adam", lr=1e-2)
+    state = state._replace(opt_state=ft_opt.init(state.head))
+    ft = jax.jit(G.make_finetune_step(ft_opt, head_mode="segment_sum",
+                                      loss_kind="pairwise_hinge", agg="sum"))
+    bb_before, head_before = state.backbone, state.head
+    state, m = ft(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    # backbone untouched, head moved
+    same = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), bb_before, state.backbone)
+    assert max(jax.tree_util.tree_leaves(same)) == 0.0
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), head_before, state.head)
+    assert max(jax.tree_util.tree_leaves(diffs)) > 0
+
+
+def test_run_experiment_finetunes_segment_sum_track():
+    """gst_efd on the TpuGraphs-like dataset must actually run the finetune
+    phase (previously silently skipped) and report it."""
+    from repro.graphs.experiment import run_experiment
+    r = run_experiment(dataset="tpugraphs", backbone="sage", variant="gst_efd",
+                       n_graphs=16, max_seg_nodes=24, epochs=1,
+                       finetune_epochs=1, batch_size=4, hidden=8)
+    assert r.finetuned
+    assert np.isfinite(r.test_metric)
+
+
+# ---------------------------------------------------------------------------
+# donation: the table buffer is reused, not copied
+# ---------------------------------------------------------------------------
+
+
+def test_donated_state_reuses_table_buffer():
+    def encode(w, seg_inputs):
+        x = jax.nn.one_hot(seg_inputs["tokens"], 16) @ w
+        return jnp.mean(x, axis=1), jnp.zeros((), jnp.float32)
+
+    rng = np.random.default_rng(0)
+    d, J, B, n = 8, 4, 4, 256
+    w = jnp.asarray(rng.normal(size=(16, d)), jnp.float32)
+    head = G.head_init(jax.random.key(1), d, 3, "mlp")
+    opt = make_optimizer("adam", lr=1e-2)
+    state = G.TrainState(w, head, opt.init((w, head)), init_table(n, J, d),
+                         jnp.zeros((), jnp.int32))
+    batch = G.GSTBatch(
+        {"tokens": jnp.asarray(rng.integers(0, 16, (B, J, 5)), jnp.int32)},
+        jnp.ones((B, J), jnp.float32), jnp.arange(B, dtype=jnp.int32),
+        jnp.asarray(rng.integers(0, 3, B), jnp.int32))
+    step = jax.jit(G.make_train_step(encode, opt, G.VARIANTS["gst_efd"]),
+                   donate_argnums=(0,))
+    emb0 = state.table.emb
+    ptr0 = emb0.unsafe_buffer_pointer()
+    state, _ = step(state, batch, jax.random.key(0))
+    if not emb0.is_deleted():
+        pytest.skip("backend does not implement input-output aliasing")
+    # the scatter update must have landed in the SAME buffer — no copy of
+    # the largest array in the system
+    assert state.table.emb.unsafe_buffer_pointer() == ptr0
+    ptr1 = state.table.emb.unsafe_buffer_pointer()
+    state, _ = step(state, batch, jax.random.key(1))
+    assert state.table.emb.unsafe_buffer_pointer() == ptr1
+
+
+def test_run_experiment_pallas_smoke():
+    """End-to-end: the plumbed use_pallas flag trains and evaluates."""
+    from repro.graphs.experiment import run_experiment
+    r = run_experiment(dataset="malnet", backbone="gcn", variant="gst_ed",
+                       n_graphs=16, max_seg_nodes=24, epochs=1, batch_size=4,
+                       hidden=8, use_pallas=True)
+    assert r.use_pallas
+    assert np.isfinite(r.test_metric)
