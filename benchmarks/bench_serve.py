@@ -1,0 +1,171 @@
+"""Tracked serving benchmark — the cache-effect anchor for the serve engine.
+
+Replays the same duplicate-heavy synthetic traffic trace through the engine
+twice — cross-request segment cache ON vs OFF (same params, same stream) —
+and records p50/p99 latency, throughput, hit-rate, and encode-kernel launch
+counts, plus a streaming-vs-one-shot parity probe.  The contract asserted
+downstream (CI serve-smoke): the cached run achieves hit_rate > 0 and
+launches FEWER encode kernels than the uncached run on a duplicate-heavy
+trace.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_serve.py           # full trace
+    PYTHONPATH=src python benchmarks/bench_serve.py --quick   # CI-sized
+
+Writes ``BENCH_gst_serve.json`` (repo root by default), merged by config key
+so repeated runs on different backends/configs accumulate instead of
+clobbering.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.isdir(os.path.join(_REPO, "src")) and \
+        os.path.join(_REPO, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gst as G
+from repro.graphs.gnn import encode_segments
+from repro.serve import ServeConfig, ServeEngine, TrafficConfig, make_request_stream
+from repro.serve.engine import SEG_KEYS, graph_to_chunks
+
+
+def run_trace(stream, *, backbone, use_pallas, cache_enabled, window,
+              cache_capacity, seed, warmup):
+    """warmup: None -> replay the FULL stream once first (steady-state
+    measurement: all jit shapes compiled, then the cache is flushed and
+    stats reset); int -> replay only that many requests (cold-ish)."""
+    cfg = ServeConfig(backbone=backbone, use_pallas=use_pallas,
+                      cache_enabled=cache_enabled, cache_capacity=cache_capacity)
+    engine = ServeEngine(cfg, seed=seed)
+    warm = stream if warmup is None else stream[:warmup]
+    if warm:
+        engine.process(warm, window=window)
+        engine.reset_stats()
+        if engine.cache is not None:
+            engine.cache.flush()  # cold contents, warm compile caches
+    engine.process(stream, window=window)
+    return engine, engine.stats.summary()
+
+
+def streaming_parity(engine, graph) -> float:
+    """max |streaming - one-shot| at identical bucket padding."""
+    spec = engine.ladder[-1]
+    ch = graph_to_chunks(graph, spec, engine.cfg.stream_chunk,
+                         partition=engine.cfg.partition,
+                         seed=engine.cfg.partition_seed)
+    flat = {k: jnp.asarray(ch[k].reshape((-1,) + ch[k].shape[2:]))
+            for k in SEG_KEYS}
+    h = encode_segments(engine.params, engine.gnn_cfg, flat)
+    w = jnp.asarray(ch["seg_valid"].reshape(-1))
+    pooled = (h * w[:, None]).sum(0) / jnp.maximum(w.sum(), 1.0)
+    ref = np.asarray(G.head_apply(engine.head, pooled, "mlp"))
+    got = engine.predict_streaming(graph)
+    return float(np.abs(got - ref).max())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--out", default=os.path.join(_REPO, "BENCH_gst_serve.json"))
+    ap.add_argument("--backbone", default="sage")
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--unique", type=int, default=None)
+    ap.add_argument("--duplicate-rate", type=float, default=0.6)
+    ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--cache-capacity", type=int, default=512)
+    ap.add_argument("--warmup", type=int, default=None,
+                    help="warmup requests; default: full-stream warmup "
+                         "(steady-state numbers)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    n_requests = args.requests or (24 if args.quick else 96)
+    n_unique = args.unique or (8 if args.quick else 32)
+
+    tc = TrafficConfig(n_unique=n_unique, n_requests=n_requests,
+                       duplicate_rate=args.duplicate_rate, seed=args.seed)
+    stream = make_request_stream(tc)
+
+    rows = {}
+    for label, cache_enabled in (("cache_on", True), ("cache_off", False)):
+        engine, summary = run_trace(
+            stream, backbone=args.backbone, use_pallas=args.use_pallas,
+            cache_enabled=cache_enabled, window=args.window,
+            cache_capacity=args.cache_capacity, seed=args.seed,
+            warmup=args.warmup)
+        rows[label] = summary
+        c = summary.get("cache") or {}
+        print(f"{label:10s} p50 {summary['latency_p50_ms']:8.2f} ms  "
+              f"p99 {summary['latency_p99_ms']:8.2f} ms  "
+              f"launches {summary['encode_launches']:4d}  "
+              f"encoded {summary['encoded_segments']:5d}  "
+              f"hit-rate {c.get('hit_rate', 0.0):.2f}", flush=True)
+
+    parity = streaming_parity(engine, stream[0])
+    print(f"streaming parity: max diff {parity:.2e}")
+
+    on, off = rows["cache_on"], rows["cache_off"]
+    cache_effect = {
+        "hit_rate": on["cache"]["hit_rate"],
+        "encode_launches_on": on["encode_launches"],
+        "encode_launches_off": off["encode_launches"],
+        "encoded_segments_on": on["encoded_segments"],
+        "encoded_segments_off": off["encoded_segments"],
+        "launch_ratio_on_over_off":
+            round(on["encode_launches"] / max(off["encode_launches"], 1), 3),
+    }
+
+    config = {
+        "backbone": args.backbone, "use_pallas": args.use_pallas,
+        "n_requests": n_requests, "n_unique": n_unique,
+        "duplicate_rate": args.duplicate_rate, "window": args.window,
+        "cache_capacity": args.cache_capacity, "warmup": args.warmup,
+        "seed": args.seed, "quick": args.quick,
+    }
+    env = {
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "pallas_interpret": jax.default_backend() != "tpu",
+    }
+    run_key = ",".join(f"{k}={v}" for k, v in sorted(config.items())) + \
+        f",backend={env['backend']}"
+    entry = {
+        "config": config, "env": env, "runs": rows,
+        "cache_effect": cache_effect,
+        "streaming_parity_max_abs_diff": parity,
+    }
+
+    payload = {"benchmark": "gst_serve", "unit": "ms_per_request", "runs": {}}
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                prev = json.load(f)
+            if prev.get("benchmark") == "gst_serve" and isinstance(
+                    prev.get("runs"), dict):
+                payload = prev
+        except (json.JSONDecodeError, OSError):
+            pass
+    # contract gates BEFORE the write: a failing run must not pollute the
+    # tracked benchmark file / CI artifact
+    assert cache_effect["hit_rate"] > 0, "duplicate-heavy trace must hit the cache"
+    assert cache_effect["encode_launches_on"] < cache_effect["encode_launches_off"], \
+        "cache must save encode launches on a duplicate-heavy trace"
+
+    payload["runs"][run_key] = entry
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

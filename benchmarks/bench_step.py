@@ -155,32 +155,58 @@ def main():
                 round(pal_row["train_ms"] / max(ref_row["train_ms"], 1e-9), 3),
         })
 
-    payload = {
-        "benchmark": "gst_step",
-        "unit": "ms_per_iter",
+    config = {
+        "n_graphs": n_graphs, "batch_size": args.batch_size,
+        "hidden": args.hidden, "max_seg_nodes": args.max_seg_nodes,
+        "j_max": ds.j_max, "e_max": ds.e_max, "iters": n_iters,
+        "quick": args.quick,
+    }
+    env = {
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "pallas_interpret": jax.default_backend() != "tpu",
+        "donated_train_state": True,
+    }
+    entry = {
         # gst_efd is the paper's complete method — the hot path this repo
         # optimizes.  On CPU both paths run the same jnp/XLA ops except the
         # kernels execute in Pallas interpret mode (structure check, not
         # silicon speed); on TPU the one-hot matmuls land on the MXU.
         "hot_path_summary": hot,
-        "config": {
-            "n_graphs": n_graphs, "batch_size": args.batch_size,
-            "hidden": args.hidden, "max_seg_nodes": args.max_seg_nodes,
-            "j_max": ds.j_max, "e_max": ds.e_max, "iters": n_iters,
-            "quick": args.quick,
-        },
-        "env": {
-            "backend": jax.default_backend(),
-            "jax": jax.__version__,
-            "pallas_interpret": jax.default_backend() != "tpu",
-            "donated_train_state": True,
-        },
+        "config": config,
+        "env": env,
         "results": results,
     }
+    # merge keyed by (config, backend, jax version): runs on other configs /
+    # backends accumulate in the same file instead of clobbering each other
+    run_key = ",".join(f"{k}={v}" for k, v in sorted(config.items())) + \
+        f",backend={env['backend']},jax={env['jax']}"
+    payload = {"benchmark": "gst_step", "unit": "ms_per_iter", "runs": {}}
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                prev = json.load(f)
+            if prev.get("benchmark") == "gst_step":
+                if isinstance(prev.get("runs"), dict):
+                    payload = prev
+                elif "results" in prev:  # migrate the pre-keyed flat format
+                    old_cfg = prev.get("config", {})
+                    old_env = prev.get("env", {})
+                    old_key = ",".join(
+                        f"{k}={v}" for k, v in sorted(old_cfg.items())) + \
+                        f",backend={old_env.get('backend')}," \
+                        f"jax={old_env.get('jax')}"
+                    payload["runs"][old_key] = {
+                        k: prev[k] for k in
+                        ("hot_path_summary", "config", "env", "results")
+                        if k in prev}
+        except (json.JSONDecodeError, OSError):
+            pass
+    payload["runs"][run_key] = entry
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
-    print(f"wrote {args.out}")
+    print(f"wrote {args.out} ({len(payload['runs'])} tracked run configs)")
 
 
 if __name__ == "__main__":

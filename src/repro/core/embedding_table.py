@@ -57,3 +57,32 @@ def update_all(table: EmbeddingTable, graph_ids, h_all, seg_valid, step) -> Embe
     age = table.age.at[graph_ids].set(step)
     init = table.initialized.at[graph_ids].set(seg_valid.astype(bool))
     return EmbeddingTable(emb, age, init)
+
+
+# ---------------------------------------------------------------------------
+# slot-addressed view (serving cache)
+#
+# serve/cache.py layers a content-addressed segment cache on the same table:
+# rows are cache SLOTS (one segment each, J_max == 1) keyed host-side by
+# segment content hash.  These helpers give the (slots,) <-> (slots, 1, d)
+# view without the callers carrying the dummy J axis around.
+# ---------------------------------------------------------------------------
+
+
+def lookup_rows(table: EmbeddingTable, rows) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """rows: (B,) slot ids -> (emb (B, d), initialized (B,))."""
+    emb, init = lookup(table, rows)
+    return emb[:, 0], init[:, 0]
+
+
+def update_rows(table: EmbeddingTable, rows, h_new, step) -> EmbeddingTable:
+    """Write h_new (B, d) into slots (B,) — one scatter, jit-friendly."""
+    return update_sampled(table, rows, jnp.zeros((rows.shape[0], 1), jnp.int32),
+                          h_new[:, None, :], step)
+
+
+def evict_rows(table: EmbeddingTable, rows) -> EmbeddingTable:
+    """Mark slots free (initialized=False); embeddings are left in place and
+    simply overwritten on reuse."""
+    init = table.initialized.at[rows, 0].set(False)
+    return EmbeddingTable(table.emb, table.age, init)

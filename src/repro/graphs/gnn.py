@@ -210,23 +210,29 @@ def _encode_batched(params, cfg: GNNConfig, seg_inputs):
     return jnp.sum(h, axis=1) / denom[:, None]
 
 
+def encode_segments(params, cfg: GNNConfig, seg_inputs) -> jnp.ndarray:
+    """Single-bucket encode entry point: one flat batch of padded segments
+    (leaves (N, m, ...) of ONE padding shape) -> embeddings (N, hidden).
+
+    This is the unit of work shared by the train loop (via make_encode_fn)
+    and the serving engine (serve/engine.py encodes one padded-CSR bucket
+    per call): cfg.use_pallas (gcn/sage) routes through the batched fused
+    path — one pallas_call per message-passing layer for the whole batch —
+    otherwise (or for gps) the jnp reference path, vmapped over segments.
+    """
+    if cfg.use_pallas and cfg.backbone in ("gcn", "sage"):
+        return _encode_batched(params, cfg, seg_inputs)
+    f = partial(_encode_one, params, cfg)
+    return jax.vmap(f)(seg_inputs["x"], seg_inputs["edges"],
+                       seg_inputs["edge_valid"], seg_inputs["node_valid"])
+
+
 def make_encode_fn(cfg: GNNConfig) -> Callable:
     """Returns encode_fn(params, seg_inputs) -> (emb (N, hidden), aux=0.)
-    matching the GST core's backbone interface.
-
-    cfg.use_pallas (gcn/sage): the batched fused path — one pallas_call per
-    message-passing layer for the whole segment batch.  Otherwise (or for
-    gps): the jnp reference path, vmapped over segments.
-    """
-    fused = cfg.use_pallas and cfg.backbone in ("gcn", "sage")
+    matching the GST core's backbone interface (a thin wrapper around
+    ``encode_segments`` adding the aux-loss slot)."""
 
     def encode(params, seg_inputs):
-        if fused:
-            emb = _encode_batched(params, cfg, seg_inputs)
-        else:
-            f = partial(_encode_one, params, cfg)
-            emb = jax.vmap(f)(seg_inputs["x"], seg_inputs["edges"],
-                              seg_inputs["edge_valid"], seg_inputs["node_valid"])
-        return emb, jnp.zeros((), jnp.float32)
+        return encode_segments(params, cfg, seg_inputs), jnp.zeros((), jnp.float32)
 
     return encode

@@ -70,6 +70,51 @@ def count_pallas_calls(fn, *args, **kwargs) -> int:
     return walk(closed.jaxpr)
 
 
+def max_intermediate_bytes(fn, *args, **kwargs) -> int:
+    """Size (bytes) of the largest intermediate buffer any eqn of fn's jaxpr
+    produces (recursing into sub-jaxprs: scan/while bodies, pjit calls).
+
+    The serving engine's constant-memory contract — a lax.scan over segment
+    chunks allocates one chunk's activations regardless of how many chunks
+    the graph has — is asserted with this in tests/test_serve.py: the max
+    live buffer must not grow with the chunk count, while the one-shot
+    encoder's grows linearly with the segment count.
+    """
+    try:  # jax >= 0.5 moved the jaxpr types; 0.4.x only has jax.core
+        from jax.extend import core as jcore
+    except ImportError:  # pragma: no cover
+        from jax import core as jcore
+    import numpy as np
+
+    def subjaxprs(params):
+        for v in params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for u in vs:
+                if isinstance(u, jcore.ClosedJaxpr):
+                    yield u.jaxpr
+                elif isinstance(u, jcore.Jaxpr):
+                    yield u
+
+    def nbytes(aval) -> int:
+        shape = getattr(aval, "shape", None)
+        dtype = getattr(aval, "dtype", None)
+        if shape is None or dtype is None:
+            return 0
+        return int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+
+    def walk(jaxpr) -> int:
+        m = 0
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                m = max(m, nbytes(v.aval))
+            for sub in subjaxprs(eqn.params):
+                m = max(m, walk(sub))
+        return m
+
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return walk(closed.jaxpr)
+
+
 @partial(jax.jit, static_argnames=("num_nodes", "use_pallas"))
 def neighbor_aggregate(h, src, dst, edge_valid, *, num_nodes: int,
                        use_pallas: bool = True):

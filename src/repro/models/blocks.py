@@ -91,14 +91,23 @@ def block_init(kind: str, key, cfg: ArchConfig, dtype=jnp.float32):
 
 def init_block_cache(kind: str, cfg: ArchConfig, batch: int, cache_len: int, dtype):
     hd = cfg.resolved_head_dim
+    # MoE kinds carry per-(row, expert) routed-token counters so decode
+    # reproduces the forward's capacity dropping (see moe.moe_decode)
+    moe_counts = lambda: jnp.zeros((batch, cfg.moe.num_experts), jnp.int32)
     if kind in ("attn", "shared_attn", "gqa_moe"):
         shp = (batch, cache_len, cfg.num_kv_heads, hd)
-        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        c = {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        if kind == "gqa_moe":
+            c["moe_counts"] = moe_counts()
+        return c
     if kind in ("mla_dense", "mla_moe"):
-        return {
+        c = {
             "ckv": jnp.zeros((batch, cache_len, cfg.mla_kv_lora_rank), dtype),
             "kr": jnp.zeros((batch, cache_len, cfg.mla_rope_head_dim), dtype),
         }
+        if kind == "mla_moe":
+            c["moe_counts"] = moe_counts()
+        return c
     if kind == "mamba":
         d_inner, H, P, N = mamba_mod.mamba2_dims(cfg)
         W = cfg.ssm.conv_width
@@ -121,6 +130,29 @@ def _apply_norm(cfg: ArchConfig, p, x):
     return fn(p, x)
 
 
+def _moe_ffn(p, h, cfg: ArchConfig, *, mode, cache, new_cache, cache_len,
+             moe_cap_len):
+    """Shared MoE dispatch for the gqa_moe / mla_moe blocks.
+
+    Decode reproduces the forward's per-row capacity dropping via the
+    counters in the cache; the capacity defaults to ``capacity(cache_len)``
+    — exact parity with a teacher-forced forward over ``cache_len`` tokens —
+    and ``moe_cap_len`` overrides it when the cache is allocated longer than
+    the reference sequence.  Adds 'moe_counts' to new_cache when present.
+    """
+    if mode == "full":
+        o, aux, counts = moe_mod.moe_forward(
+            p["moe"], h, cfg.moe, cfg.act, with_counts=True)
+        if new_cache is not None:
+            new_cache["moe_counts"] = counts
+    else:
+        cap = moe_mod.capacity(moe_cap_len or cache_len, cfg.moe)
+        o, aux, counts = moe_mod.moe_decode(
+            p["moe"], h, cfg.moe, cfg.act, cache["moe_counts"], cap)
+        new_cache["moe_counts"] = counts
+    return o, aux
+
+
 def block_forward(
     kind: str,
     p,
@@ -135,6 +167,8 @@ def block_forward(
     window: int = 0,                # sliding-window size; 0 = full attention
     ring: bool = False,             # decode cache is a ring buffer
     emit_cache: bool = False,       # full mode: return (k, v) as cache (prefill)
+    moe_cap_len: int = 0,           # MoE decode capacity sequence length;
+                                    # 0 = use the cache length
 ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
     aux = jnp.zeros((), jnp.float32)
     hd = cfg.resolved_head_dim
@@ -159,7 +193,10 @@ def block_forward(
         x = x + o
         h = _apply_norm(cfg, p["norm2"], x)
         if kind == "gqa_moe":
-            o, aux = moe_mod.moe_forward(p["moe"], h, cfg.moe, cfg.act)
+            o, aux = _moe_ffn(p, h, cfg, mode=mode, cache=cache,
+                              new_cache=new_cache,
+                              cache_len=cache["k"].shape[1] if cache else 0,
+                              moe_cap_len=moe_cap_len)
         else:
             o = mlp_forward(p["mlp"], h, cfg.act)
         return x + o, new_cache, aux
@@ -177,7 +214,10 @@ def block_forward(
         x = x + o
         h = _apply_norm(cfg, p["norm2"], x)
         if kind == "mla_moe":
-            o, aux = moe_mod.moe_forward(p["moe"], h, cfg.moe, cfg.act)
+            o, aux = _moe_ffn(p, h, cfg, mode=mode, cache=cache,
+                              new_cache=new_cache,
+                              cache_len=cache["ckv"].shape[1] if cache else 0,
+                              moe_cap_len=moe_cap_len)
         else:
             o = mlp_forward(p["mlp"], h, cfg.act)
         return x + o, new_cache, aux

@@ -6,6 +6,16 @@ to MXU matmuls plus (under expert sharding on the ``model`` mesh axis)
 reduce-scatter/all-reduce collectives, the standard JAX/TPU MoE formulation
 (GShard / Switch / Mesh-TF lineage).
 
+Capacity accounting is **per batch row** (each sequence is one GShard
+dispatch group): token t of row b is dropped iff the number of earlier
+tokens of the SAME row routed to the expert already fills the row's
+capacity ``capacity(S, cfg)``.  This makes dropping causal in the token
+order, so incremental decode can reproduce it exactly: ``moe_decode``
+threads a per-(row, expert) routed-token counter through the layer cache
+and drops the current token iff the counter has reached the capacity
+computed from the cache length.  Parity with the teacher-forced forward is
+asserted in tests/test_models.py.
+
 Supports:
   * top-k routing with capacity factor + token dropping (capacity-bounded),
   * optional always-on shared experts (DeepSeek-V3 [arXiv:2412.19437]),
@@ -44,12 +54,23 @@ def moe_params(key, d_model: int, cfg: MoEConfig, act: str, dtype=jnp.float32):
     return p
 
 
+def capacity(tokens_per_row: int, cfg: MoEConfig) -> int:
+    """Per-row expert capacity C = ceil(S/E * capacity_factor * k), >= k.
+
+    The decode path must call this with the SAME ``tokens_per_row`` the
+    forward used (the cache length) to reproduce the forward's dropping.
+    """
+    cap = max(int(math.ceil(tokens_per_row / cfg.num_experts
+                            * cfg.capacity_factor * cfg.top_k)), cfg.top_k)
+    return min(cap, tokens_per_row)
+
+
 def _top_k_gating(logits, k: int):
-    """logits: (T, E) float32 -> (gates (T,E), mask (T,E) in {0,1})."""
-    T, E = logits.shape
+    """logits: (..., E) float32 -> (gates (...,E), mask (...,E) in {0,1})."""
+    E = logits.shape[-1]
     probs = jax.nn.softmax(logits, axis=-1)
-    top_vals, top_idx = jax.lax.top_k(probs, k)  # (T, k)
-    mask = jnp.sum(jax.nn.one_hot(top_idx, E, dtype=probs.dtype), axis=1)  # (T, E)
+    top_vals, top_idx = jax.lax.top_k(probs, k)  # (..., k)
+    mask = jnp.sum(jax.nn.one_hot(top_idx, E, dtype=probs.dtype), axis=-2)  # (..., E)
     gates = probs * mask
     denom = jnp.sum(gates, axis=-1, keepdims=True)
     gates = gates / jnp.maximum(denom, 1e-9)  # renormalize over selected
@@ -67,69 +88,121 @@ DISPATCH_MODE = "einsum"
 
 
 def _expert_ffn(we, expert_in, act):
+    """expert_in: (..., E, C, D) -> (..., E, C, D)."""
     if act in ("silu", "swiglu"):
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, we["w_gate"])) * \
-            jnp.einsum("ecd,edf->ecf", expert_in, we["w_in"])
+        h = jax.nn.silu(jnp.einsum("...ecd,edf->...ecf", expert_in, we["w_gate"])) * \
+            jnp.einsum("...ecd,edf->...ecf", expert_in, we["w_in"])
     else:
-        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", expert_in, we["w_in"]))
-    return jnp.einsum("ecf,efd->ecd", h, we["w_out"])  # (E, C, D)
+        h = jax.nn.gelu(jnp.einsum("...ecd,edf->...ecf", expert_in, we["w_in"]))
+    return jnp.einsum("...ecf,efd->...ecd", h, we["w_out"])  # (..., E, C, D)
 
 
-def moe_forward(p, x, cfg: MoEConfig, act: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+def moe_forward(p, x, cfg: MoEConfig, act: str, *, with_counts: bool = False):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar[, counts (B, E)]).
 
-    Capacity-bounded dispatch: each expert processes at most
-    C = ceil(T/E * capacity_factor * k) tokens; overflow tokens are dropped
-    (their routed contribution is zero — shared/dense paths still apply).
+    Capacity-bounded dispatch per row: each expert processes at most
+    C = capacity(S, cfg) tokens of each sequence; overflow tokens are
+    dropped (their routed contribution is zero — shared/dense paths still
+    apply).  ``counts`` (returned when with_counts=True) is the number of
+    tokens each row ROUTED to each expert — dropped tokens included, since
+    a token's queue position counts all earlier routed tokens — for seeding
+    ``moe_decode``'s counters after a prefill.
     """
     B, S, D = x.shape
-    T = B * S
     E, K = cfg.num_experts, cfg.top_k
-    xt = x.reshape(T, D)
-    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T, E)
+    logits = (x.reshape(B * S, D).astype(jnp.float32)
+              @ p["router"].astype(jnp.float32)).reshape(B, S, E)
     gates, mask, probs = _top_k_gating(logits, K)
 
-    # Switch-style load balance aux loss
-    frac_tokens = jnp.mean(mask, axis=0)            # (E,)
-    frac_probs = jnp.mean(probs, axis=0)            # (E,)
+    # Switch-style load balance aux loss (over all tokens)
+    frac_tokens = jnp.mean(mask, axis=(0, 1))       # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))       # (E,)
     aux = jnp.sum(frac_tokens * frac_probs) * (E / K)
 
-    cap = max(int(math.ceil(T / E * cfg.capacity_factor * K)), K)
-    cap = min(cap, T)
-    # position of each token within its expert queue (per expert, over tokens)
-    pos_in_expert = jnp.cumsum(mask, axis=0) * mask - 1.0  # (T, E), -1 where unrouted
+    cap = capacity(S, cfg)
+    # position of each token within its row's expert queue (causal cumsum)
+    pos_in_expert = jnp.cumsum(mask, axis=1) * mask - 1.0  # (B, S, E), -1 unrouted
     keep = (pos_in_expert < cap) & (mask > 0)
     pos_c = jnp.clip(pos_in_expert, 0, cap - 1).astype(jnp.int32)
     we = p["experts"]
 
     if DISPATCH_MODE == "einsum":
-        # dispatch: (T, E, C) one-hot over capacity slot
+        # dispatch: (B, S, E, C) one-hot over capacity slot
         oh_cap = jax.nn.one_hot(pos_c, cap, dtype=x.dtype) * keep[..., None].astype(x.dtype)
-        combine = oh_cap * gates[..., None].astype(x.dtype)  # (T, E, C)
-        expert_in = jnp.einsum("tec,td->ecd", oh_cap, xt)  # (E, C, D)
+        combine = oh_cap * gates[..., None].astype(x.dtype)  # (B, S, E, C)
+        expert_in = jnp.einsum("bsec,bsd->becd", oh_cap, x)  # (B, E, C, D)
         expert_out = _expert_ffn(we, expert_in, act)
-        routed = jnp.einsum("tec,ecd->td", combine, expert_out)  # (T, D)
+        routed = jnp.einsum("bsec,becd->bsd", combine, expert_out)  # (B, S, D)
     else:
         # gather/scatter dispatch: per (token, k) assignment indices
-        top_gates, top_idx = jax.lax.top_k(gates, K)            # (T, K)
-        slot = jnp.take_along_axis(pos_c, top_idx, axis=1)      # (T, K)
-        kept = jnp.take_along_axis(keep, top_idx, axis=1)       # (T, K)
-        e_flat = top_idx.reshape(-1)                            # (T*K,)
-        s_flat = slot.reshape(-1)
-        w_flat = jnp.where(kept, top_gates, 0.0).reshape(-1).astype(x.dtype)
+        top_gates, top_idx = jax.lax.top_k(gates, K)            # (B, S, K)
+        slot = jnp.take_along_axis(pos_c, top_idx, axis=2)      # (B, S, K)
+        kept = jnp.take_along_axis(keep, top_idx, axis=2)       # (B, S, K)
+        e_flat = top_idx.reshape(B, -1)                         # (B, S*K)
+        s_flat = slot.reshape(B, -1)
+        k_flat = kept.reshape(B, -1)
+        w_flat = jnp.where(kept, top_gates, 0.0).reshape(B, -1).astype(x.dtype)
         # dropped tokens scatter into a sacrificial overflow slot (cap index
         # C) that is sliced off before the FFN
-        s_safe = jnp.where(kept.reshape(-1), s_flat, cap)
-        x_rep = jnp.repeat(xt, K, axis=0)                       # (T*K, D)
-        expert_in = jnp.zeros((E, cap + 1, D), x.dtype).at[e_flat, s_safe].add(
-            jnp.where(kept.reshape(-1)[:, None], x_rep, 0))
-        expert_out = _expert_ffn(we, expert_in[:, :cap], act)   # (E, C, D)
-        gathered = expert_out[e_flat, jnp.minimum(s_flat, cap - 1)]  # (T*K, D)
-        routed = jnp.sum((gathered * w_flat[:, None]).reshape(T, K, D), axis=1)
+        s_safe = jnp.where(k_flat, s_flat, cap)
+        x_rep = jnp.repeat(x, K, axis=1)                        # (B, S*K, D)
+        b_idx = jnp.arange(B)[:, None]
+        expert_in = jnp.zeros((B, E, cap + 1, D), x.dtype).at[
+            b_idx, e_flat, s_safe].add(jnp.where(k_flat[..., None], x_rep, 0))
+        expert_out = _expert_ffn(we, expert_in[:, :, :cap], act)  # (B, E, C, D)
+        gathered = expert_out[b_idx, e_flat, jnp.minimum(s_flat, cap - 1)]
+        routed = jnp.sum((gathered * w_flat[..., None]).reshape(B, S, K, D), axis=2)
+
+    out = routed
+    xt = x.reshape(B * S, D)
+    if "shared" in p:
+        out = out + mlp_forward(p["shared"], xt, act).reshape(B, S, D)
+    if "dense" in p:
+        out = out + mlp_forward(p["dense"], xt, act).reshape(B, S, D)
+    if with_counts:
+        counts = jnp.sum(mask, axis=1).astype(jnp.int32)        # (B, E)
+        return out, aux.astype(jnp.float32), counts
+    return out, aux.astype(jnp.float32)
+
+
+def moe_decode(p, x, cfg: MoEConfig, act: str, counts, cap: int):
+    """One-token step: x (B, 1, d), counts (B, E) routed-token counters.
+
+    Reproduces ``moe_forward``'s per-row dropping exactly: the token is
+    dropped at expert e iff counts[b, e] >= cap, where cap must equal the
+    forward's ``capacity(seq_len, cfg)``.  Experts run via weight gather —
+    O(k) FFNs per token, no (T, E, C) dispatch tensor on the decode path.
+
+    Returns (out (B, 1, d), aux scalar, new_counts (B, E)).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    xt = x.reshape(B, D)
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)  # (B, E)
+    gates, mask, probs = _top_k_gating(logits, K)
+    aux = jnp.sum(jnp.mean(mask, axis=0) * jnp.mean(probs, axis=0)) * (E / K)
+
+    keep = (counts < cap) & (mask > 0)                           # (B, E)
+    top_gates, top_idx = jax.lax.top_k(gates, K)                 # (B, K)
+    kept = jnp.take_along_axis(keep, top_idx, axis=1)            # (B, K)
+    we = p["experts"]
+    w_in = we["w_in"][top_idx]                                   # (B, K, D, F)
+    w_out = we["w_out"][top_idx]                                 # (B, K, F, D)
+    xk = xt.astype(we["w_in"].dtype)
+    if act in ("silu", "swiglu"):
+        w_gate = we["w_gate"][top_idx]
+        h = jax.nn.silu(jnp.einsum("bd,bkdf->bkf", xk, w_gate)) * \
+            jnp.einsum("bd,bkdf->bkf", xk, w_in)
+    else:
+        h = jax.nn.gelu(jnp.einsum("bd,bkdf->bkf", xk, w_in))
+    y = jnp.einsum("bkf,bkfd->bkd", h, w_out)                    # (B, K, D)
+    w_eff = jnp.where(kept, top_gates, 0.0).astype(y.dtype)
+    routed = jnp.sum(y * w_eff[..., None], axis=1)               # (B, D)
 
     out = routed
     if "shared" in p:
         out = out + mlp_forward(p["shared"], xt, act)
     if "dense" in p:
         out = out + mlp_forward(p["dense"], xt, act)
-    return out.reshape(B, S, D), aux.astype(jnp.float32)
+    new_counts = counts + mask.astype(counts.dtype)
+    return out.reshape(B, S, D), aux.astype(jnp.float32), new_counts

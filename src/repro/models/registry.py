@@ -97,7 +97,12 @@ class Model:
 
     def decode_step(self, params, token, caches, cache_pos, *,
                     extras: Optional[Dict[str, Any]] = None,
-                    window: int = 0, ring: bool = False):
+                    window: int = 0, ring: bool = False,
+                    moe_cap_len: int = 0):
+        """moe_cap_len (MoE archs): sequence length the per-row expert
+        capacity is computed from; 0 = the allocated cache length.  Pin it
+        to the reference sequence length to reproduce a teacher-forced
+        forward exactly when the cache is over-allocated."""
         cfg = self.cfg
         if cfg.is_encoder_decoder:
             logits, new_self = encdec.decode_step(
@@ -105,7 +110,8 @@ class Model:
             return logits, {"self": new_self, "cross": caches["cross"]}
         hidden, new_caches, _ = transformer.forward_hidden(
             params, cfg, token, mode="decode", caches=caches,
-            cache_pos=cache_pos, window=window, ring=ring)
+            cache_pos=cache_pos, window=window, ring=ring,
+            moe_cap_len=moe_cap_len)
         logits = transformer.lm_logits(params, cfg, hidden)
         return logits, new_caches
 

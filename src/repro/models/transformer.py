@@ -124,14 +124,15 @@ def _embed(params, cfg: ArchConfig, tokens, patches=None):
 
 
 def _run_scan(kind, stacked_p, shared_p, x, cfg, *, mode, positions, positions_thw,
-              caches, cache_pos, window, ring, emit_cache):
+              caches, cache_pos, window, ring, emit_cache, moe_cap_len=0):
     """Apply one run. For shared_attn the (single) block applies once with the
     shared params; otherwise scan over the stacked per-layer params."""
     if kind == "shared_attn":
         x, new_c, aux = B.block_forward(
             kind, shared_p, x, cfg, mode=mode, positions=positions,
             positions_thw=positions_thw, cache=caches, cache_pos=cache_pos,
-            window=window, ring=ring, emit_cache=emit_cache)
+            window=window, ring=ring, emit_cache=emit_cache,
+            moe_cap_len=moe_cap_len)
         return x, new_c, aux
 
     if caches is None:
@@ -140,7 +141,8 @@ def _run_scan(kind, stacked_p, shared_p, x, cfg, *, mode, positions, positions_t
             h, new_c, aux = B.block_forward(
                 kind, p_i, h, cfg, mode=mode, positions=positions,
                 positions_thw=positions_thw, cache=None, cache_pos=cache_pos,
-                window=window, ring=ring, emit_cache=emit_cache)
+                window=window, ring=ring, emit_cache=emit_cache,
+                moe_cap_len=moe_cap_len)
             return (h, aux_acc + aux), new_c
         (x, aux), new_caches = lax.scan(body_nc, (x, jnp.zeros((), jnp.float32)),
                                         stacked_p, unroll=SCAN_UNROLL)
@@ -152,7 +154,8 @@ def _run_scan(kind, stacked_p, shared_p, x, cfg, *, mode, positions, positions_t
         h, new_c, aux = B.block_forward(
             kind, p_i, h, cfg, mode=mode, positions=positions,
             positions_thw=positions_thw, cache=c_i, cache_pos=cache_pos,
-            window=window, ring=ring, emit_cache=emit_cache)
+            window=window, ring=ring, emit_cache=emit_cache,
+            moe_cap_len=moe_cap_len)
         return (h, aux_acc + aux), new_c
 
     (x, aux), new_caches = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
@@ -162,8 +165,13 @@ def _run_scan(kind, stacked_p, shared_p, x, cfg, *, mode, positions, positions_t
 
 def forward_hidden(params, cfg: ArchConfig, tokens, *, patches=None,
                    caches=None, cache_pos=None, mode="full", window: int = 0,
-                   ring: bool = False, emit_cache: bool = False):
-    """Core stack application.  Returns (hidden, new_caches, aux_loss)."""
+                   ring: bool = False, emit_cache: bool = False,
+                   moe_cap_len: int = 0):
+    """Core stack application.  Returns (hidden, new_caches, aux_loss).
+
+    moe_cap_len: decode-mode MoE capacity reference length (0 = the cache
+    length) — pin to the teacher-forced sequence length when the cache is
+    allocated longer than the sequence being reproduced."""
     batch, seq = tokens.shape
     if mode == "decode":
         positions = cache_pos[:, None]
@@ -181,7 +189,8 @@ def forward_hidden(params, cfg: ArchConfig, tokens, *, patches=None,
         x, nc, aux = _run_scan(
             kind, run_p, shared_p, x, cfg, mode=mode, positions=positions,
             positions_thw=thw, caches=c, cache_pos=cache_pos, window=window,
-            ring=ring, emit_cache=emit_cache or mode == "decode")
+            ring=ring, emit_cache=emit_cache or mode == "decode",
+            moe_cap_len=moe_cap_len)
         new_caches.append(nc)
         aux_total = aux_total + aux
     _, norm_fn = make_norm(cfg.norm, cfg.d_model, x.dtype)

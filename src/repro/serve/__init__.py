@@ -1,0 +1,20 @@
+"""Graph-property serving: segment-streaming inference with a cross-request
+segment-embedding cache (the inference-side face of GST's Eq. 1)."""
+from repro.serve.buckets import (  # noqa: F401
+    BucketSpec,
+    batch_bucket,
+    choose_bucket,
+    default_ladder,
+    pad_to_bucket,
+    segment_fingerprint,
+)
+from repro.serve.cache import SegmentCache  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    RequestResult,
+    ServeConfig,
+    ServeEngine,
+    ServeStats,
+    graph_to_chunks,
+    make_stream_encoder,
+)
+from repro.serve.traffic import TrafficConfig, make_graph_pool, make_request_stream  # noqa: F401

@@ -1,0 +1,161 @@
+"""Cross-request segment-embedding cache (content-addressed, LRU-bounded).
+
+FreshGNN's observation (PAPERS.md) — stable historical embeddings can be
+reused across iterations — applied at serving time: a segment whose padded
+content hash was seen before skips the GNN encode entirely; only the cheap
+head runs on a full-hit request.  The device-side store IS the training
+code's historical table (core/embedding_table.py) with rows repurposed as
+cache slots (J_max == 1): lookups/updates are the same gather/scatter the
+train step uses, and ``age`` doubles as the insertion step for staleness
+accounting.
+
+Host side keeps the hash -> slot map (an OrderedDict in LRU order) plus
+hit/miss/eviction counters.  Eviction frees the least-recently-used slot;
+the embedding stays in device memory and is overwritten on reuse.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import embedding_table as tbl
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+class SegmentCache:
+    def __init__(self, capacity: int, d_h: int, dtype=jnp.float32):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = capacity
+        self.d_h = d_h
+        self.table = tbl.init_table(capacity, 1, d_h, dtype)
+        self._slots: "OrderedDict[bytes, int]" = OrderedDict()  # key -> slot, LRU order
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.skipped_inserts = 0
+        self.step = 0  # monotonically increasing insertion step (age base)
+        # jitted table ops: each (B,) shape compiles once (the pow2 padding
+        # below keeps the shape set O(log capacity)); step rides along as a
+        # traced scalar so it never bakes into the executable
+        self._update = jax.jit(tbl.update_rows)
+        self._lookup = jax.jit(tbl.lookup_rows)
+        self._evict = jax.jit(tbl.evict_rows)
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def flush(self):
+        """Empty the cache (contents + counters) while KEEPING the jitted
+        table ops and their compile caches — a flushed cache measures cold
+        contents, not cold compiles."""
+        self.table = tbl.init_table(self.capacity, 1, self.d_h,
+                                    self.table.emb.dtype)
+        self._slots.clear()
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self.hits = self.misses = self.evictions = self.skipped_inserts = 0
+        self.step = 0
+
+    def get(self, key: bytes) -> Optional[int]:
+        """Slot of a cached segment (refreshes LRU position), or None.
+        Counts a hit/miss."""
+        slot = self._slots.get(key)
+        if slot is None:
+            self.misses += 1
+            return None
+        self._slots.move_to_end(key)
+        self.hits += 1
+        return slot
+
+    def peek(self, key: bytes) -> Optional[int]:
+        """Like get() but with no counter / LRU side effects."""
+        return self._slots.get(key)
+
+    def _reserve(self, key: bytes, pinned: set) -> Optional[int]:
+        if self._free:
+            return self._free.pop()
+        # evict the least-recently-used slot not pinned by the current batch
+        for old_key in self._slots:
+            if old_key not in pinned:
+                slot = self._slots.pop(old_key)
+                self.evictions += 1
+                self.table = self._evict(self.table, jnp.asarray([slot]))
+                return slot
+        return None  # every live slot is pinned by this batch
+
+    def put(self, keys: List[bytes], embs, pinned=()) -> List[Optional[int]]:
+        """Best-effort insert of freshly-encoded embeddings (len(keys), d_h);
+        returns the slot per key, None where the insert was skipped (batch of
+        new keys larger than the capacity — the cache keeps what fits and the
+        caller falls back to its fresh embedding).  Duplicate keys in the
+        batch write once.  ``pinned``: extra keys that must NOT be evicted —
+        the engine passes the window's hit keys, whose slots it gathers
+        after this insert.  The device scatter is padded to the next power
+        of two (repeating the last row) so steady-state serving compiles
+        O(log capacity) scatter shapes."""
+        self.step += 1
+        # never evict a key being inserted in this batch, nor a caller-pinned
+        # one (a hit slot evicted here would be silently reused before the
+        # caller's gather)
+        pinned = set(keys) | set(pinned)
+        slots, rows, idx = [], [], []
+        for i, key in enumerate(keys):
+            slot = self._slots.get(key)
+            if slot is None:
+                slot = self._reserve(key, pinned)
+                if slot is None:
+                    self.skipped_inserts += 1
+                    slots.append(None)
+                    continue
+                self._slots[key] = slot
+                rows.append(slot)
+                idx.append(i)
+            self._slots.move_to_end(key)
+            slots.append(slot)
+        if rows:
+            n = next_pow2(len(rows))
+            rows_p = np.asarray(rows + [rows[-1]] * (n - len(rows)), np.int32)
+            idx_p = np.asarray(idx + [idx[-1]] * (n - len(idx)))
+            self.table = self._update(
+                self.table, jnp.asarray(rows_p),
+                jnp.asarray(embs)[idx_p], jnp.int32(self.step))
+        return slots
+
+    def gather(self, slots, valid=None) -> jnp.ndarray:
+        """(len(slots), d_h) embeddings — the stored device values, so a hit
+        returns bit-identical bytes to what was inserted.  ``valid`` (0/1,
+        same length) limits the liveness assertion to real entries when the
+        caller padded ``slots`` to a static shape."""
+        emb, init = self._lookup(self.table, jnp.asarray(slots, jnp.int32))
+        live = init if valid is None else jnp.where(jnp.asarray(valid) > 0,
+                                                    init, True)
+        assert bool(live.all()), "gather() of an evicted/uninitialized slot"
+        return emb
+
+    def stats(self) -> Dict:
+        total = self.hits + self.misses
+        ages = np.asarray(self.table.age[:, 0])
+        init = np.asarray(self.table.initialized[:, 0])
+        live_ages = (self.step - ages[init]) if init.any() else np.zeros(0)
+        return {
+            "capacity": self.capacity,
+            "size": len(self._slots),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": (self.hits / total) if total else 0.0,
+            "evictions": self.evictions,
+            "skipped_inserts": self.skipped_inserts,
+            "age_mean_steps": float(live_ages.mean()) if live_ages.size else 0.0,
+            "age_max_steps": int(live_ages.max()) if live_ages.size else 0,
+        }

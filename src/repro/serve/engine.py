@@ -1,0 +1,391 @@
+"""Graph-property serving engine: constant-memory segment-streaming inference.
+
+GST's Eq.-1 structure — encode segments independently, aggregate, then run a
+small head — means inference never needs the whole graph in device memory.
+The engine exploits that twice:
+
+* ``make_stream_encoder``: a ``lax.scan`` over fixed-size chunks of one
+  graph's padded segments, accumulating only the pooled readout carry
+  (d_h floats + a count).  Peak live activation memory is bounded by ONE
+  chunk of one bucket shape no matter how large the graph is — the scan
+  body's buffers are reused across iterations (asserted by buffer-size
+  accounting in tests/test_serve.py).
+
+* ``ServeEngine.process``: bucketed dynamic batching across requests.
+  Segments from all requests in a window are routed into a small ladder of
+  padded-CSR buckets (serve/buckets.py), deduplicated against the
+  cross-request segment cache (serve/cache.py), and only the misses are
+  encoded — batched per bucket so the jitted encode compiles once per
+  bucket shape.  On a full cache hit only the cheap head runs.
+
+Both paths go through graphs/gnn.py::encode_segments, so the Pallas fused
+kernels and the jnp reference produce the same serving numbers as training.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import gst as G
+from repro.graphs.data import SyntheticGraph
+from repro.graphs.gnn import GNNConfig, encode_segments, gnn_init
+from repro.graphs.partition import partition_graph
+from repro.kernels.ops import count_pallas_calls
+from repro.serve.buckets import (
+    BucketSpec,
+    batch_bucket,
+    choose_bucket,
+    count_local_edges,
+    default_ladder,
+    pad_to_bucket,
+    segment_fingerprint,
+)
+from repro.serve.cache import SegmentCache, next_pow2
+
+SEG_KEYS = ("x", "edges", "edge_valid", "node_valid")
+
+
+# ---------------------------------------------------------------------------
+# streaming encoder (constant-memory single-graph path)
+# ---------------------------------------------------------------------------
+
+
+def graph_to_chunks(graph: SyntheticGraph, spec: BucketSpec, chunk: int, *,
+                    partition: str = "bfs", seed: int = 0,
+                    partition_max_nodes: int = 0,
+                    pad_chunks_pow2: bool = True) -> Dict[str, np.ndarray]:
+    """Partition + pad one graph into scan-ready chunks: leaves
+    (n_chunks, chunk, ...) plus ``seg_valid`` (n_chunks, chunk).
+
+    partition_max_nodes: segment size cap for the partitioner (default: the
+    bucket's m_max).  The engine passes its cfg.max_seg_nodes so the
+    streaming path sees the SAME segmentation as the bucketed path.
+    n_chunks is padded to the next power of two (invalid chunks are
+    all-zero) so the jitted scan compiles O(log J) times, not once per J.
+    """
+    segs = partition_graph(len(graph.x), graph.edges,
+                           partition_max_nodes or spec.m_max, partition, seed)
+    padded = [pad_to_bucket(graph, s, spec) for s in segs]
+    n = len(padded)
+    n_chunks = max((n + chunk - 1) // chunk, 1)
+    if pad_chunks_pow2:
+        n_chunks = next_pow2(n_chunks)
+    out: Dict[str, np.ndarray] = {}
+    for k in SEG_KEYS:
+        first = padded[0][k]
+        arr = np.zeros((n_chunks, chunk) + first.shape, first.dtype)
+        for i, seg in enumerate(padded):
+            arr[i // chunk, i % chunk] = seg[k]
+        out[k] = arr
+    valid = np.zeros((n_chunks, chunk), np.float32)
+    valid.reshape(-1)[:n] = 1.0
+    out["seg_valid"] = valid
+    return out
+
+
+def make_stream_encoder(cfg: GNNConfig, *, head_mode: str = "mlp",
+                        agg: str = "mean"):
+    """Returns jitted ``stream(params, head, chunks) -> (pred, pooled)``.
+
+    chunks: dict with SEG_KEYS leaves (C, chunk, ...) and seg_valid
+    (C, chunk).  The scan carry is only the pooled accumulator — (d_h,) for
+    the MLP head, a scalar for the per-segment head — so live memory is one
+    chunk's activations regardless of C.
+    """
+
+    def stream(params, head, chunks):
+        seg_valid = chunks["seg_valid"]
+
+        def body(carry, ch):
+            h = encode_segments(params, cfg,
+                                {k: ch[k] for k in SEG_KEYS})     # (chunk, d)
+            w = ch["seg_valid"]
+            s, cnt = carry
+            if head_mode == "segment_sum":
+                scal = G.head_apply(head, h, "segment_sum")       # (chunk,)
+                s = s + jnp.sum(scal * w)
+            else:
+                s = s + jnp.sum(h * w[:, None], axis=0)
+            return (s, cnt + jnp.sum(w)), None
+
+        if head_mode == "segment_sum":
+            init_s = jnp.zeros((), jnp.float32)
+        else:
+            # carry width = hidden dim, recovered from the head params
+            init_s = jnp.zeros((head["w1"].shape[0],), jnp.float32)
+        (s, cnt), _ = lax.scan(body, (init_s, jnp.zeros((), jnp.float32)),
+                               dict(chunks))
+        denom = jnp.maximum(cnt, 1.0) if agg == "mean" else 1.0
+        pooled = s / denom
+        if head_mode == "segment_sum":
+            return pooled, pooled          # pred IS the pooled scalar (F' = Σ)
+        return G.head_apply(head, pooled, "mlp"), pooled
+
+    return jax.jit(stream)
+
+
+# ---------------------------------------------------------------------------
+# serving engine (bucketed batching + cross-request cache)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ServeConfig:
+    backbone: str = "sage"             # gcn | sage | gps
+    n_feat: int = 8
+    hidden: int = 64
+    use_pallas: bool = False
+    head_mode: str = "mlp"             # mlp | segment_sum
+    agg: str = "mean"                  # mean | sum
+    n_out: int = 5
+    max_seg_nodes: int = 64
+    partition: str = "bfs"
+    partition_seed: int = 0            # fixed -> identical graphs re-partition
+                                       # identically -> cache hits
+    ladder: Optional[Tuple[BucketSpec, ...]] = None
+    cache_capacity: int = 512
+    cache_enabled: bool = True
+    stream_chunk: int = 8
+
+    def resolved_ladder(self) -> Tuple[BucketSpec, ...]:
+        return self.ladder or default_ladder(self.max_seg_nodes)
+
+
+@dataclass
+class RequestResult:
+    request_id: int
+    pred: np.ndarray                   # () scalar or (n_out,) logits
+    latency_ms: float
+    n_segments: int
+    n_cache_hits: int
+
+
+@dataclass
+class ServeStats:
+    n_requests: int = 0
+    n_segments: int = 0
+    encode_launches: int = 0           # jitted bucket-encode invocations
+    encoded_segments: int = 0          # segments that actually ran the GNN
+    pallas_launches: int = 0           # encode kernel launches (pallas path)
+    wall_s: float = 0.0
+    latencies_ms: List[float] = field(default_factory=list)
+    cache: Dict = field(default_factory=dict)
+
+    def summary(self) -> Dict:
+        lat = np.asarray(self.latencies_ms) if self.latencies_ms else np.zeros(1)
+        return {
+            "n_requests": self.n_requests,
+            "n_segments": self.n_segments,
+            "throughput_req_s": self.n_requests / self.wall_s if self.wall_s else 0.0,
+            "latency_p50_ms": float(np.percentile(lat, 50)),
+            "latency_p99_ms": float(np.percentile(lat, 99)),
+            "encode_launches": self.encode_launches,
+            "encoded_segments": self.encoded_segments,
+            "pallas_launches": self.pallas_launches,
+            "cache": dict(self.cache),
+        }
+
+
+class ServeEngine:
+    """Answers streams of graph-property requests with constant device memory.
+
+    Request flow:  partition -> bucket -> cache probe -> batched encode of
+    the misses (one jitted call per bucket shape) -> cache insert ->
+    η=1 aggregate -> head.
+    """
+
+    def __init__(self, cfg: ServeConfig, params: Any = None, head: Any = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.gnn_cfg = GNNConfig(backbone=cfg.backbone, n_feat=cfg.n_feat,
+                                 hidden=cfg.hidden, use_pallas=cfg.use_pallas)
+        key = jax.random.key(seed)
+        self.params = params if params is not None else gnn_init(key, self.gnn_cfg)
+        self.head = head if head is not None else G.head_init(
+            jax.random.fold_in(key, 1), cfg.hidden, cfg.n_out, cfg.head_mode)
+        self.ladder = cfg.resolved_ladder()
+        self.cache = (SegmentCache(cfg.cache_capacity, cfg.hidden)
+                      if cfg.cache_enabled else None)
+        self.stats = ServeStats()
+        self._encode_jit: Dict[int, Any] = {}
+        self._pallas_per_launch: Dict[int, int] = {}
+        self._head_fn = jax.jit(self._head_impl)
+        self._request_counter = 0
+
+    def reset_stats(self):
+        """Zero the counters (post-warmup), keeping compiled fns and cache
+        contents; cache hit/miss counters restart too."""
+        self.stats = ServeStats()
+        if self.cache is not None:
+            self.cache.hits = self.cache.misses = 0
+            self.cache.evictions = self.cache.skipped_inserts = 0
+
+    # -- encode ------------------------------------------------------------
+
+    def _encode_bucket(self, bi: int, seg_inputs: Dict[str, np.ndarray]) -> jnp.ndarray:
+        if bi not in self._encode_jit:
+            gc = self.gnn_cfg
+            self._encode_jit[bi] = jax.jit(
+                lambda p, si: encode_segments(p, gc, si))
+            dev_inputs = {k: jnp.asarray(v) for k, v in seg_inputs.items()}
+            self._pallas_per_launch[bi] = count_pallas_calls(
+                lambda p: encode_segments(p, gc, dev_inputs), self.params)
+        emb = self._encode_jit[bi](self.params,
+                                   {k: jnp.asarray(v) for k, v in seg_inputs.items()})
+        self.stats.encode_launches += 1
+        self.stats.pallas_launches += self._pallas_per_launch[bi]
+        return emb
+
+    # -- request processing ------------------------------------------------
+
+    def _segment_request(self, graph: SyntheticGraph):
+        """Partition + route one graph; returns [(key, bucket_idx, padded)]."""
+        segs = partition_graph(len(graph.x), graph.edges, self.cfg.max_seg_nodes,
+                               self.cfg.partition, self.cfg.partition_seed)
+        items = []
+        for s in segs:
+            ne = count_local_edges(graph, s)
+            bi = choose_bucket(self.ladder, len(s), ne)
+            padded = pad_to_bucket(graph, s, self.ladder[bi])
+            items.append((segment_fingerprint(padded, bi), bi, padded))
+        return items
+
+    def process(self, graphs: Sequence[SyntheticGraph],
+                window: int = 8) -> List[RequestResult]:
+        """Serve a stream of requests in arrival order, ``window`` at a time
+        (the dynamic-batching window: segments of all requests in a window
+        share device batches)."""
+        results: List[RequestResult] = []
+        for w0 in range(0, len(graphs), window):
+            results.extend(self._process_window(graphs[w0:w0 + window]))
+        return results
+
+    def _process_window(self, graphs: Sequence[SyntheticGraph]) -> List[RequestResult]:
+        t0 = time.perf_counter()
+        requests = [self._segment_request(g) for g in graphs]
+
+        # cache probe (per segment occurrence) + miss dedup (per content key)
+        key_slot: Dict[bytes, int] = {}
+        miss_by_bucket: Dict[int, List[Tuple[bytes, Dict]]] = {}
+        seen_miss = set()
+        hits_per_req = []
+        for items in requests:
+            n_hits = 0
+            for key, bi, padded in items:
+                if self.cache is not None:
+                    slot = key_slot.get(key)
+                    if slot is None:
+                        slot = self.cache.get(key)
+                    else:
+                        self.cache.hits += 1  # in-window duplicate of a hit
+                    if slot is not None:
+                        key_slot[key] = slot
+                        n_hits += 1
+                        continue
+                if key not in seen_miss:
+                    seen_miss.add(key)
+                    miss_by_bucket.setdefault(bi, []).append((key, padded))
+            hits_per_req.append(n_hits)
+
+        # batched encode of the misses, one jitted call per bucket batch
+        fresh: Dict[bytes, jnp.ndarray] = {}
+        for bi, misses in sorted(miss_by_bucket.items()):
+            spec = self.ladder[bi]
+            for i in range(0, len(misses), spec.batch):
+                chunk = misses[i:i + spec.batch]
+                seg_inputs, _valid = batch_bucket([p for _, p in chunk], spec)
+                emb = self._encode_bucket(bi, seg_inputs)       # (batch, d)
+                for j, (key, _) in enumerate(chunk):
+                    fresh[key] = emb[j]
+                self.stats.encoded_segments += len(chunk)
+
+        # cross-request insert (best-effort: over-capacity batches keep what
+        # fits): the next window (or request) hits these.  This window's hit
+        # keys are pinned — their slots are gathered below.
+        if self.cache is not None and fresh:
+            keys = list(fresh)
+            slots = self.cache.put(keys, jnp.stack([fresh[k] for k in keys]),
+                                   pinned=key_slot.keys())
+            for k, s in zip(keys, slots):
+                if s is not None:
+                    key_slot[k] = s
+
+        # per-request aggregate + head: J is padded to the next power of two
+        # with a validity mask so the jitted head compiles O(log J) shapes.
+        # This window's misses aggregate from ``fresh`` (bit-identical to
+        # what was just inserted); hits gather from the cache table.
+        out: List[RequestResult] = []
+        for ri, (graph, items) in enumerate(zip(graphs, requests)):
+            J = len(items)
+            Jp = next_pow2(J)
+            mask = np.zeros((Jp,), np.float32)
+            mask[:J] = 1.0
+            cached_pos = [j for j, (key, _, _) in enumerate(items)
+                          if key not in fresh]
+            cemb = None
+            if cached_pos:
+                cp = next_pow2(len(cached_pos))
+                cmask = np.zeros((cp,), np.float32)
+                cmask[:len(cached_pos)] = 1.0
+                cslots = [key_slot[items[j][0]] for j in cached_pos]
+                cslots += [cslots[0]] * (cp - len(cslots))
+                cemb = self.cache.gather(cslots, valid=cmask)    # (cp, d)
+            rows, ci = [], 0
+            for key, _, _ in items:
+                if key in fresh:
+                    rows.append(fresh[key])
+                else:
+                    rows.append(cemb[ci])
+                    ci += 1
+            h = jnp.stack(rows + [rows[0]] * (Jp - J))           # (Jp, d)
+            pred = self._head_fn(self.head, h, jnp.asarray(mask))
+            pred_np = np.asarray(jax.block_until_ready(pred))
+            latency_ms = (time.perf_counter() - t0) * 1e3
+            out.append(RequestResult(
+                request_id=self._request_counter, pred=pred_np,
+                latency_ms=latency_ms, n_segments=len(items),
+                n_cache_hits=hits_per_req[ri]))
+            self._request_counter += 1
+            self.stats.latencies_ms.append(latency_ms)
+            self.stats.n_segments += len(items)
+        self.stats.n_requests += len(graphs)
+        self.stats.wall_s += time.perf_counter() - t0
+        if self.cache is not None:
+            self.stats.cache = self.cache.stats()
+        return out
+
+    def _head_impl(self, head, h: jnp.ndarray, mask: jnp.ndarray):
+        """η=1 aggregate + head over one request's segment embeddings
+        (Jp, d) with validity mask (Jp,) — the paper's test-time
+        distribution P(F'(⊕ h_j), y)."""
+        J = jnp.maximum(jnp.sum(mask), 1.0)
+        if self.cfg.head_mode == "segment_sum":
+            scal = G.head_apply(head, h, "segment_sum")          # (Jp,)
+            s = jnp.sum(scal * mask)
+            return s / J if self.cfg.agg == "mean" else s
+        pooled = jnp.sum(h * mask[:, None], axis=0)
+        pooled = pooled / J if self.cfg.agg == "mean" else pooled
+        return G.head_apply(head, pooled, "mlp")
+
+    # -- streaming single-graph path --------------------------------------
+
+    def predict_streaming(self, graph: SyntheticGraph) -> np.ndarray:
+        """Constant-memory prediction for one (arbitrarily large) graph via
+        the lax.scan streaming encoder; bypasses the cache."""
+        spec = self.ladder[-1]
+        chunks = graph_to_chunks(graph, spec, self.cfg.stream_chunk,
+                                 partition=self.cfg.partition,
+                                 seed=self.cfg.partition_seed,
+                                 partition_max_nodes=self.cfg.max_seg_nodes)
+        if not hasattr(self, "_stream"):
+            self._stream = make_stream_encoder(
+                self.gnn_cfg, head_mode=self.cfg.head_mode, agg=self.cfg.agg)
+        pred, _ = self._stream(self.params, self.head,
+                               {k: jnp.asarray(v) for k, v in chunks.items()})
+        return np.asarray(pred)

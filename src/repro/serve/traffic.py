@@ -1,0 +1,62 @@
+"""Synthetic request traffic for the serving engine.
+
+Models the serving-side distribution the ROADMAP's "millions of users" north
+star implies: a pool of unique graphs with a heavy-tailed size mix, replayed
+as a request stream in which a configurable fraction of requests repeat an
+earlier graph (duplicate_rate) — the knob that exercises the cross-request
+segment cache.  Repeated requests reference the SAME graph object, so the
+deterministic partitioner reproduces identical segments and the cache keys
+match by content.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.graphs.data import SyntheticGraph, make_malnet_like
+
+
+@dataclass(frozen=True)
+class TrafficConfig:
+    n_unique: int = 24            # unique graphs in the pool
+    n_requests: int = 64          # total request stream length
+    duplicate_rate: float = 0.5   # P(request repeats an already-seen graph)
+    comm_range: Tuple[int, int] = (2, 12)    # wide -> mixed graph sizes
+    comm_size_range: Tuple[int, int] = (12, 48)
+    n_types: int = 5
+    n_feat: int = 8
+    seed: int = 0
+
+
+def make_graph_pool(cfg: TrafficConfig) -> List[SyntheticGraph]:
+    """Unique graphs with mixed sizes (small requests land in small buckets,
+    large ones span several segments) — the training dataset's generator, so
+    serving traffic follows the training distribution by construction."""
+    pool = make_malnet_like(
+        n_graphs=cfg.n_unique, n_classes=cfg.n_types, n_feat=cfg.n_feat,
+        comm_range=cfg.comm_range, comm_size_range=cfg.comm_size_range,
+        seed=cfg.seed)
+    for gi, g in enumerate(pool):
+        g.meta["pool_id"] = gi
+    return pool
+
+
+def make_request_stream(cfg: TrafficConfig) -> List[SyntheticGraph]:
+    """Request stream over the pool.  The first occurrence of each graph is
+    always a cold miss; with probability duplicate_rate a request re-serves a
+    uniformly chosen already-seen graph."""
+    pool = make_graph_pool(cfg)
+    rng = np.random.default_rng(cfg.seed + 1)
+    stream: List[SyntheticGraph] = []
+    seen: List[int] = []
+    fresh = list(range(len(pool)))
+    for _ in range(cfg.n_requests):
+        if seen and (not fresh or rng.random() < cfg.duplicate_rate):
+            gi = int(seen[int(rng.integers(len(seen)))])
+        else:
+            gi = fresh.pop(0)
+        seen.append(gi)
+        stream.append(pool[gi])
+    return stream

@@ -163,6 +163,54 @@ def test_moe_capacity_drops_tokens_but_stays_finite():
     assert bool(jnp.isfinite(out).all()) and bool(jnp.isfinite(aux))
 
 
+def test_moe_decode_reproduces_forward_capacity_dropping():
+    """Token-by-token moe_decode with routed-token counters must equal the
+    teacher-forced moe_forward EXACTLY where capacity dropping occurs — the
+    property behind deepseek-v3's decode/forward parity (B > 1 here, so the
+    per-row accounting is exercised across rows)."""
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import capacity, moe_decode, moe_forward, moe_params
+    cfg = MoEConfig(num_experts=4, top_k=2, expert_d_ff=32, capacity_factor=0.5)
+    p = moe_params(jax.random.key(0), 16, cfg, "silu")
+    B, S = 3, 8
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(B, S, 16)), jnp.float32)
+    out_fwd, _, counts_fwd = moe_forward(p, x, cfg, "silu", with_counts=True)
+    cap = capacity(S, cfg)
+    assert int(jnp.max(counts_fwd)) > cap, "test must exercise actual dropping"
+    counts = jnp.zeros((B, cfg.num_experts), jnp.int32)
+    outs = []
+    for t in range(S):
+        o, _, counts = moe_decode(p, x[:, t:t + 1], cfg, "silu", counts, cap)
+        outs.append(o[:, 0])
+    np.testing.assert_allclose(np.asarray(out_fwd),
+                               np.asarray(jnp.stack(outs, axis=1)),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(counts_fwd), np.asarray(counts))
+
+
+def test_moe_decode_with_overallocated_cache_matches_forward():
+    """Serving allocates the cache at max generation length, not the exact
+    sequence length; pinning moe_cap_len to the reference length keeps
+    decode parity with the teacher-forced forward."""
+    cfg = reduced(get_config("deepseek-v3-671b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(8)
+    B, S = 1, 8
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full = model.logits(params, model.forward(params, {"tokens": toks}))
+    caches = model.init_cache(B, 2 * S, jnp.float32)  # over-allocated
+    outs = []
+    for t in range(S):
+        lg, caches = model.decode_step(params, toks[:, t:t + 1], caches,
+                                       jnp.full((B,), t, jnp.int32),
+                                       moe_cap_len=S)
+        outs.append(lg[:, 0])
+    inc = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(inc),
+                               rtol=5e-4, atol=5e-4)
+
+
 def test_moe_aux_loss_balanced_routing_is_minimal():
     """Uniform router → aux == 1 (its minimum for top-1-normalized Switch
     loss scaled by E/K); peaked router → larger."""
