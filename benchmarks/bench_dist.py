@@ -1,0 +1,210 @@
+"""Tracked distributed-GST benchmark — step time and table-exchange bytes
+vs device count, plus async-vs-sync host-blocked milliseconds.
+
+For each device count in {1, 2, 8} (intersected with what the host
+exposes) it times the shard_map gst_efd train step with the row-sharded
+historical table, records the analytic ring-exchange bytes per step per
+device (dist/table.py accounting), and replays the SAME epoch trace
+through the synchronous and the async double-buffered feeder to compare
+host-blocked milliseconds per batch.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_dist.py            # full
+    PYTHONPATH=src python benchmarks/bench_dist.py --quick    # CI-sized
+
+Forces an 8-device CPU host via XLA_FLAGS when run without one (set the
+flag yourself to override).  Writes ``BENCH_gst_dist.json`` merge-keyed
+by config+backend+jax version, like BENCH_gst_step.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.isdir(os.path.join(_REPO, "src")) and \
+        os.path.join(_REPO, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8").strip()
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import dist as DT
+from repro.core import gst as G
+from repro.core.embedding_table import init_table
+from repro.dist import pipeline as DP
+from repro.dist import table as dtbl
+from repro.graphs import data as D
+from repro.graphs.gnn import GNNConfig, gnn_init, make_encode_fn
+from repro.optim import make_optimizer
+
+DEVICE_COUNTS = (1, 2, 8)
+VARIANT = "gst_efd"          # the paper's complete method — the hot path
+BACKBONE = "sage"
+NUM_SAMPLED = 1              # S; feeds BOTH the step and the byte accounting
+
+
+def _fresh_state(ds, hidden):
+    cfg = GNNConfig(backbone=BACKBONE, n_feat=ds.x.shape[-1], hidden=hidden)
+    enc = make_encode_fn(cfg)
+    key = jax.random.key(0)
+    bb = gnn_init(key, cfg)
+    head = G.head_init(jax.random.fold_in(key, 1), hidden, 5, "mlp")
+    opt = make_optimizer("adam", lr=1e-3)
+    state = G.TrainState(bb, head, opt.init((bb, head)),
+                         init_table(ds.n, ds.j_max, hidden),
+                         jnp.zeros((), jnp.int32))
+    return enc, opt, state
+
+
+def bench_device_count(ds, n_dev: int, *, batch_size: int, hidden: int,
+                       n_iters: int, warmup: int = 2):
+    enc, opt, state = _fresh_state(ds, hidden)
+    ctx = DT.make_context(DT.make_dist_mesh(n_dev), ds.n)
+    step = DT.make_dist_train_step(enc, opt, G.VARIANTS[VARIANT], ctx=ctx,
+                                   keep_prob=0.5, num_sampled=NUM_SAMPLED)
+    state = DT.device_state(ctx, state)
+    put = lambda b: DT.shard_batch(ctx, b)
+    sched = DP.epoch_ids(ds, batch_size, rng=np.random.default_rng(0),
+                         shuffle=False)
+    batch = put(DP._assemble(ds, sched[0]))
+    holder = {"state": state, "i": 0}
+
+    def one():
+        holder["state"], m = step(holder["state"], batch,
+                                  jax.random.PRNGKey(holder["i"]))
+        holder["i"] += 1
+        return m["loss"]
+
+    for _ in range(warmup):
+        one()
+    times = []
+    for _ in range(n_iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(one())
+        times.append((time.perf_counter() - t0) * 1e3)
+    train_ms = float(np.median(times))
+
+    # feeder comparison on the SAME trace (async must beat sync on
+    # host-blocked ms — CI enforces it via --strict)
+    feeder_rows = {}
+    for kind in ("sync", "async"):
+        feeder = DP.make_feeder(kind, ds, sched, put, depth=2)
+        for b in feeder:
+            holder["state"], m = step(holder["state"], b,
+                                      jax.random.PRNGKey(holder["i"]))
+            holder["i"] += 1
+        jax.block_until_ready(m["loss"])
+        feeder_rows[kind] = round(feeder.stats.host_blocked_ms_per_batch, 3)
+
+    b_local = batch_size // ctx.num_shards
+    return {
+        "device_count": ctx.num_shards,
+        "rows_per_shard": ctx.rows_per_shard,
+        "train_ms": round(train_ms, 3),
+        "exchange_bytes_per_step_per_device": dtbl.train_step_exchange_bytes(
+            ctx.num_shards, b_local, ds.j_max, NUM_SAMPLED, hidden,
+            use_table=True),
+        "host_blocked_ms_sync": feeder_rows["sync"],
+        "host_blocked_ms_async": feeder_rows["async"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero unless the async pipeline beats the "
+                         "synchronous feeder on total host-blocked ms")
+    ap.add_argument("--out", default=os.path.join(_REPO, "BENCH_gst_dist.json"))
+    ap.add_argument("--n-graphs", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--max-seg-nodes", type=int, default=32)
+    args = ap.parse_args()
+    n_graphs = args.n_graphs or (24 if args.quick else 48)
+    n_iters = args.iters or (5 if args.quick else 20)
+
+    graphs = D.make_malnet_like(n_graphs=n_graphs, seed=0)
+    ds, spec = DP.segment_dataset_shared(graphs, args.max_seg_nodes, seed=0)
+
+    counts = [c for c in DEVICE_COUNTS
+              if c <= jax.device_count() and args.batch_size % c == 0]
+    results = []
+    print(f"{'devices':>7s} {'train ms':>9s} {'xchg KiB':>9s} "
+          f"{'sync ms':>8s} {'async ms':>9s}")
+    for n_dev in counts:
+        row = bench_device_count(ds, n_dev, batch_size=args.batch_size,
+                                 hidden=args.hidden, n_iters=n_iters)
+        results.append(row)
+        print(f"{row['device_count']:7d} {row['train_ms']:9.2f} "
+              f"{row['exchange_bytes_per_step_per_device'] / 1024:9.1f} "
+              f"{row['host_blocked_ms_sync']:8.2f} "
+              f"{row['host_blocked_ms_async']:9.2f}", flush=True)
+
+    sync_total = sum(r["host_blocked_ms_sync"] for r in results)
+    async_total = sum(r["host_blocked_ms_async"] for r in results)
+    summary = {
+        "variant": VARIANT,
+        "backbone": BACKBONE,
+        # per-count win AND the (less noise-prone) total used by --strict
+        "async_beats_sync": all(
+            r["host_blocked_ms_async"] < r["host_blocked_ms_sync"]
+            for r in results),
+        "async_beats_sync_total": async_total < sync_total,
+        "host_blocked_ms_sync_total": round(sync_total, 3),
+        "host_blocked_ms_async_total": round(async_total, 3),
+        "max_devices": max((r["device_count"] for r in results), default=0),
+    }
+    config = {
+        "n_graphs": n_graphs, "batch_size": args.batch_size,
+        "hidden": args.hidden, "max_seg_nodes": args.max_seg_nodes,
+        "bucket": spec.key, "j_max": ds.j_max, "e_max": ds.e_max,
+        "iters": n_iters, "quick": args.quick,
+    }
+    env = {
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "device_count": jax.device_count(),
+        "pallas_interpret": jax.default_backend() != "tpu",
+    }
+    entry = {"summary": summary, "config": config, "env": env,
+             "results": results}
+    run_key = ",".join(f"{k}={v}" for k, v in sorted(config.items())) + \
+        f",backend={env['backend']},jax={env['jax']}," \
+        f"device_count={env['device_count']}"
+    payload = {"benchmark": "gst_dist", "unit": "ms_per_iter", "runs": {}}
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                prev = json.load(f)
+            if prev.get("benchmark") == "gst_dist" and \
+                    isinstance(prev.get("runs"), dict):
+                payload = prev
+        except (json.JSONDecodeError, OSError):
+            pass
+    payload["runs"][run_key] = entry
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(payload['runs'])} tracked run configs)")
+    if not summary["async_beats_sync"]:
+        print("WARNING: async pipeline did not beat the synchronous feeder "
+              "on host-blocked ms for every device count", file=sys.stderr)
+    if args.strict and not summary["async_beats_sync_total"]:
+        print(f"STRICT: async total host-blocked ms ({async_total:.2f}) did "
+              f"not beat sync ({sync_total:.2f})", file=sys.stderr)
+        sys.exit(2)
+
+
+if __name__ == "__main__":
+    main()

@@ -104,6 +104,7 @@ def bench_cell(ds, variant: str, backbone: str, use_pallas: bool, *,
         "variant": variant,
         "backbone": backbone,
         "use_pallas": use_pallas,
+        "device_count": jax.device_count(),
         "train_ms": round(train_ms, 3),
         "eval_ms": round(eval_ms, 3),
         "pallas_calls_encode_fwd": n_kernel_calls,
@@ -164,6 +165,7 @@ def main():
     env = {
         "backend": jax.default_backend(),
         "jax": jax.__version__,
+        "device_count": jax.device_count(),
         "pallas_interpret": jax.default_backend() != "tpu",
         "donated_train_state": True,
     }
@@ -177,10 +179,12 @@ def main():
         "env": env,
         "results": results,
     }
-    # merge keyed by (config, backend, jax version): runs on other configs /
-    # backends accumulate in the same file instead of clobbering each other
+    # merge keyed by (config, backend, jax version, device count): single-
+    # and multi-device runs (forced-host or real TPU slices) accumulate in
+    # the same file instead of clobbering each other
     run_key = ",".join(f"{k}={v}" for k, v in sorted(config.items())) + \
-        f",backend={env['backend']},jax={env['jax']}"
+        f",backend={env['backend']},jax={env['jax']}" + \
+        f",device_count={env['device_count']}"
     payload = {"benchmark": "gst_step", "unit": "ms_per_iter", "runs": {}}
     if os.path.exists(args.out):
         try:
@@ -189,13 +193,24 @@ def main():
             if prev.get("benchmark") == "gst_step":
                 if isinstance(prev.get("runs"), dict):
                     payload = prev
+                    # migrate pre-device_count keys (all were 1-device
+                    # runs); if BOTH forms of a key exist (file touched by
+                    # a pre-migration binary since), keep both entries
+                    # rather than clobbering one
+                    migrated = {}
+                    for k, v in payload["runs"].items():
+                        nk = k if "device_count=" in k else \
+                            k + ",device_count=1"
+                        migrated[k if nk in payload["runs"] and nk != k
+                                 else nk] = v
+                    payload["runs"] = migrated
                 elif "results" in prev:  # migrate the pre-keyed flat format
                     old_cfg = prev.get("config", {})
                     old_env = prev.get("env", {})
                     old_key = ",".join(
                         f"{k}={v}" for k, v in sorted(old_cfg.items())) + \
                         f",backend={old_env.get('backend')}," \
-                        f"jax={old_env.get('jax')}"
+                        f"jax={old_env.get('jax')},device_count=1"
                     payload["runs"][old_key] = {
                         k: prev[k] for k in
                         ("hot_path_summary", "config", "env", "results")

@@ -37,25 +37,30 @@ def lookup(table: EmbeddingTable, graph_ids: jnp.ndarray) -> Tuple[jnp.ndarray, 
     return table.emb[graph_ids], table.initialized[graph_ids]
 
 
-def update_sampled(table: EmbeddingTable, graph_ids, seg_idx, h_new, step) -> EmbeddingTable:
+def update_sampled(table: EmbeddingTable, graph_ids, seg_idx, h_new, step,
+                   *, mode: str = None) -> EmbeddingTable:
     """Write back fresh embeddings of the sampled segments.
 
     graph_ids: (B,); seg_idx: (B, S); h_new: (B, S, d) — stop-gradded by the
     caller.  Scatter via .at[] — under pjit this lowers to a sharded scatter
     on the data axis (graph_ids are data-sharded with the batch).
+
+    mode: forwarded to ``.at[].set`` — the dist/ table shard passes "drop" so
+    rows owned by other shards (redirected out of range) are skipped.
     """
     b_idx = jnp.broadcast_to(graph_ids[:, None], seg_idx.shape)
-    emb = table.emb.at[b_idx, seg_idx].set(h_new.astype(table.emb.dtype))
-    age = table.age.at[b_idx, seg_idx].set(step)
-    init = table.initialized.at[b_idx, seg_idx].set(True)
+    emb = table.emb.at[b_idx, seg_idx].set(h_new.astype(table.emb.dtype), mode=mode)
+    age = table.age.at[b_idx, seg_idx].set(step, mode=mode)
+    init = table.initialized.at[b_idx, seg_idx].set(True, mode=mode)
     return EmbeddingTable(emb, age, init)
 
 
-def update_all(table: EmbeddingTable, graph_ids, h_all, seg_valid, step) -> EmbeddingTable:
+def update_all(table: EmbeddingTable, graph_ids, h_all, seg_valid, step,
+               *, mode: str = None) -> EmbeddingTable:
     """Refresh every segment of the given graphs (head-finetuning phase)."""
-    emb = table.emb.at[graph_ids].set(h_all.astype(table.emb.dtype))
-    age = table.age.at[graph_ids].set(step)
-    init = table.initialized.at[graph_ids].set(seg_valid.astype(bool))
+    emb = table.emb.at[graph_ids].set(h_all.astype(table.emb.dtype), mode=mode)
+    age = table.age.at[graph_ids].set(step, mode=mode)
+    init = table.initialized.at[graph_ids].set(seg_valid.astype(bool), mode=mode)
     return EmbeddingTable(emb, age, init)
 
 

@@ -122,11 +122,16 @@ class GSTBatch(NamedTuple):
     seg_valid:  (B, J_max) 1/0.
     graph_ids:  (B,) int32 row in the historical table.
     labels:     (B,) int32 (ce) or float32 (ranking).
+    batch_pos:  optional (B,) int32 — each row's position in the GLOBAL
+                batch.  When set, segment sampling / SED draws use one key
+                per row (seg.per_row_keys) so a data-parallel shard of the
+                batch sees the same stream as the whole batch on one device.
     """
     seg_inputs: Any
     seg_valid: jnp.ndarray
     graph_ids: jnp.ndarray
     labels: jnp.ndarray
+    batch_pos: Optional[jnp.ndarray] = None
 
 
 class TrainState(NamedTuple):
@@ -192,6 +197,9 @@ def make_train_step(
     agg: str = "mean",
     aux_weight: float = 1e-2,
     use_pallas: bool = False,
+    table_lookup: Optional[Callable] = None,
+    table_update: Optional[Callable] = None,
+    axis_name: Optional[str] = None,
 ):
     """Returns ``step(state, batch, rng) -> (state, metrics)`` implementing
     Algorithm 1 (gst*) / Algorithm 2 lines 1-10 (e-variants).
@@ -200,21 +208,37 @@ def make_train_step(
     and the ⊕ pooling run as ONE fused sed_pool kernel pass over the
     (B, J, d) tensor instead of the multi-HBM-pass jnp composition.  The jnp
     path stays the oracle (parity asserted in tests/test_fused_path.py).
+
+    table_lookup / table_update: alternative historical-table accessors with
+    the signatures of ``tbl.lookup`` / ``tbl.update_sampled``.  dist/train.py
+    injects the ring-exchange ops of dist/table.py here so the SAME step
+    body runs per shard with a row-sharded table.
+
+    axis_name: when set the step body is assumed to run inside shard_map /
+    pmap over that axis — gradients, loss and metrics are pmean'd across it
+    before the (replicated) optimizer update.
     """
     S = num_sampled
     loss_pair = ce_loss if loss_kind == "ce" else pairwise_hinge_loss
     fused_sed = use_pallas and variant.use_sed and not variant.sampled_only
+    t_lookup = table_lookup or tbl.lookup
+    t_update = table_update or tbl.update_sampled
 
     def step(state: TrainState, batch: GSTBatch, rng):
         B, J = batch.seg_valid.shape
         r_sample, r_sed = jax.random.split(jax.random.fold_in(rng, state.step))
-        idx = seg.sample_segments(r_sample, batch.seg_valid, S)       # (B, S)
+        if batch.batch_pos is None:
+            idx = seg.sample_segments(r_sample, batch.seg_valid, S)   # (B, S)
+        else:
+            idx = seg.sample_segments_rowwise(
+                seg.per_row_keys(r_sample, batch.batch_pos),
+                batch.seg_valid, S)
         fresh_mask = seg.sampled_mask(idx, J) * batch.seg_valid       # (B, J)
         sampled_inputs = _flatten_bs(gather_segments(batch.seg_inputs, idx))
 
         # ---- stale embeddings (no grad) ---------------------------------
         if variant.use_table:
-            h_stale, initialized = tbl.lookup(state.table, batch.graph_ids)
+            h_stale, initialized = t_lookup(state.table, batch.graph_ids)
             stale_valid = batch.seg_valid * initialized.astype(batch.seg_valid.dtype)
         elif variant.recompute_stale:
             h_all, _ = encode_fn(state.backbone, _flatten_bs(batch.seg_inputs))
@@ -227,8 +251,13 @@ def make_train_step(
         # ---- SED / η weights (Eq. 1) ------------------------------------
         drop_mask = None
         if variant.use_sed:
-            eta, drop_mask = seg.sed_weights(r_sed, batch.seg_valid,
-                                             fresh_mask, keep_prob, S)
+            if batch.batch_pos is None:
+                eta, drop_mask = seg.sed_weights(r_sed, batch.seg_valid,
+                                                 fresh_mask, keep_prob, S)
+            else:
+                eta, drop_mask = seg.sed_weights_rowwise(
+                    seg.per_row_keys(r_sed, batch.batch_pos),
+                    batch.seg_valid, fresh_mask, keep_prob, S)
             eta = eta * jnp.where(
                 fresh_mask > 0, 1.0,
                 stale_valid.astype(jnp.float32))  # uninitialized stale -> 0
@@ -287,15 +316,21 @@ def make_train_step(
 
         (loss, (metric, h_comb)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)((state.backbone, state.head))
+        if axis_name is not None:
+            # data-parallel: per-shard means -> global means (params and
+            # opt_state stay replicated because every shard applies the
+            # identical pmean'd update)
+            grads = jax.lax.pmean(grads, axis_name)
+            loss = jax.lax.pmean(loss, axis_name)
+            metric = jax.lax.pmean(metric, axis_name)
         (new_backbone, new_head), new_opt, opt_metrics = optimizer.update(
             (state.backbone, state.head), grads, state.opt_state)
 
         new_table = state.table
         if variant.use_table:
-            b_idx = jnp.arange(B)[:, None]
             h_s_new = jax.lax.stop_gradient(
                 jnp.take_along_axis(h_comb, idx[..., None], axis=1))  # (B,S,d)
-            new_table = tbl.update_sampled(
+            new_table = t_update(
                 state.table, batch.graph_ids, idx, h_s_new, state.step)
 
         new_state = TrainState(new_backbone, new_head, new_opt, new_table,
@@ -308,7 +343,8 @@ def make_train_step(
 
 def make_eval_step(encode_fn: Callable, *, head_mode: str = "mlp",
                    loss_kind: str = "ce", agg: str = "mean",
-                   use_pallas: bool = False):
+                   use_pallas: bool = False,
+                   axis_name: Optional[str] = None):
     """Test-time: every segment fresh (paper's P(⊕ h_j, y) distribution)."""
     loss_pair = ce_loss if loss_kind == "ce" else pairwise_hinge_loss
 
@@ -334,20 +370,28 @@ def make_eval_step(encode_fn: Callable, *, head_mode: str = "mlp",
             else:
                 loss, metric = loss_pair(out[..., 0] if out.ndim > 1 else out,
                                          batch.labels)
+        if axis_name is not None:
+            loss = jax.lax.pmean(loss, axis_name)
+            metric = jax.lax.pmean(metric, axis_name)
         return {"loss": loss, "metric": metric}
 
     return step
 
 
-def make_refresh_step(encode_fn: Callable):
-    """Algorithm 2 line 12: refresh T with the final backbone."""
+def make_refresh_step(encode_fn: Callable,
+                      table_update_all: Optional[Callable] = None):
+    """Algorithm 2 line 12: refresh T with the final backbone.
+
+    table_update_all: alternative writer with the ``tbl.update_all``
+    signature (dist/train.py injects the ring-exchange writer)."""
+    t_update_all = table_update_all or tbl.update_all
 
     def step(state: TrainState, batch: GSTBatch):
         B, J = batch.seg_valid.shape
         h_flat, _ = encode_fn(state.backbone, _flatten_bs(batch.seg_inputs))
         h_all = h_flat.reshape(B, J, -1)
-        table = tbl.update_all(state.table, batch.graph_ids, h_all,
-                               batch.seg_valid, state.step)
+        table = t_update_all(state.table, batch.graph_ids, h_all,
+                             batch.seg_valid, state.step)
         return state._replace(table=table)
 
     return step
@@ -355,7 +399,9 @@ def make_refresh_step(encode_fn: Callable):
 
 def make_finetune_step(optimizer, *, head_mode: str = "mlp",
                        loss_kind: str = "ce", agg: str = "mean",
-                       use_pallas: bool = False):
+                       use_pallas: bool = False,
+                       table_lookup: Optional[Callable] = None,
+                       axis_name: Optional[str] = None):
     """Algorithm 2 lines 13-18: train F' only, inputs from the (fresh) table.
 
     Supports both heads: the MLP graph head F' (pool then predict) and the
@@ -364,9 +410,10 @@ def make_finetune_step(optimizer, *, head_mode: str = "mlp",
     segment_sum track.
     """
     loss_pair = ce_loss if loss_kind == "ce" else pairwise_hinge_loss
+    t_lookup = table_lookup or tbl.lookup
 
     def step(state: TrainState, batch: GSTBatch):
-        h_all, _ = tbl.lookup(state.table, batch.graph_ids)
+        h_all, _ = t_lookup(state.table, batch.graph_ids)
         h_all = h_all.astype(jnp.float32)
         eta = batch.seg_valid.astype(jnp.float32)
         if head_mode != "segment_sum":
@@ -390,6 +437,10 @@ def make_finetune_step(optimizer, *, head_mode: str = "mlp",
             return loss_pair(out[..., 0] if out.ndim > 1 else out, batch.labels)
 
         (loss, metric), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.head)
+        if axis_name is not None:
+            grads = jax.lax.pmean(grads, axis_name)
+            loss = jax.lax.pmean(loss, axis_name)
+            metric = jax.lax.pmean(metric, axis_name)
         new_head, new_opt, _ = optimizer.update(state.head, grads, state.opt_state)
         return state._replace(head=new_head, opt_state=new_opt,
                               step=state.step + 1), {"loss": loss, "metric": metric}

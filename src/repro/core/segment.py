@@ -32,6 +32,49 @@ def sample_segments(rng, seg_valid: jnp.ndarray, num_sampled: int) -> jnp.ndarra
     return idx.astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# per-row randomness (distributed training)
+#
+# A (B, J) draw from one key is a function of the whole batch shape, so a
+# data-parallel shard drawing (B/D, J) would see a different stream than the
+# single-device step.  Deriving one key per batch ROW from its global batch
+# position makes the stream a function of the row alone: the dist/ shard_map
+# steps and the single-device oracle sample identical segments and SED drops
+# (tests/test_dist.py asserts this row-for-row).
+# ---------------------------------------------------------------------------
+
+
+def per_row_keys(rng, batch_pos: jnp.ndarray) -> jnp.ndarray:
+    """One PRNG key per batch row, derived from the row's GLOBAL position.
+
+    batch_pos: (B,) int32 — position of each row in the global batch (just
+    ``arange(B)`` on a single device; the device's slice of it under data
+    parallelism)."""
+    return jax.vmap(lambda p: jax.random.fold_in(rng, p))(batch_pos)
+
+
+def sample_segments_rowwise(row_keys, seg_valid: jnp.ndarray,
+                            num_sampled: int) -> jnp.ndarray:
+    """``sample_segments`` with an independent key per row (see per_row_keys)."""
+    J = seg_valid.shape[-1]
+
+    def one(key, sv):
+        g = jax.random.gumbel(key, (J,))
+        scores = jnp.where(sv > 0, g, -jnp.inf)
+        _, idx = jax.lax.top_k(scores, num_sampled)
+        return idx.astype(jnp.int32)
+
+    return jax.vmap(one)(row_keys, seg_valid)
+
+
+def sed_weights_rowwise(row_keys, seg_valid, fresh_mask, keep_prob: float,
+                        num_sampled: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``sed_weights`` with an independent key per row (see per_row_keys)."""
+    J = seg_valid.shape[-1]
+    u = jax.vmap(lambda k: jax.random.uniform(k, (J,)))(row_keys)
+    return _sed_from_uniform(u, seg_valid, fresh_mask, keep_prob, num_sampled)
+
+
 def sampled_mask(idx: jnp.ndarray, J: int) -> jnp.ndarray:
     """(B, S) indices -> (B, J) 0/1 mask of sampled segments."""
     return jnp.sum(jax.nn.one_hot(idx, J, dtype=jnp.float32), axis=1)
@@ -45,11 +88,18 @@ def sed_weights(rng, seg_valid, fresh_mask, keep_prob: float,
     fresh_mask: (B, J) 1 where the segment was sampled for backprop.
     drop_mask:  1 where a *stale* segment is dropped by SED.
     """
+    u = jax.random.uniform(rng, seg_valid.shape)
+    return _sed_from_uniform(u, seg_valid, fresh_mask, keep_prob, num_sampled)
+
+
+def _sed_from_uniform(u, seg_valid, fresh_mask, keep_prob: float,
+                      num_sampled: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. 1 weights from precomputed uniform draws u (B, J)."""
     seg_valid = seg_valid.astype(jnp.float32)
     fresh_mask = fresh_mask.astype(jnp.float32)
     J_i = jnp.sum(seg_valid, axis=-1, keepdims=True)            # (B, 1)
     S = float(num_sampled)
-    drop = (jax.random.uniform(rng, seg_valid.shape) > keep_prob).astype(jnp.float32)
+    drop = (u > keep_prob).astype(jnp.float32)
     stale = seg_valid * (1.0 - fresh_mask)
     eta_fresh = keep_prob + (1.0 - keep_prob) * J_i / S
     eta = fresh_mask * eta_fresh + stale * (1.0 - drop)

@@ -1,0 +1,26 @@
+"""Distributed GST: row-sharded historical table (table.py), shard_map
+data-parallel train/refresh/finetune steps (train.py), and the async
+host→device segment pipeline (pipeline.py).
+
+Force a multi-device host for CPU development/CI with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set BEFORE jax
+initializes; ``python -m repro.launch.train_dist`` does it for you).
+"""
+from repro.dist.pipeline import (AsyncSegmentFeeder, SyncSegmentFeeder,
+                                 epoch_ids, make_feeder,
+                                 segment_dataset_shared, shared_bucket)
+from repro.dist.train import (AXIS, DistContext, batch_sharding, device_state,
+                              device_table, host_table, make_context,
+                              make_dist_eval_step, make_dist_finetune_step,
+                              make_dist_mesh, make_dist_refresh_step,
+                              make_dist_train_step, replicate, shard_batch)
+
+__all__ = [
+    "AXIS", "AsyncSegmentFeeder", "DistContext", "SyncSegmentFeeder",
+    "batch_sharding", "device_state", "device_table", "epoch_ids",
+    "host_table",
+    "make_context", "make_dist_eval_step", "make_dist_finetune_step",
+    "make_dist_mesh", "make_dist_refresh_step", "make_dist_train_step",
+    "make_feeder", "replicate", "segment_dataset_shared", "shard_batch",
+    "shared_bucket",
+]

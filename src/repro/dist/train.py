@@ -1,0 +1,197 @@
+"""shard_map data-parallel GST training (dist subsystem).
+
+Wraps the UNCHANGED step builders of core/gst.py in ``shard_map`` over a
+1-D ``data`` device mesh:
+
+  * backbone / head / opt_state / step — replicated (P());
+  * historical table — row-sharded (P("data") on the graph axis, see
+    dist/table.py);
+  * batch — sharded on the leading batch dim, carrying ``batch_pos`` so
+    every row draws the same per-row RNG stream as the single-device
+    oracle (core/segment.py::per_row_keys);
+  * gradients / loss / metrics — pmean'd across the axis inside the step
+    (core/gst.py ``axis_name=``), so the replicated optimizer update is
+    identical on every shard.
+
+The batched Pallas kernels of PR 1 run per-shard unchanged — shard_map
+hands each device its (B/D)·S segment slice and the kernels never see the
+mesh.  The whole step stays jit-donated: table shards scatter in place.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import embedding_table as tbl
+from repro.core import gst as G
+from repro.dist import table as dtbl
+
+AXIS = "data"
+
+
+# ---------------------------------------------------------------------------
+# mesh / context
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DistContext:
+    """Static facts every dist step closure needs."""
+    mesh: Mesh
+    num_shards: int
+    n_rows: int          # unpadded historical-table rows (n_graphs)
+    rows_per_shard: int
+
+    @property
+    def axis_name(self) -> str:
+        return AXIS
+
+
+def make_dist_mesh(num_devices: Optional[int] = None) -> Mesh:
+    """1-D data mesh over the first ``num_devices`` local devices."""
+    devs = jax.devices()
+    nd = num_devices or len(devs)
+    if nd > len(devs):
+        raise RuntimeError(
+            f"requested {nd} devices, found {len(devs)} — force a multi-"
+            "device host with XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=N before importing jax")
+    return Mesh(np.asarray(devs[:nd]), (AXIS,))
+
+
+def make_context(mesh: Mesh, n_rows: int) -> DistContext:
+    d = mesh.shape[AXIS]
+    return DistContext(mesh=mesh, num_shards=d, n_rows=n_rows,
+                       rows_per_shard=dtbl.rows_per_shard(n_rows, d))
+
+
+# ---------------------------------------------------------------------------
+# placement helpers
+# ---------------------------------------------------------------------------
+
+
+def replicate(ctx: DistContext, tree: Any) -> Any:
+    sh = NamedSharding(ctx.mesh, P())
+    # device_put takes numpy/jnp leaves directly — no staging copy through
+    # the default device
+    return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), tree)
+
+
+def batch_sharding(ctx: DistContext) -> NamedSharding:
+    return NamedSharding(ctx.mesh, P(AXIS))
+
+
+def device_table(ctx: DistContext, table: tbl.EmbeddingTable) -> tbl.EmbeddingTable:
+    """Pad the row axis to D·R and block-shard it over the data axis."""
+    padded = dtbl.pad_table(table, ctx.num_shards)
+    sh = batch_sharding(ctx)
+    return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), padded)
+
+
+def host_table(ctx: DistContext, table: tbl.EmbeddingTable) -> tbl.EmbeddingTable:
+    """Gather the sharded table back to host numpy, padding stripped."""
+    return dtbl.unpad_table(
+        jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), table),
+        ctx.n_rows)
+
+
+def device_state(ctx: DistContext, state: G.TrainState) -> G.TrainState:
+    """Replicate everything except the row-sharded table."""
+    return G.TrainState(
+        backbone=replicate(ctx, state.backbone),
+        head=replicate(ctx, state.head),
+        opt_state=replicate(ctx, state.opt_state),
+        table=device_table(ctx, state.table),
+        step=replicate(ctx, state.step))
+
+
+def shard_batch(ctx: DistContext, batch: G.GSTBatch) -> G.GSTBatch:
+    """Move a host batch onto the mesh, sharded on the batch dim, filling
+    ``batch_pos`` with global positions so shards and the single-device
+    oracle draw identical per-row RNG streams."""
+    B = batch.seg_valid.shape[0]
+    if B % ctx.num_shards:
+        raise ValueError(f"batch size {B} must divide over {ctx.num_shards} "
+                         "shards (drop-last batching guarantees this)")
+    if batch.batch_pos is None:
+        batch = batch._replace(batch_pos=np.arange(B, dtype=np.int32))
+    sh = batch_sharding(ctx)
+    # one copy per shard, straight from the host buffers (this is the async
+    # feeder's per-step hot path — no staging copy through device 0)
+    return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), batch)
+
+
+def _state_spec() -> G.TrainState:
+    return G.TrainState(
+        backbone=P(), head=P(), opt_state=P(),
+        table=tbl.EmbeddingTable(P(AXIS), P(AXIS), P(AXIS)),
+        step=P())
+
+
+def _batch_spec() -> G.GSTBatch:
+    return G.GSTBatch(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS))
+
+
+def _table_ops(ctx: DistContext):
+    kw = dict(axis_name=AXIS, num_shards=ctx.num_shards,
+              rows=ctx.rows_per_shard)
+    lookup = partial(dtbl.ring_lookup, **kw)
+    update = partial(dtbl.ring_update_sampled, **kw)
+    update_all = partial(dtbl.ring_update_all, **kw)
+    return lookup, update, update_all
+
+
+# ---------------------------------------------------------------------------
+# step builders (drop-in parallels of core/gst.py's)
+# ---------------------------------------------------------------------------
+
+
+def make_dist_train_step(encode_fn, optimizer, variant: G.GSTVariant, *,
+                         ctx: DistContext, donate: bool = True, **kwargs):
+    """Data-parallel ``G.make_train_step``: same signature
+    ``step(state, batch, rng) -> (state, metrics)``, state placed via
+    ``device_state`` and batches via ``shard_batch``/the async pipeline."""
+    lookup, update, _ = _table_ops(ctx)
+    inner = G.make_train_step(encode_fn, optimizer, variant,
+                              table_lookup=lookup, table_update=update,
+                              axis_name=AXIS, **kwargs)
+    smapped = shard_map(inner, mesh=ctx.mesh,
+                        in_specs=(_state_spec(), _batch_spec(), P()),
+                        out_specs=(_state_spec(), P()),
+                        check_rep=False)
+    return jax.jit(smapped, donate_argnums=(0,) if donate else ())
+
+
+def make_dist_eval_step(encode_fn, *, ctx: DistContext, **kwargs):
+    inner = G.make_eval_step(encode_fn, axis_name=AXIS, **kwargs)
+    smapped = shard_map(inner, mesh=ctx.mesh,
+                        in_specs=(_state_spec(), _batch_spec()),
+                        out_specs=P(), check_rep=False)
+    return jax.jit(smapped)
+
+
+def make_dist_refresh_step(encode_fn, *, ctx: DistContext,
+                           donate: bool = True):
+    _, _, update_all = _table_ops(ctx)
+    inner = G.make_refresh_step(encode_fn, table_update_all=update_all)
+    smapped = shard_map(inner, mesh=ctx.mesh,
+                        in_specs=(_state_spec(), _batch_spec()),
+                        out_specs=_state_spec(), check_rep=False)
+    return jax.jit(smapped, donate_argnums=(0,) if donate else ())
+
+
+def make_dist_finetune_step(optimizer, *, ctx: DistContext,
+                            donate: bool = True, **kwargs):
+    lookup, _, _ = _table_ops(ctx)
+    inner = G.make_finetune_step(optimizer, table_lookup=lookup,
+                                 axis_name=AXIS, **kwargs)
+    smapped = shard_map(inner, mesh=ctx.mesh,
+                        in_specs=(_state_spec(), _batch_spec()),
+                        out_specs=(_state_spec(), P()), check_rep=False)
+    return jax.jit(smapped, donate_argnums=(0,) if donate else ())

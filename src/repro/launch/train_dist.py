@@ -1,0 +1,172 @@
+"""Distributed GST training launcher (data-parallel shard_map).
+
+Runs Algorithm 1/2 over a 1-D data mesh with the row-sharded historical
+table and the async host→device segment pipeline:
+
+    # 8 forced host devices, complete method, async double buffering
+    PYTHONPATH=src python -m repro.launch.train_dist \
+        --devices 8 --variant gst_efd --backbone sage --epochs 5
+
+    # synchronous feeder baseline on the same trace
+    PYTHONPATH=src python -m repro.launch.train_dist \
+        --devices 8 --feeder sync --epochs 5
+
+``--devices N`` forces an N-device host via XLA_FLAGS when jax has not
+initialized yet (CPU development / CI; on a real TPU slice leave it unset
+to use the attached devices).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def _force_device_count(n: int) -> None:
+    if "jax" in sys.modules:
+        return  # too late — use whatever is attached
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=None,
+                    help="data-parallel width (forces an N-device host on "
+                         "CPU when jax is not yet initialized)")
+    ap.add_argument("--dataset", default="malnet", choices=["malnet"])
+    ap.add_argument("--backbone", default="sage", choices=["gcn", "sage"])
+    ap.add_argument("--variant", default="gst_efd")
+    ap.add_argument("--n-graphs", type=int, default=64)
+    ap.add_argument("--max-seg-nodes", type=int, default=32)
+    ap.add_argument("--epochs", type=int, default=5)
+    ap.add_argument("--finetune-epochs", type=int, default=3)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=5e-3)
+    ap.add_argument("--keep-prob", type=float, default=0.5)
+    ap.add_argument("--num-sampled", type=int, default=1,
+                    help="segments sampled for backprop per graph (S)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--feeder", default="async", choices=["async", "sync"],
+                    help="host→device pipeline: async double buffering "
+                         "(default) or the synchronous baseline")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="async pipeline depth (in-flight device batches)")
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        _force_device_count(args.devices)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import dist as DT
+    from repro.core import gst as G
+    from repro.core.embedding_table import init_table
+    from repro.dist import pipeline as DP
+    from repro.dist import table as dtbl
+    from repro.graphs import data as D
+    from repro.graphs.gnn import GNNConfig, gnn_init, make_encode_fn
+    from repro.optim import make_optimizer
+
+    n_dev = args.devices or jax.device_count()
+    if args.batch_size % n_dev:
+        ap.error(f"--batch-size {args.batch_size} must be divisible by the "
+                 f"device count {n_dev}")
+    if args.epochs < 1:
+        ap.error("--epochs must be >= 1")
+    if args.n_graphs < args.batch_size:
+        ap.error(f"--n-graphs {args.n_graphs} yields an empty drop-last "
+                 f"epoch at --batch-size {args.batch_size}")
+
+    graphs = D.make_malnet_like(n_graphs=args.n_graphs, seed=args.seed)
+    ds, spec = DP.segment_dataset_shared(graphs, args.max_seg_nodes,
+                                         seed=args.seed)
+    var = G.VARIANTS[args.variant]
+    cfg = GNNConfig(backbone=args.backbone, n_feat=graphs[0].x.shape[1],
+                    hidden=args.hidden, use_pallas=args.use_pallas)
+    enc = make_encode_fn(cfg)
+    key = jax.random.key(args.seed)
+    bb = gnn_init(key, cfg)
+    head = G.head_init(jax.random.fold_in(key, 1), args.hidden, 5, "mlp")
+    opt = make_optimizer("adam", lr=args.lr)
+    state = G.TrainState(bb, head, opt.init((bb, head)),
+                         init_table(ds.n, ds.j_max, args.hidden),
+                         jnp.zeros((), jnp.int32))
+
+    mesh = DT.make_dist_mesh(n_dev)
+    ctx = DT.make_context(mesh, ds.n)
+    state = DT.device_state(ctx, state)
+    step = DT.make_dist_train_step(enc, opt, var, ctx=ctx,
+                                   keep_prob=args.keep_prob,
+                                   num_sampled=args.num_sampled,
+                                   use_pallas=args.use_pallas)
+    eval_step = DT.make_dist_eval_step(enc, ctx=ctx,
+                                       use_pallas=args.use_pallas)
+    xbytes = dtbl.train_step_exchange_bytes(
+        ctx.num_shards, args.batch_size // ctx.num_shards, ds.j_max,
+        args.num_sampled, args.hidden, use_table=var.use_table)
+    print(f"[dist] devices={ctx.num_shards} rows/shard={ctx.rows_per_shard} "
+          f"bucket={spec.key} feeder={args.feeder} "
+          f"exchange={xbytes / 1024:.1f} KiB/step/device")
+
+    rng = np.random.default_rng(args.seed + 3)
+    put = lambda b: DT.shard_batch(ctx, b)
+    t_start = time.perf_counter()
+    last_stats = None
+    for epoch in range(args.epochs):
+        feeder = DP.make_feeder(args.feeder, ds,
+                                DP.epoch_ids(ds, args.batch_size, rng=rng),
+                                put, depth=args.depth)
+        losses = []
+        for batch in feeder:
+            state, m = step(state, batch, jax.random.PRNGKey(epoch))
+            losses.append(m["loss"])
+        jax.block_until_ready(losses[-1])
+        last_stats = feeder.stats
+        print(f"epoch {epoch}: loss={float(losses[-1]):.4f} "
+              f"host_blocked={last_stats.host_blocked_ms_per_batch:.2f} "
+              f"ms/batch", flush=True)
+
+    if var.finetune_head:
+        refresh = DT.make_dist_refresh_step(enc, ctx=ctx)
+        for batch in DP.make_feeder(
+                "sync", ds,
+                DP.epoch_ids(ds, args.batch_size, rng=rng, shuffle=False),
+                put):
+            state = refresh(state, batch)
+        ft_opt = make_optimizer("adam", lr=args.lr * 0.5)
+        state = state._replace(
+            opt_state=DT.replicate(ctx, ft_opt.init(jax.device_get(state.head))))
+        ft = DT.make_dist_finetune_step(ft_opt, ctx=ctx,
+                                        use_pallas=args.use_pallas)
+        m = None
+        for fe in range(args.finetune_epochs):
+            for batch in DP.make_feeder(
+                    args.feeder, ds,
+                    DP.epoch_ids(ds, args.batch_size, rng=rng), put,
+                    depth=args.depth):
+                state, m = ft(state, batch)
+        if m is not None:
+            print(f"finetune: loss={float(m['loss']):.4f}")
+
+    metrics = []
+    for batch in DP.make_feeder(
+            "sync", ds, DP.epoch_ids(ds, args.batch_size, rng=rng,
+                                     shuffle=False), put):
+        metrics.append(float(eval_step(state, batch)["metric"]))
+    wall = time.perf_counter() - t_start
+    print(f"[dist] done in {wall:.1f}s — train metric "
+          f"{float(np.mean(metrics)):.3f}, host blocked "
+          f"{last_stats.host_blocked_ms_per_batch:.2f} ms/batch "
+          f"({args.feeder})")
+
+
+if __name__ == "__main__":
+    main()
