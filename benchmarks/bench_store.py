@@ -1,0 +1,213 @@
+"""Tracked embedding-store benchmark — step time and migration traffic vs
+device-tier size.
+
+Runs the gst_efd train step over the same shuffled epoch trace with the
+historical table behind a TieredStore whose device tier holds a FRACTION
+of the table rows ({1.0, 0.5, 0.1}), plus the dense DeviceStore oracle
+row.  Per fraction it records median step ms (INCLUDING the host-side
+prepare/commit migration, which is the honest cost of a capped table),
+host<->device migration bytes per step, tier hit-rate, and the store
+counters; a parity gate asserts the 10%-tier run reproduces the oracle's
+final loss bit-for-bit before anything is written.
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_store.py           # full
+    PYTHONPATH=src python benchmarks/bench_store.py --quick   # CI-sized
+
+Writes ``BENCH_gst_store.json`` (repo root), merge-keyed by config +
+backend + jax version like the other tracked benchmarks.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.isdir(os.path.join(_REPO, "src")) and \
+        os.path.join(_REPO, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gst as G
+from repro.dist import pipeline as DP
+from repro.graphs import data as D
+from repro.graphs.gnn import GNNConfig, gnn_init, make_encode_fn
+from repro.optim import make_optimizer
+from repro.store import DeviceStore, TieredStore
+
+FRACTIONS = (1.0, 0.5, 0.1)
+VARIANT = "gst_efd"
+BACKBONE = "sage"
+
+
+def _fresh(ds, hidden):
+    cfg = GNNConfig(backbone=BACKBONE, n_feat=ds.x.shape[-1], hidden=hidden)
+    enc = make_encode_fn(cfg)
+    key = jax.random.key(0)
+    bb = gnn_init(key, cfg)
+    head = G.head_init(jax.random.fold_in(key, 1), hidden, 5, "mlp")
+    opt = make_optimizer("adam", lr=1e-3)
+    return enc, opt, bb, head
+
+
+def bench_store(ds, *, hidden: int, batch_size: int, n_iters: int,
+                fraction=None, warmup: int = None):
+    """fraction None -> DeviceStore oracle; else TieredStore with
+    device_rows = max(fraction * n, batch_size)."""
+    enc, opt, bb, head = _fresh(ds, hidden)
+    if fraction is None:
+        store = DeviceStore(ds.n, ds.j_max, hidden)
+    else:
+        store = TieredStore(ds.n, ds.j_max, hidden,
+                            device_rows=max(int(round(fraction * ds.n)),
+                                            batch_size))
+    state = G.TrainState(bb, head, opt.init((bb, head)),
+                         store.init_device_table(), jnp.zeros((), jnp.int32))
+    step = jax.jit(G.make_train_step(enc, opt, G.VARIANTS[VARIANT],
+                                     keep_prob=0.5), donate_argnums=(0,))
+    sched = DP.epoch_ids(ds, batch_size, rng=np.random.default_rng(0))
+    batches = [(ids, jax.tree_util.tree_map(jnp.asarray,
+                                            DP._assemble(ds, ids)))
+               for ids in sched]
+
+    def one(i, t):
+        ids, batch = batches[i % len(batches)]
+        table, slots = store.prepare(state_holder["s"].table, ids)
+        s = state_holder["s"]._replace(table=table)
+        s, m = step(s, batch._replace(graph_ids=jnp.asarray(slots)),
+                    jax.random.key(t))
+        state_holder["s"] = s
+        return m["loss"]
+
+    state_holder = {"s": state}
+    # warm a FULL epoch (+2): jit compiles absorbed and — for a tier big
+    # enough to hold every row — the whole table faulted in, so the timed
+    # region measures steady-state migration only
+    warmup = warmup if warmup is not None else len(batches) + 2
+    for t in range(warmup):
+        jax.block_until_ready(one(t, t))
+    from repro.store import StoreCounters
+    store.counters = StoreCounters()   # steady-state traffic only
+    times = []
+    loss = None
+    for t in range(n_iters):
+        t0 = time.perf_counter()
+        loss = one(warmup + t, warmup + t)
+        jax.block_until_ready(loss)
+        times.append((time.perf_counter() - t0) * 1e3)
+    store.flush_writebacks()
+    stats = store.stats()
+    row = {
+        "fraction": fraction if fraction is not None else "dense",
+        "device_rows": stats["device_rows"],
+        "n_rows": ds.n,
+        "step_ms": round(float(np.median(times)), 3),
+        "migration_bytes_per_step":
+            stats["migration_bytes"] // max(n_iters, 1),
+        "tier_hit_rate": round(stats["hit_rate"], 4),
+        "store": stats,
+    }
+    store.close()
+    return row, float(np.asarray(loss))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--out", default=os.path.join(_REPO, "BENCH_gst_store.json"))
+    ap.add_argument("--n-graphs", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--max-seg-nodes", type=int, default=32)
+    args = ap.parse_args()
+    n_graphs = args.n_graphs or (48 if args.quick else 96)
+    n_iters = args.iters or (6 if args.quick else 20)
+
+    graphs = D.make_malnet_like(n_graphs=n_graphs, seed=0)
+    ds, spec = DP.segment_dataset_shared(graphs, args.max_seg_nodes, seed=0)
+
+    print(f"{'tier':>8s} {'dev rows':>8s} {'step ms':>8s} "
+          f"{'migr B/step':>11s} {'hit':>5s}")
+    results = []
+    dense, dense_loss = bench_store(ds, hidden=args.hidden,
+                                    batch_size=args.batch_size,
+                                    n_iters=n_iters)
+    results.append(dense)
+    print(f"{'dense':>8s} {dense['device_rows']:8d} {dense['step_ms']:8.2f} "
+          f"{dense['migration_bytes_per_step']:11d} "
+          f"{dense['tier_hit_rate']:5.2f}")
+    frac_loss = {}
+    for f in FRACTIONS:
+        row, loss = bench_store(ds, hidden=args.hidden,
+                                batch_size=args.batch_size,
+                                n_iters=n_iters, fraction=f)
+        results.append(row)
+        frac_loss[f] = loss
+        print(f"{f:8.2f} {row['device_rows']:8d} {row['step_ms']:8.2f} "
+              f"{row['migration_bytes_per_step']:11d} "
+              f"{row['tier_hit_rate']:5.2f}", flush=True)
+
+    # contract gates BEFORE the write (a failing run must not pollute the
+    # tracked file): tiering must be invisible to the math, and a full-size
+    # device tier must go migration-free once warm
+    assert all(loss == dense_loss for loss in frac_loss.values()), \
+        f"tiered losses {frac_loss} != oracle {dense_loss} — bit-parity broken"
+    full = next(r for r in results if r["fraction"] == 1.0)
+    assert full["migration_bytes_per_step"] == 0, \
+        "a device tier holding every row must not migrate after warmup"
+    small = next(r for r in results if r["fraction"] == 0.1)
+    assert small["store"]["evictions"] > 0, \
+        "the 10% tier must actually churn"
+
+    summary = {
+        "variant": VARIANT,
+        "backbone": BACKBONE,
+        "dense_step_ms": dense["step_ms"],
+        "tiered_step_ms": {str(r["fraction"]): r["step_ms"]
+                           for r in results if r["fraction"] != "dense"},
+        "migration_bytes_per_step": {
+            str(r["fraction"]): r["migration_bytes_per_step"]
+            for r in results if r["fraction"] != "dense"},
+        "bit_parity_with_oracle": True,
+    }
+    config = {
+        "n_graphs": n_graphs, "batch_size": args.batch_size,
+        "hidden": args.hidden, "max_seg_nodes": args.max_seg_nodes,
+        "bucket": spec.key, "j_max": ds.j_max, "iters": n_iters,
+        "quick": args.quick,
+    }
+    env = {
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "device_count": jax.device_count(),
+    }
+    entry = {"summary": summary, "config": config, "env": env,
+             "results": results}
+    run_key = ",".join(f"{k}={v}" for k, v in sorted(config.items())) + \
+        f",backend={env['backend']},jax={env['jax']}"
+    payload = {"benchmark": "gst_store", "unit": "ms_per_iter", "runs": {}}
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                prev = json.load(f)
+            if prev.get("benchmark") == "gst_store" and \
+                    isinstance(prev.get("runs"), dict):
+                payload = prev
+        except (json.JSONDecodeError, OSError):
+            pass
+    payload["runs"][run_key] = entry
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(payload['runs'])} tracked run configs)")
+
+
+if __name__ == "__main__":
+    main()

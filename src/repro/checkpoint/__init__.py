@@ -1,3 +1,6 @@
-from repro.checkpoint.io import save_checkpoint, load_checkpoint, latest_checkpoint
+from repro.checkpoint.io import (load_checkpoint, load_store_checkpoint,
+                                 latest_checkpoint, save_checkpoint,
+                                 save_store_checkpoint)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint",
+           "save_store_checkpoint", "load_store_checkpoint"]

@@ -65,3 +65,53 @@ def load_checkpoint(path: str, like: Any) -> Any:
         arr = np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(rec["shape"])
         leaves.append(jnp.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+
+
+# ---------------------------------------------------------------------------
+# embedding-store checkpointing (store/): the historical table's rows, ages
+# and init flags — BOTH tiers — so a capped-capacity run is resumable
+# ---------------------------------------------------------------------------
+
+
+def save_store_checkpoint(path_dir: str, step: int, store, table,
+                          extra: Any = None, keep: int = 3) -> str:
+    """Checkpoint an EmbeddingStore's full logical table.
+
+    ``store.snapshot(table)`` merges the device tier into the host tier
+    (flushing pending async write-backs first), so the file holds the
+    dense (n_rows, J, d) embeddings + ages + initialized flags regardless
+    of backend or how rows were split across tiers at save time.
+    ``extra``: optional dict pytree saved alongside (params, opt state…);
+    its keys must not include "table".
+    """
+    extra = dict(extra or {})
+    if "table" in extra:
+        raise ValueError('"table" is reserved for the store snapshot')
+    snap = store.snapshot(table)
+    return save_checkpoint(path_dir, step, {"table": snap._asdict(), **extra},
+                           keep=keep)
+
+
+def load_store_checkpoint(path: str, store, extra_like: Any = None):
+    """Restore a ``save_store_checkpoint`` file into ``store``.
+
+    Returns ``(device_table, extra)``: the store's new device tier (seed it
+    into TrainState) and the restored extra pytree matching ``extra_like``.
+    Residency is reset — a TieredStore restarts with every row in the host
+    tier and re-faults working sets on demand; since residency is not
+    semantic state, training resumes bit-exactly either way
+    (tests/test_store.py::test_checkpoint_roundtrip_*).
+    """
+    from repro.core.embedding_table import EmbeddingTable
+
+    extra_like = dict(extra_like or {})
+    like_table = {
+        "emb": np.zeros((store.n_rows, store.j_max, store.d_h),
+                        jnp.dtype(store.dtype)),
+        "age": np.zeros((store.n_rows, store.j_max), np.int32),
+        "initialized": np.zeros((store.n_rows, store.j_max), bool),
+    }
+    tree = load_checkpoint(path, {"table": like_table, **extra_like})
+    snap = EmbeddingTable(**{k: tree["table"][k] for k in like_table})
+    device_table = store.restore(snap)
+    return device_table, {k: tree[k] for k in extra_like}

@@ -81,13 +81,18 @@ def lookup_rows(table: EmbeddingTable, rows) -> Tuple[jnp.ndarray, jnp.ndarray]:
 
 
 def update_rows(table: EmbeddingTable, rows, h_new, step) -> EmbeddingTable:
-    """Write h_new (B, d) into slots (B,) — one scatter, jit-friendly."""
+    """Write h_new (B, d) into slots (B,) — one scatter, jit-friendly.
+    An empty row set is a no-op (no zero-size scatter to compile)."""
+    if rows.shape[0] == 0:
+        return table
     return update_sampled(table, rows, jnp.zeros((rows.shape[0], 1), jnp.int32),
                           h_new[:, None, :], step)
 
 
 def evict_rows(table: EmbeddingTable, rows) -> EmbeddingTable:
     """Mark slots free (initialized=False); embeddings are left in place and
-    simply overwritten on reuse."""
+    simply overwritten on reuse.  An empty row set is a no-op."""
+    if rows.shape[0] == 0:
+        return table
     init = table.initialized.at[rows, 0].set(False)
     return EmbeddingTable(table.emb, table.age, init)

@@ -212,7 +212,12 @@ def make_train_step(
     table_lookup / table_update: alternative historical-table accessors with
     the signatures of ``tbl.lookup`` / ``tbl.update_sampled``.  dist/train.py
     injects the ring-exchange ops of dist/table.py here so the SAME step
-    body runs per shard with a row-sharded table.
+    body runs per shard with a row-sharded table.  These are the store
+    layer's device-access points: ``state.table`` is whatever device tier
+    the driver's EmbeddingStore (store/) provides, and ``batch.graph_ids``
+    are that store's device-row ids — a TieredStore renames rows host-side
+    (store.prepare) so nothing inside the jitted step knows the table is
+    capped.
 
     axis_name: when set the step body is assumed to run inside shard_map /
     pmap over that axis — gradients, loss and metrics are pmean'd across it

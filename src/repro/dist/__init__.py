@@ -13,14 +13,16 @@ from repro.dist.train import (AXIS, DistContext, batch_sharding, device_state,
                               device_table, host_table, make_context,
                               make_dist_eval_step, make_dist_finetune_step,
                               make_dist_mesh, make_dist_refresh_step,
-                              make_dist_train_step, replicate, shard_batch)
+                              make_dist_store, make_dist_train_step,
+                              replicate, shard_batch)
 
 __all__ = [
     "AXIS", "AsyncSegmentFeeder", "DistContext", "SyncSegmentFeeder",
     "batch_sharding", "device_state", "device_table", "epoch_ids",
     "host_table",
     "make_context", "make_dist_eval_step", "make_dist_finetune_step",
-    "make_dist_mesh", "make_dist_refresh_step", "make_dist_train_step",
+    "make_dist_mesh", "make_dist_refresh_step", "make_dist_store",
+    "make_dist_train_step",
     "make_feeder", "replicate", "segment_dataset_shared", "shard_batch",
     "shared_bucket",
 ]

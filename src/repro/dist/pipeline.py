@@ -15,6 +15,12 @@ and count their host-blocked milliseconds — the time ``next()`` spends before 
 batch is available — so bench_dist.py can show the async pipeline beats
 the synchronous feeder on the same trace (BENCH_gst_dist.json).
 
+``put_fn`` owns what a delivered item IS: launch/train_dist.py's put
+calls ``store.begin`` (tiered-table residency bookkeeping + staging,
+safe on this producer thread) and returns ``(prep, device_batch)`` —
+the consumer commits each staged migration in delivery order.  The
+matching device→host lane is the AsyncHostWriter re-exported below.
+
 Padding policy is SHARED with serving: ``shared_bucket`` picks the
 (m_max, e_max) shape from the serve bucket ladder (serve/buckets.py) and
 ``segment_dataset_shared`` pads the training dataset to it via the same
@@ -31,7 +37,7 @@ import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Iterator, List, Optional, Tuple
+from typing import Any, Callable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -63,6 +69,18 @@ def segment_dataset_shared(graphs, max_seg_nodes: int = 64, *,
     ds = Bt.segment_dataset(graphs, spec.m_max, method=method, seed=seed,
                             j_max=j_max, e_max=spec.e_max)
     return ds, spec
+
+
+# ---------------------------------------------------------------------------
+# async device→host write-back lane
+# ---------------------------------------------------------------------------
+
+# The opposite lane of this pipeline: the tiered embedding store submits its
+# eviction write-backs to an AsyncHostWriter so the device_get + host-array
+# copy overlaps with the running step.  The class itself lives under store/
+# (import-graph leaf); re-exported here because it IS the pipeline's
+# device→host half.
+from repro.store.writeback import AsyncHostWriter  # noqa: E402,F401
 
 
 # ---------------------------------------------------------------------------
@@ -103,7 +121,7 @@ class SyncSegmentFeeder:
     (all host work is blocked time by construction)."""
 
     def __init__(self, ds: Bt.SegmentedDataset, id_schedule: List[np.ndarray],
-                 put_fn: Callable[[G.GSTBatch], G.GSTBatch]):
+                 put_fn: Callable[[G.GSTBatch], Any]):
         self._ds = ds
         self._sched = id_schedule
         self._put = put_fn
@@ -136,7 +154,7 @@ class AsyncSegmentFeeder:
     _DONE = object()
 
     def __init__(self, ds: Bt.SegmentedDataset, id_schedule: List[np.ndarray],
-                 put_fn: Callable[[G.GSTBatch], G.GSTBatch], *, depth: int = 2):
+                 put_fn: Callable[[G.GSTBatch], Any], *, depth: int = 2):
         if depth < 1:
             raise ValueError("depth must be >= 1")
         self._ds = ds
@@ -216,7 +234,7 @@ class AsyncSegmentFeeder:
 
 def make_feeder(kind: str, ds: Bt.SegmentedDataset,
                 id_schedule: List[np.ndarray],
-                put_fn: Callable[[G.GSTBatch], G.GSTBatch], *,
+                put_fn: Callable[[G.GSTBatch], Any], *,
                 depth: int = 2):
     if kind == "async":
         return AsyncSegmentFeeder(ds, id_schedule, put_fn, depth=depth)

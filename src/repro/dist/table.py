@@ -38,33 +38,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import embedding_table as tbl
+from repro.kernels.ops import pad_leading
 
 
 # ---------------------------------------------------------------------------
-# row partitioning (host-side, static)
+# row partitioning (host-side, static) — canonical definitions live with the
+# embedding store (store/base.py), which owns row geometry now; re-exported
+# here because the ring exchange is phrased in terms of them
 # ---------------------------------------------------------------------------
 
-
-def rows_per_shard(n_rows: int, num_shards: int) -> int:
-    """R such that D·R >= n (block row partition, last shard may pad)."""
-    return -(-n_rows // max(num_shards, 1))
-
-
-def padded_rows(n_rows: int, num_shards: int) -> int:
-    return rows_per_shard(n_rows, num_shards) * max(num_shards, 1)
+from repro.store.base import padded_rows, rows_per_shard  # noqa: E402,F401
 
 
 def pad_table(table: tbl.EmbeddingTable, num_shards: int) -> tbl.EmbeddingTable:
     """Pad the row axis to a multiple of the shard count (no-op if aligned)."""
-    n = table.emb.shape[0]
-    n_pad = padded_rows(n, num_shards)
-    if n_pad == n:
-        return table
-    extra = n_pad - n
-    pad = lambda x: jnp.concatenate(
-        [x, jnp.zeros((extra,) + x.shape[1:], x.dtype)], axis=0)
-    return tbl.EmbeddingTable(pad(table.emb), pad(table.age),
-                              pad(table.initialized))
+    n_pad = padded_rows(table.emb.shape[0], num_shards)
+    return tbl.EmbeddingTable(*(pad_leading(x, n_pad) for x in table))
 
 
 def unpad_table(table: tbl.EmbeddingTable, n_rows: int) -> tbl.EmbeddingTable:

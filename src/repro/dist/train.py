@@ -5,7 +5,11 @@ Wraps the UNCHANGED step builders of core/gst.py in ``shard_map`` over a
 
   * backbone / head / opt_state / step — replicated (P());
   * historical table — row-sharded (P("data") on the graph axis, see
-    dist/table.py);
+    dist/table.py).  Since the store refactor the sharded array is
+    whatever device tier the context's EmbeddingStore provides
+    (``make_dist_store``): the full table (DeviceStore, default) or each
+    shard's bounded LRU slice of it (TieredStore, ``device_rows=``), with
+    the ring exchange routing on device-row ids via ``ctx.table_rows``;
   * batch — sharded on the leading batch dim, carrying ``batch_pos`` so
     every row draws the same per-row RNG stream as the single-device
     oracle (core/segment.py::per_row_keys);
@@ -24,6 +28,7 @@ from functools import partial
 from typing import Any, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -31,6 +36,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import embedding_table as tbl
 from repro.core import gst as G
 from repro.dist import table as dtbl
+from repro.store import DeviceStore, EmbeddingStore, TieredStore
+from repro.store import base as store_base
 
 AXIS = "data"
 
@@ -47,10 +54,22 @@ class DistContext:
     num_shards: int
     n_rows: int          # unpadded historical-table rows (n_graphs)
     rows_per_shard: int
+    # device-resident rows PER SHARD when the table is tiered (store/),
+    # None = fully device-resident.  The ring exchange routes by
+    # ``id // table_rows``; with a tiered store the ids the step sees are
+    # the store's device-row ("slot") ids, whose owner arithmetic uses the
+    # device-tier row count instead of the full shard row count.
+    device_rows_per_shard: Optional[int] = None
 
     @property
     def axis_name(self) -> str:
         return AXIS
+
+    @property
+    def table_rows(self) -> int:
+        """Rows per shard OF THE TABLE THE STEP SEES (ring-exchange owner
+        arithmetic)."""
+        return self.device_rows_per_shard or self.rows_per_shard
 
 
 def make_dist_mesh(num_devices: Optional[int] = None) -> Mesh:
@@ -65,10 +84,31 @@ def make_dist_mesh(num_devices: Optional[int] = None) -> Mesh:
     return Mesh(np.asarray(devs[:nd]), (AXIS,))
 
 
-def make_context(mesh: Mesh, n_rows: int) -> DistContext:
+def make_context(mesh: Mesh, n_rows: int,
+                 device_rows: Optional[int] = None) -> DistContext:
+    """``device_rows``: total device-resident row cap (the
+    --table-device-rows knob); None keeps the table fully resident."""
     d = mesh.shape[AXIS]
+    per_shard = None if device_rows is None else \
+        store_base.device_rows_per_shard(n_rows, d, device_rows)
     return DistContext(mesh=mesh, num_shards=d, n_rows=n_rows,
-                       rows_per_shard=dtbl.rows_per_shard(n_rows, d))
+                       rows_per_shard=dtbl.rows_per_shard(n_rows, d),
+                       device_rows_per_shard=per_shard)
+
+
+def make_dist_store(ctx: DistContext, j_max: int, d_h: int,
+                    dtype=jnp.float32) -> EmbeddingStore:
+    """The context's embedding store: tiered per-shard slices when the
+    context carries a device-row cap, the dense device-resident backend
+    otherwise.  Either way the device tier is row-sharded over the mesh
+    (P(AXIS)) and the ring exchange runs unchanged on its rows."""
+    sh = batch_sharding(ctx)
+    if ctx.device_rows_per_shard is None:
+        return DeviceStore(ctx.n_rows, j_max, d_h, num_shards=ctx.num_shards,
+                           dtype=dtype, sharding=sh)
+    return TieredStore(ctx.n_rows, j_max, d_h,
+                       device_rows=ctx.device_rows_per_shard * ctx.num_shards,
+                       num_shards=ctx.num_shards, dtype=dtype, sharding=sh)
 
 
 # ---------------------------------------------------------------------------
@@ -101,13 +141,19 @@ def host_table(ctx: DistContext, table: tbl.EmbeddingTable) -> tbl.EmbeddingTabl
         ctx.n_rows)
 
 
-def device_state(ctx: DistContext, state: G.TrainState) -> G.TrainState:
-    """Replicate everything except the row-sharded table."""
+def device_state(ctx: DistContext, state: G.TrainState,
+                 store: Optional[EmbeddingStore] = None) -> G.TrainState:
+    """Replicate everything except the row-sharded table.  ``state.table``
+    is the full dense table; with a ``store`` it seeds the store's tiers
+    (store.restore) and the TrainState carries the store's device tier —
+    possibly a bounded slice of it — instead of the whole thing."""
+    table = (store.restore(state.table) if store is not None
+             else device_table(ctx, state.table))
     return G.TrainState(
         backbone=replicate(ctx, state.backbone),
         head=replicate(ctx, state.head),
         opt_state=replicate(ctx, state.opt_state),
-        table=device_table(ctx, state.table),
+        table=table,
         step=replicate(ctx, state.step))
 
 
@@ -140,7 +186,7 @@ def _batch_spec() -> G.GSTBatch:
 
 def _table_ops(ctx: DistContext):
     kw = dict(axis_name=AXIS, num_shards=ctx.num_shards,
-              rows=ctx.rows_per_shard)
+              rows=ctx.table_rows)
     lookup = partial(dtbl.ring_lookup, **kw)
     update = partial(dtbl.ring_update_sampled, **kw)
     update_all = partial(dtbl.ring_update_all, **kw)

@@ -16,11 +16,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gst as G
-from repro.core.embedding_table import init_table
 from repro.graphs import batching as Bt
 from repro.graphs import data as D
 from repro.graphs.gnn import GNNConfig, gnn_init, make_encode_fn
 from repro.optim import make_optimizer
+from repro.store import DeviceStore, TieredStore
 
 
 @dataclass
@@ -34,6 +34,7 @@ class ExperimentResult:
     finetuned: bool = False      # whether the Algorithm-2 head-finetuning
                                  # phase (lines 11-18) actually ran
     curve: List[Dict] = field(default_factory=list)
+    store_stats: Optional[Dict] = None   # residency counters (store/)
 
 
 def _to_batch(seg_inputs, seg_valid, ids, labels) -> G.GSTBatch:
@@ -61,6 +62,7 @@ def run_experiment(
     test_frac: float = 0.25,
     record_curve: bool = False,
     use_pallas: bool = False,
+    table_device_rows: Optional[int] = None,
 ) -> ExperimentResult:
     var = G.VARIANTS[variant]
     if dataset == "malnet":
@@ -92,8 +94,15 @@ def run_experiment(
     bb = gnn_init(key, cfg)
     head = G.head_init(jax.random.fold_in(key, 1), hidden, n_out, head_mode)
     opt = make_optimizer("adam", lr=lr)
+    # the historical table lives behind the embedding store: fully
+    # device-resident by default, or a bounded LRU of hot rows over a
+    # host-RAM tier when table_device_rows caps device residency —
+    # bit-identical either way (tests/test_store.py)
+    store = (TieredStore(ds.n, ds.j_max, hidden,
+                         device_rows=max(table_device_rows, batch_size))
+             if table_device_rows else DeviceStore(ds.n, ds.j_max, hidden))
     state = G.TrainState(bb, head, opt.init((bb, head)),
-                         init_table(ds.n, ds.j_max, hidden),
+                         store.init_device_table(),
                          jnp.zeros((), jnp.int32))
 
     # TrainState is donated through the hot steps so the (n, J, d) embedding
@@ -116,45 +125,69 @@ def run_experiment(
             ws.append(tup[1].shape[0])
         return float(np.average(ms, weights=ws)) if ms else float("nan")
 
-    curve = []
-    iter_times = []
-    brng = np.random.default_rng(seed + 3)
-    last_train = 0.0
-    for epoch in range(epochs):
-        ep_metrics = []
-        for tup in Bt.batch_iterator(ds, batch_size, rng=brng):
-            batch = _to_batch(*tup)
-            t0 = time.perf_counter()
-            state, m = step(state, batch, jax.random.key(epoch))
-            jax.block_until_ready(m["loss"])
-            iter_times.append(time.perf_counter() - t0)
-            ep_metrics.append(float(m["metric"]))
-        last_train = float(np.mean(ep_metrics))
-        if record_curve:
-            curve.append({"epoch": epoch, "train": last_train,
-                          "test": evaluate(ds_test, state)})
+    def route(tup):
+        """Map the batch's graph ids onto device rows through the store
+        (migrating tiers as needed) — identity under the DeviceStore."""
+        nonlocal state
+        table, slots = store.prepare(state.table, tup[2])
+        state = state._replace(table=table)
+        return jnp.asarray(slots)
 
-    # ---- head finetuning phase (Algorithm 2 lines 11-18) -----------------
-    # Runs for BOTH head modes: the MLP graph head and the TpuGraphs
-    # per-segment scalar head finetune from the refreshed table.
-    finetuned = False
-    if var.finetune_head:
-        for tup in Bt.batch_iterator(ds, batch_size, rng=brng, shuffle=False):
-            state = refresh(state, _to_batch(*tup))
-        ft_opt = make_optimizer("adam", lr=lr * 0.5)
-        state = state._replace(opt_state=ft_opt.init(state.head))
-        ft_step = jax.jit(G.make_finetune_step(
-            ft_opt, head_mode=head_mode, loss_kind=loss_kind, agg=agg,
-            use_pallas=use_pallas), donate_argnums=(0,))
-        for fe in range(finetune_epochs):
+    def routed(tup):
+        return _to_batch(*tup)._replace(graph_ids=route(tup))
+
+    # the store owns a write-back thread when tiered — release it even
+    # when training raises (try/finally), keeping repeated runs leak-free
+    try:
+        curve = []
+        iter_times = []
+        brng = np.random.default_rng(seed + 3)
+        last_train = 0.0
+        for epoch in range(epochs):
+            ep_metrics = []
             for tup in Bt.batch_iterator(ds, batch_size, rng=brng):
-                state, m = ft_step(state, _to_batch(*tup))
-                finetuned = True
+                batch = _to_batch(*tup)
+                # the timed region includes the tier migration — it IS part of
+                # the step cost of a capped-capacity table (bench_store.py)
+                t0 = time.perf_counter()
+                slots = route(tup)   # replaces state.table before step sees it
+                state, m = step(state, batch._replace(graph_ids=slots),
+                                jax.random.key(epoch))
+                jax.block_until_ready(m["loss"])
+                iter_times.append(time.perf_counter() - t0)
+                ep_metrics.append(float(m["metric"]))
+            last_train = float(np.mean(ep_metrics))
             if record_curve:
-                curve.append({"epoch": epochs + fe, "train": float(m["metric"]),
+                curve.append({"epoch": epoch, "train": last_train,
                               "test": evaluate(ds_test, state)})
-        state = state._replace(opt_state=opt.init((state.backbone, state.head)))
 
+        # ---- head finetuning phase (Algorithm 2 lines 11-18) -----------------
+        # Runs for BOTH head modes: the MLP graph head and the TpuGraphs
+        # per-segment scalar head finetune from the refreshed table.
+        finetuned = False
+        if var.finetune_head:
+            for tup in Bt.batch_iterator(ds, batch_size, rng=brng, shuffle=False):
+                batch = routed(tup)   # replaces state.table before refresh runs
+                state = refresh(state, batch)
+            ft_opt = make_optimizer("adam", lr=lr * 0.5)
+            state = state._replace(opt_state=ft_opt.init(state.head))
+            ft_step = jax.jit(G.make_finetune_step(
+                ft_opt, head_mode=head_mode, loss_kind=loss_kind, agg=agg,
+                use_pallas=use_pallas), donate_argnums=(0,))
+            for fe in range(finetune_epochs):
+                for tup in Bt.batch_iterator(ds, batch_size, rng=brng):
+                    batch = routed(tup)
+                    state, m = ft_step(state, batch)
+                    finetuned = True
+                if record_curve:
+                    curve.append({"epoch": epochs + fe, "train": float(m["metric"]),
+                                  "test": evaluate(ds_test, state)})
+            state = state._replace(opt_state=opt.init((state.backbone, state.head)))
+
+        store.flush_writebacks()
+        store_stats = store.stats()
+    finally:
+        store.close()
     # skip the first few compile-laden iterations in the timing
     ms_per_iter = float(np.median(iter_times[3:]) * 1e3) if len(iter_times) > 4 else float("nan")
     return ExperimentResult(
@@ -162,4 +195,4 @@ def run_experiment(
         train_metric=last_train,
         test_metric=evaluate(ds_test, state),
         ms_per_iter=ms_per_iter, use_pallas=use_pallas,
-        finetuned=finetuned, curve=curve)
+        finetuned=finetuned, curve=curve, store_stats=store_stats)

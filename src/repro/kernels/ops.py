@@ -7,9 +7,11 @@ against the pure-jnp oracles in ref.py.
 from __future__ import annotations
 
 from functools import partial
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.sed_pool import sed_pool as _sed_pool
@@ -20,6 +22,57 @@ from repro.kernels.swa_attention import swa_attention as _swa_attention
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# shape-padding helpers (shared by serve/cache.py, dist/table.py, store/)
+#
+# Scatter/gather row sets vary per batch; padding their length to the next
+# power of two keeps the jitted-shape set O(log capacity) instead of one
+# compile per distinct row count.  Padding repeats the LAST entry, so a
+# padded scatter writes the same (row, value) pair twice — a deterministic
+# no-op — and a padded gather reads rows the caller then ignores.
+# ---------------------------------------------------------------------------
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def prev_pow2(n: int) -> int:
+    """Largest power of two <= n (n >= 1) — chunking a pow2-padded row set
+    by a non-pow2 capacity without minting new jitted shapes."""
+    return 1 << (n.bit_length() - 1)
+
+
+def pad_rows_pow2(rows: Sequence[int], *alongside: Sequence,
+                  ) -> Tuple[np.ndarray, ...]:
+    """Pad ``rows`` (and any parallel index lists) to the next power of two
+    by repeating the last entry.  Returns int-typed numpy arrays ready for a
+    padded scatter/gather; ``rows`` must be non-empty."""
+    n = next_pow2(len(rows))
+    out = []
+    for seq in (rows,) + alongside:
+        seq = list(seq)
+        out.append(np.asarray(seq + [seq[-1]] * (n - len(seq)), np.int32))
+    return tuple(out)
+
+
+def pad_leading(x, target: int):
+    """Zero-pad the leading axis of ``x`` to ``target`` rows (no-op when
+    already there) — the block-row padding shared by the sharded table and
+    the tiered store's host tier."""
+    n = x.shape[0]
+    if n == target:
+        return x
+    if isinstance(x, np.ndarray):
+        pad = np.zeros((target - n,) + x.shape[1:], x.dtype)
+        return np.concatenate([x, pad], axis=0)
+    return jnp.concatenate(
+        [x, jnp.zeros((target - n,) + x.shape[1:], x.dtype)], axis=0)
 
 
 @partial(jax.jit, static_argnames=("use_pallas",))
@@ -90,7 +143,6 @@ def max_intermediate_bytes(fn, *args, **kwargs) -> int:
         from jax.extend import core as jcore
     except ImportError:  # pragma: no cover
         from jax import core as jcore
-    import numpy as np
 
     def subjaxprs(params):
         for v in params.values():

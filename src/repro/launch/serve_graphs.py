@@ -29,6 +29,7 @@ def build_engine(args):
         max_seg_nodes=args.max_seg_nodes,
         cache_capacity=args.cache_capacity,
         cache_enabled=not args.no_cache,
+        table_device_rows=args.table_device_rows,
         stream_chunk=args.stream_chunk,
     )
     return ServeEngine(cfg, seed=args.seed)
@@ -70,6 +71,11 @@ def main(argv=None):
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--cache-capacity", type=int, default=512)
+    ap.add_argument("--table-device-rows", type=int, default=None,
+                    help="cap device-resident cache rows; cold entries "
+                         "spill to a host-RAM tier and fault back on hit "
+                         "instead of being re-encoded (store/tiered.py). "
+                         "Default: all cache rows on device")
     ap.add_argument("--max-seg-nodes", type=int, default=64)
     ap.add_argument("--stream-chunk", type=int, default=8)
     ap.add_argument("--warmup", type=int, default=4,
@@ -90,6 +96,15 @@ def main(argv=None):
                        duplicate_rate=args.duplicate_rate, seed=args.seed)
     stream = make_request_stream(tc)
 
+    try:
+        return _run(args, engine, stream)
+    finally:
+        # the tiered store owns a write-back thread — release it even when
+        # the parity / hit-rate gates raise SystemExit
+        engine.close()
+
+
+def _run(args, engine, stream):
     if args.warmup:
         engine.process(stream[:args.warmup], window=args.window)
         engine.reset_stats()
@@ -115,6 +130,13 @@ def main(argv=None):
               f"{c['size']}/{c['capacity']} slots, "
               f"{c['evictions']} evictions, "
               f"age mean/max {c['age_mean_steps']:.1f}/{c['age_max_steps']} steps")
+        st = c.get("store", {})
+        if st:
+            print(f"  store             [{st['backend']}] device rows "
+                  f"{st['occupancy']}/{st['device_rows']} "
+                  f"(of {st['n_rows']} total), tier hit-rate "
+                  f"{st['hit_rate']:.2f}, {st['evictions']} spills, "
+                  f"{st['migration_bytes'] / 1024:.1f} KiB migrated")
 
     if args.check_parity:
         worst = check_parity(engine, stream[:3], args.parity_atol)

@@ -25,10 +25,10 @@ import numpy as np
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.core import gst as G
-from repro.core.embedding_table import init_table
 from repro.data.tokens import doc_batch_iterator, make_lm_stream, make_property_docs
 from repro.models import build_model
 from repro.optim import cosine_schedule, make_optimizer
+from repro.store import DeviceStore, TieredStore
 
 
 def train_graph(args):
@@ -37,11 +37,19 @@ def train_graph(args):
         dataset=args.dataset, backbone=args.backbone, variant=args.variant,
         n_graphs=args.n_graphs, epochs=args.epochs,
         finetune_epochs=args.finetune_epochs, keep_prob=args.keep_prob,
-        seed=args.seed, use_pallas=args.use_pallas)
+        seed=args.seed, use_pallas=args.use_pallas,
+        table_device_rows=args.table_device_rows)
     print(f"[graph/{args.dataset}] {args.backbone} {args.variant}"
           f"{' [pallas]' if args.use_pallas else ''}: "
           f"train={r.train_metric:.3f} test={r.test_metric:.3f} "
           f"{r.ms_per_iter:.1f} ms/iter")
+    if r.store_stats and args.table_device_rows:
+        s = r.store_stats
+        print(f"  store [{s['backend']}] device rows {s['device_rows']}/"
+              f"{s['n_rows']}  hit-rate {s['hit_rate']:.2f} "
+              f"({s['hits']} hits / {s['misses']} faults), "
+              f"{s['evictions']} evictions, "
+              f"{s['migration_bytes'] / 1024:.1f} KiB migrated")
     return r
 
 
@@ -59,36 +67,56 @@ def train_seq(args):
     head = G.head_init(jax.random.fold_in(key, 1), cfg.d_model,
                        cfg.gst_num_classes, "mlp")
     opt = make_optimizer("adamw", lr=args.lr, weight_decay=0.01)
+    # the (n_docs, J, d_model) table sits behind the embedding store —
+    # --table-device-rows caps how many doc rows stay in device memory
+    store = (TieredStore(args.n_docs, J, cfg.d_model,
+                         device_rows=max(args.table_device_rows,
+                                         args.batch_size))
+             if args.table_device_rows
+             else DeviceStore(args.n_docs, J, cfg.d_model))
     state = G.TrainState(params, head, opt.init((params, head)),
-                         init_table(args.n_docs, J, cfg.d_model),
+                         store.init_device_table(),
                          jnp.zeros((), jnp.int32))
 
     def encode(backbone, seg_inputs):
         return model.encode_segment(backbone, seg_inputs)
 
-    # donate the state so the (n_docs, J, d_model) table updates in place
+    # donate the state so the device-tier table updates in place
     step = jax.jit(G.make_train_step(
         encode, opt, G.VARIANTS[args.variant], keep_prob=args.keep_prob,
         use_pallas=args.use_pallas), donate_argnums=(0,))
-    rng = np.random.default_rng(args.seed)
-    it = 0
-    t0 = time.time()
-    while it < args.steps:
-        for tup in doc_batch_iterator(docs, args.batch_size, rng=rng):
-            batch = G.GSTBatch({"tokens": jnp.asarray(tup[0]["tokens"])},
-                               jnp.asarray(tup[1]), jnp.asarray(tup[2]),
-                               jnp.asarray(tup[3]))
-            state, m = step(state, batch, jax.random.key(it))
-            it += 1
-            if it % args.log_every == 0:
-                print(f"step {it}: loss={float(m['loss']):.4f} "
-                      f"acc={float(m['metric']):.3f} "
-                      f"({(time.time()-t0)/it*1e3:.0f} ms/step)", flush=True)
-            if it >= args.steps:
-                break
-    if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, it, {"backbone": state.backbone,
-                                            "head": state.head})
+    try:
+        rng = np.random.default_rng(args.seed)
+        it = 0
+        t0 = time.time()
+        while it < args.steps:
+            for tup in doc_batch_iterator(docs, args.batch_size, rng=rng):
+                table, slots = store.prepare(state.table, np.asarray(tup[2]))
+                state = state._replace(table=table)
+                batch = G.GSTBatch({"tokens": jnp.asarray(tup[0]["tokens"])},
+                                   jnp.asarray(tup[1]), jnp.asarray(slots),
+                                   jnp.asarray(tup[3]))
+                state, m = step(state, batch, jax.random.key(it))
+                it += 1
+                if it % args.log_every == 0:
+                    print(f"step {it}: loss={float(m['loss']):.4f} "
+                          f"acc={float(m['metric']):.3f} "
+                          f"({(time.time()-t0)/it*1e3:.0f} ms/step)", flush=True)
+                if it >= args.steps:
+                    break
+        # surface any failed async write-back BEFORE reporting success
+        store.flush_writebacks()
+        if args.table_device_rows:
+            s = store.stats()
+            print(f"store [{s['backend']}] device rows {s['device_rows']}/"
+                  f"{s['n_rows']}  hit-rate {s['hit_rate']:.2f}, "
+                  f"{s['evictions']} evictions, "
+                  f"{s['migration_bytes'] / 1024:.1f} KiB migrated")
+        if args.ckpt_dir:
+            save_checkpoint(args.ckpt_dir, it, {"backbone": state.backbone,
+                                                "head": state.head})
+    finally:
+        store.close()   # stop the write-back thread even on error
     return state
 
 
@@ -143,6 +171,11 @@ def main():
                          "(batched segment_spmm + sed_pool; interpret mode "
                          "when not on TPU)")
     ap.add_argument("--keep-prob", type=float, default=0.5)
+    ap.add_argument("--table-device-rows", type=int, default=None,
+                    help="cap device-resident historical-table rows; the "
+                         "rest spill to a host-RAM tier (store/tiered.py). "
+                         "Clamped up to the batch size. Default: whole "
+                         "table on device")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--lr", type=float, default=1e-3)
     # seq/lm track

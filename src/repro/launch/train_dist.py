@@ -57,6 +57,12 @@ def main(argv=None):
                          "(default) or the synchronous baseline")
     ap.add_argument("--depth", type=int, default=2,
                     help="async pipeline depth (in-flight device batches)")
+    ap.add_argument("--table-device-rows", type=int, default=None,
+                    help="cap on device-resident historical-table rows "
+                         "(total, split over shards; clamped up so every "
+                         "shard can pin one batch).  The rest spill to a "
+                         "host-RAM tier with async write-back.  Default: "
+                         "whole table on device")
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -101,8 +107,13 @@ def main(argv=None):
                          jnp.zeros((), jnp.int32))
 
     mesh = DT.make_dist_mesh(n_dev)
-    ctx = DT.make_context(mesh, ds.n)
-    state = DT.device_state(ctx, state)
+    device_rows = None
+    if args.table_device_rows is not None:
+        # every shard must be able to pin one batch's rows at once
+        device_rows = max(args.table_device_rows, n_dev * args.batch_size)
+    ctx = DT.make_context(mesh, ds.n, device_rows=device_rows)
+    store = DT.make_dist_store(ctx, ds.j_max, args.hidden)
+    state = DT.device_state(ctx, state, store=store)
     step = DT.make_dist_train_step(enc, opt, var, ctx=ctx,
                                    keep_prob=args.keep_prob,
                                    num_sampled=args.num_sampled,
@@ -113,59 +124,89 @@ def main(argv=None):
         ctx.num_shards, args.batch_size // ctx.num_shards, ds.j_max,
         args.num_sampled, args.hidden, use_table=var.use_table)
     print(f"[dist] devices={ctx.num_shards} rows/shard={ctx.rows_per_shard} "
+          f"device-rows/shard={ctx.table_rows} "
           f"bucket={spec.key} feeder={args.feeder} "
           f"exchange={xbytes / 1024:.1f} KiB/step/device")
 
-    rng = np.random.default_rng(args.seed + 3)
-    put = lambda b: DT.shard_batch(ctx, b)
-    t_start = time.perf_counter()
-    last_stats = None
-    for epoch in range(args.epochs):
-        feeder = DP.make_feeder(args.feeder, ds,
-                                DP.epoch_ids(ds, args.batch_size, rng=rng),
-                                put, depth=args.depth)
-        losses = []
-        for batch in feeder:
-            state, m = step(state, batch, jax.random.PRNGKey(epoch))
-            losses.append(m["loss"])
-        jax.block_until_ready(losses[-1])
-        last_stats = feeder.stats
-        print(f"epoch {epoch}: loss={float(losses[-1]):.4f} "
-              f"host_blocked={last_stats.host_blocked_ms_per_batch:.2f} "
-              f"ms/batch", flush=True)
+    try:
+        rng = np.random.default_rng(args.seed + 3)
 
-    if var.finetune_head:
-        refresh = DT.make_dist_refresh_step(enc, ctx=ctx)
+        def put(b):
+            # route graph ids -> store device rows on the feeder thread, so the
+            # host-tier gather + staging device_put overlap with the running
+            # step; the consumer commits the staged migration in order below
+            prep = store.begin(np.asarray(b.graph_ids))
+            return prep, DT.shard_batch(ctx, b._replace(graph_ids=prep.slots))
+
+        def print_store_line():
+            s = store.stats()
+            if ctx.device_rows_per_shard is not None:
+                print(f"  store [{s['backend']}] device rows {s['device_rows']}/"
+                      f"{s['n_rows']}  hit-rate {s['hit_rate']:.2f} "
+                      f"({s['misses']} faults), {s['evictions']} evictions, "
+                      f"{s['migration_bytes'] / 1024:.1f} KiB migrated, "
+                      f"occupancy {s['occupancy']}", flush=True)
+
+        t_start = time.perf_counter()
+        last_stats = None
+        for epoch in range(args.epochs):
+            feeder = DP.make_feeder(args.feeder, ds,
+                                    DP.epoch_ids(ds, args.batch_size, rng=rng),
+                                    put, depth=args.depth)
+            losses = []
+            for prep, batch in feeder:
+                state = state._replace(table=store.commit(state.table, prep))
+                state, m = step(state, batch, jax.random.PRNGKey(epoch))
+                losses.append(m["loss"])
+            jax.block_until_ready(losses[-1])
+            last_stats = feeder.stats
+            print(f"epoch {epoch}: loss={float(losses[-1]):.4f} "
+                  f"host_blocked={last_stats.host_blocked_ms_per_batch:.2f} "
+                  f"ms/batch", flush=True)
+        print_store_line()
+
+        if var.finetune_head:
+            refresh = DT.make_dist_refresh_step(enc, ctx=ctx)
+            for prep, batch in DP.make_feeder(
+                    "sync", ds,
+                    DP.epoch_ids(ds, args.batch_size, rng=rng, shuffle=False),
+                    put):
+                state = state._replace(table=store.commit(state.table, prep))
+                state = refresh(state, batch)
+            ft_opt = make_optimizer("adam", lr=args.lr * 0.5)
+            state = state._replace(
+                opt_state=DT.replicate(ctx, ft_opt.init(jax.device_get(state.head))))
+            ft = DT.make_dist_finetune_step(ft_opt, ctx=ctx,
+                                            use_pallas=args.use_pallas)
+            m = None
+            for fe in range(args.finetune_epochs):
+                for prep, batch in DP.make_feeder(
+                        args.feeder, ds,
+                        DP.epoch_ids(ds, args.batch_size, rng=rng), put,
+                        depth=args.depth):
+                    state = state._replace(table=store.commit(state.table, prep))
+                    state, m = ft(state, batch)
+            if m is not None:
+                print(f"finetune: loss={float(m['loss']):.4f}")
+
+        # eval never reads the table — no store routing (a begun-but-uncommitted
+        # migration would corrupt residency bookkeeping)
+        metrics = []
         for batch in DP.make_feeder(
-                "sync", ds,
-                DP.epoch_ids(ds, args.batch_size, rng=rng, shuffle=False),
-                put):
-            state = refresh(state, batch)
-        ft_opt = make_optimizer("adam", lr=args.lr * 0.5)
-        state = state._replace(
-            opt_state=DT.replicate(ctx, ft_opt.init(jax.device_get(state.head))))
-        ft = DT.make_dist_finetune_step(ft_opt, ctx=ctx,
-                                        use_pallas=args.use_pallas)
-        m = None
-        for fe in range(args.finetune_epochs):
-            for batch in DP.make_feeder(
-                    args.feeder, ds,
-                    DP.epoch_ids(ds, args.batch_size, rng=rng), put,
-                    depth=args.depth):
-                state, m = ft(state, batch)
-        if m is not None:
-            print(f"finetune: loss={float(m['loss']):.4f}")
-
-    metrics = []
-    for batch in DP.make_feeder(
-            "sync", ds, DP.epoch_ids(ds, args.batch_size, rng=rng,
-                                     shuffle=False), put):
-        metrics.append(float(eval_step(state, batch)["metric"]))
-    wall = time.perf_counter() - t_start
-    print(f"[dist] done in {wall:.1f}s — train metric "
-          f"{float(np.mean(metrics)):.3f}, host blocked "
-          f"{last_stats.host_blocked_ms_per_batch:.2f} ms/batch "
-          f"({args.feeder})")
+                "sync", ds, DP.epoch_ids(ds, args.batch_size, rng=rng,
+                                         shuffle=False),
+                lambda b: DT.shard_batch(ctx, b)):
+            metrics.append(float(eval_step(state, batch)["metric"]))
+        # surface any failed async write-back BEFORE reporting success
+        store.flush_writebacks()
+        wall = time.perf_counter() - t_start
+        print(f"[dist] done in {wall:.1f}s — train metric "
+              f"{float(np.mean(metrics)):.3f}, host blocked "
+              f"{last_stats.host_blocked_ms_per_batch:.2f} ms/batch "
+              f"({args.feeder})")
+        print_store_line()
+    finally:
+        store.close()   # stop the write-back thread even on error
 
 
 if __name__ == "__main__":

@@ -3,19 +3,28 @@
 FreshGNN's observation (PAPERS.md) — stable historical embeddings can be
 reused across iterations — applied at serving time: a segment whose padded
 content hash was seen before skips the GNN encode entirely; only the cheap
-head runs on a full-hit request.  The device-side store IS the training
-code's historical table (core/embedding_table.py) with rows repurposed as
-cache slots (J_max == 1): lookups/updates are the same gather/scatter the
-train step uses, and ``age`` doubles as the insertion step for staleness
-accounting.
+head runs on a full-hit request.
 
-Host side keeps the hash -> slot map (an OrderedDict in LRU order) plus
-hit/miss/eviction counters.  Eviction frees the least-recently-used slot;
-the embedding stays in device memory and is overwritten on reuse.
+Since the tiered-store refactor this file is a THIN KEYING LAYER: it maps
+content hashes onto logical rows of an ``EmbeddingStore``
+(store/base.py) with a ``SlotMap`` (store/slots.py — the LRU machinery
+that started life here), and the store decides where those rows physically
+live.  With the default ``DeviceStore`` every row is device-resident —
+exactly the old behavior.  Handed a ``TieredStore`` (the
+``--table-device-rows`` path, or the very store a trainer is using), cold
+entries spill to host RAM instead of burning device memory, and a hit on
+a spilled row faults it back instead of re-encoding — one deployment can
+train and serve from one store instance.  The cache addresses segment-slot
+0 of each row, so trainer-shaped geometry (j_max > 1) works unchanged;
+sharing a LIVE concurrently-training instance additionally needs the
+read-only lookup path noted in ROADMAP.md, since rows would be contended.
+
+Host side keeps hash -> row in LRU order plus hit/miss/eviction counters.
+Keying-layer eviction frees the least-recently-used row; its embedding
+stays wherever it lives and is overwritten on reuse.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
 from typing import Dict, List, Optional
 
 import jax
@@ -23,121 +32,143 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import embedding_table as tbl
-
-
-def next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p <<= 1
-    return p
+from repro.kernels.ops import (next_pow2, pad_rows_pow2,  # noqa: F401
+                               prev_pow2)
+from repro.store import DeviceStore, EmbeddingStore, SlotMap, StoreCounters
 
 
 class SegmentCache:
-    def __init__(self, capacity: int, d_h: int, dtype=jnp.float32):
+    def __init__(self, capacity: int, d_h: int, dtype=jnp.float32,
+                 store: Optional[EmbeddingStore] = None):
         if capacity < 1:
             raise ValueError("cache capacity must be >= 1")
         self.capacity = capacity
         self.d_h = d_h
-        self.table = tbl.init_table(capacity, 1, d_h, dtype)
-        self._slots: "OrderedDict[bytes, int]" = OrderedDict()  # key -> slot, LRU order
-        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self.store = store if store is not None \
+            else DeviceStore(capacity, 1, d_h, dtype=dtype)
+        # the cache keys SEGMENT-SLOT 0 of each store row (lookup_rows /
+        # update_rows address (row, 0)), so a trainer-shaped store with
+        # j_max > 1 works too — extra segment slots just ride along unused
+        if (self.store.n_rows, self.store.d_h) != (capacity, d_h):
+            raise ValueError(
+                f"backing store geometry {(self.store.n_rows, self.store.d_h)}"
+                f" != cache ({capacity}, {d_h})")
+        self.table = self.store.init_device_table()
+        self._slots = SlotMap(capacity)   # content key -> logical row, LRU
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.skipped_inserts = 0
         self.step = 0  # monotonically increasing insertion step (age base)
-        # jitted table ops: each (B,) shape compiles once (the pow2 padding
-        # below keeps the shape set O(log capacity)); step rides along as a
-        # traced scalar so it never bakes into the executable
+        # jitted table ops: each (B,) shape compiles once (pow2 padding keeps
+        # the shape set O(log capacity)); step rides along as a traced scalar
         self._update = jax.jit(tbl.update_rows)
         self._lookup = jax.jit(tbl.lookup_rows)
-        self._evict = jax.jit(tbl.evict_rows)
 
     def __len__(self) -> int:
         return len(self._slots)
+
+    def close(self):
+        """Release the backing store (stops a TieredStore's write-back
+        thread; no-op for a DeviceStore)."""
+        self.store.close()
 
     def flush(self):
         """Empty the cache (contents + counters) while KEEPING the jitted
         table ops and their compile caches — a flushed cache measures cold
         contents, not cold compiles."""
-        self.table = tbl.init_table(self.capacity, 1, self.d_h,
-                                    self.table.emb.dtype)
+        self.table = self.store.restore(tbl.init_table(
+            self.capacity, self.store.j_max, self.d_h, self.store.dtype))
         self._slots.clear()
-        self._free = list(range(self.capacity - 1, -1, -1))
         self.hits = self.misses = self.evictions = self.skipped_inserts = 0
+        self.store.counters = StoreCounters()
         self.step = 0
 
     def get(self, key: bytes) -> Optional[int]:
-        """Slot of a cached segment (refreshes LRU position), or None.
-        Counts a hit/miss."""
-        slot = self._slots.get(key)
-        if slot is None:
+        """Logical row of a cached segment (refreshes LRU position), or
+        None.  Counts a hit/miss."""
+        row = self._slots.get(key)
+        if row is None:
             self.misses += 1
             return None
-        self._slots.move_to_end(key)
         self.hits += 1
-        return slot
+        return row
 
     def peek(self, key: bytes) -> Optional[int]:
         """Like get() but with no counter / LRU side effects."""
-        return self._slots.get(key)
-
-    def _reserve(self, key: bytes, pinned: set) -> Optional[int]:
-        if self._free:
-            return self._free.pop()
-        # evict the least-recently-used slot not pinned by the current batch
-        for old_key in self._slots:
-            if old_key not in pinned:
-                slot = self._slots.pop(old_key)
-                self.evictions += 1
-                self.table = self._evict(self.table, jnp.asarray([slot]))
-                return slot
-        return None  # every live slot is pinned by this batch
+        return self._slots.get(key, touch=False)
 
     def put(self, keys: List[bytes], embs, pinned=()) -> List[Optional[int]]:
         """Best-effort insert of freshly-encoded embeddings (len(keys), d_h);
-        returns the slot per key, None where the insert was skipped (batch of
+        returns the row per key, None where the insert was skipped (batch of
         new keys larger than the capacity — the cache keeps what fits and the
         caller falls back to its fresh embedding).  Duplicate keys in the
         batch write once.  ``pinned``: extra keys that must NOT be evicted —
-        the engine passes the window's hit keys, whose slots it gathers
+        the engine passes the window's hit keys, whose rows it gathers
         after this insert.  The device scatter is padded to the next power
-        of two (repeating the last row) so steady-state serving compiles
-        O(log capacity) scatter shapes."""
+        of two (kernels/ops.py::pad_rows_pow2) so steady-state serving
+        compiles O(log capacity) scatter shapes."""
         self.step += 1
         # never evict a key being inserted in this batch, nor a caller-pinned
-        # one (a hit slot evicted here would be silently reused before the
+        # one (a hit row evicted here would be silently reused before the
         # caller's gather)
         pinned = set(keys) | set(pinned)
-        slots, rows, idx = [], [], []
+        slots, rows, idx, displaced_rows = [], [], [], []
         for i, key in enumerate(keys):
-            slot = self._slots.get(key)
-            if slot is None:
-                slot = self._reserve(key, pinned)
-                if slot is None:
+            row = self._slots.get(key)
+            if row is None:
+                row, displaced = self._slots.reserve(key, pinned=pinned)
+                if row is None:
                     self.skipped_inserts += 1
                     slots.append(None)
                     continue
-                self._slots[key] = slot
-                rows.append(slot)
+                if displaced is not None:
+                    self.evictions += 1
+                    displaced_rows.append(displaced[1])
+                rows.append(row)
                 idx.append(i)
-            self._slots.move_to_end(key)
-            slots.append(slot)
+            slots.append(row)
+        if displaced_rows:
+            # one batched invalidation per put(), not one per eviction
+            self.table = self.store.invalidate_rows(self.table,
+                                                    displaced_rows)
         if rows:
-            n = next_pow2(len(rows))
-            rows_p = np.asarray(rows + [rows[-1]] * (n - len(rows)), np.int32)
-            idx_p = np.asarray(idx + [idx[-1]] * (n - len(idx)))
-            self.table = self._update(
-                self.table, jnp.asarray(rows_p),
-                jnp.asarray(embs)[idx_p], jnp.int32(self.step))
+            embs = jnp.asarray(embs)
+            # the store's device tier bounds how many rows one migration can
+            # pin at once; insert in tier-sized chunks
+            chunk = min(len(rows), self.store.device_rows)
+            for i0 in range(0, len(rows), chunk):
+                rows_p, idx_p = pad_rows_pow2(rows[i0:i0 + chunk],
+                                              idx[i0:i0 + chunk])
+                # rows about to be fully overwritten: residency only, no
+                # host->device content fetch
+                self.table, dev_rows = self.store.prepare(
+                    self.table, rows_p, fetch=False)
+                self.table = self._update(self.table, jnp.asarray(dev_rows),
+                                          embs[idx_p], jnp.int32(self.step))
         return slots
 
     def gather(self, slots, valid=None) -> jnp.ndarray:
-        """(len(slots), d_h) embeddings — the stored device values, so a hit
-        returns bit-identical bytes to what was inserted.  ``valid`` (0/1,
-        same length) limits the liveness assertion to real entries when the
-        caller padded ``slots`` to a static shape."""
-        emb, init = self._lookup(self.table, jnp.asarray(slots, jnp.int32))
+        """(len(slots), d_h) embeddings — the stored values, so a hit
+        returns bit-identical bytes to what was inserted (spilled rows are
+        faulted back host->device first).  ``valid`` (0/1, same length)
+        limits the liveness assertion to real entries when the caller padded
+        ``slots`` to a static shape.  Gathers wider than the store's device
+        tier run in tier-sized chunks (pow2-floored so the jitted-shape set
+        stays O(log capacity))."""
+        rows = np.asarray(slots, np.int32)
+        if len(rows) == 0:
+            return jnp.zeros((0, self.d_h), self.store.dtype)
+        chunk = min(prev_pow2(self.store.device_rows), len(rows))
+        embs, inits = [], []
+        for i0 in range(0, len(rows), chunk):
+            self.table, dev_rows = self.store.prepare(self.table,
+                                                      rows[i0:i0 + chunk])
+            e, i = self._lookup(self.table, jnp.asarray(dev_rows))
+            embs.append(e)
+            inits.append(i)
+        emb = embs[0] if len(embs) == 1 else jnp.concatenate(embs)
+        init = inits[0] if len(inits) == 1 else jnp.concatenate(inits)
         live = init if valid is None else jnp.where(jnp.asarray(valid) > 0,
                                                     init, True)
         assert bool(live.all()), "gather() of an evicted/uninitialized slot"
@@ -145,8 +176,8 @@ class SegmentCache:
 
     def stats(self) -> Dict:
         total = self.hits + self.misses
-        ages = np.asarray(self.table.age[:, 0])
-        init = np.asarray(self.table.initialized[:, 0])
+        ages, init = self.store.ages_init(self.table)
+        ages, init = ages[:, 0], init[:, 0]
         live_ages = (self.step - ages[init]) if init.any() else np.zeros(0)
         return {
             "capacity": self.capacity,
@@ -158,4 +189,5 @@ class SegmentCache:
             "skipped_inserts": self.skipped_inserts,
             "age_mean_steps": float(live_ages.mean()) if live_ages.size else 0.0,
             "age_max_steps": int(live_ages.max()) if live_ages.size else 0,
+            "store": self.store.stats(),
         }

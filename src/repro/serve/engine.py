@@ -47,6 +47,7 @@ from repro.serve.buckets import (
     segment_fingerprint,
 )
 from repro.serve.cache import SegmentCache, next_pow2
+from repro.store import StoreCounters, TieredStore
 
 SEG_KEYS = ("x", "edges", "edge_valid", "node_valid")
 
@@ -151,6 +152,11 @@ class ServeConfig:
     ladder: Optional[Tuple[BucketSpec, ...]] = None
     cache_capacity: int = 512
     cache_enabled: bool = True
+    # cap on DEVICE-resident cache rows: None keeps all cache_capacity rows
+    # in device memory (DeviceStore); an int backs the cache with a
+    # TieredStore — cold entries spill to host RAM and fault back on hit
+    # instead of being re-encoded
+    table_device_rows: Optional[int] = None
     stream_chunk: int = 8
 
     def resolved_ladder(self) -> Tuple[BucketSpec, ...]:
@@ -210,13 +216,23 @@ class ServeEngine:
         self.head = head if head is not None else G.head_init(
             jax.random.fold_in(key, 1), cfg.hidden, cfg.n_out, cfg.head_mode)
         self.ladder = cfg.resolved_ladder()
-        self.cache = (SegmentCache(cfg.cache_capacity, cfg.hidden)
+        store = None
+        if cfg.cache_enabled and cfg.table_device_rows is not None:
+            store = TieredStore(cfg.cache_capacity, 1, cfg.hidden,
+                                device_rows=cfg.table_device_rows)
+        self.cache = (SegmentCache(cfg.cache_capacity, cfg.hidden, store=store)
                       if cfg.cache_enabled else None)
         self.stats = ServeStats()
         self._encode_jit: Dict[int, Any] = {}
         self._pallas_per_launch: Dict[int, int] = {}
         self._head_fn = jax.jit(self._head_impl)
         self._request_counter = 0
+
+    def close(self):
+        """Release the cache's backing store (the TieredStore write-back
+        thread when --table-device-rows is set)."""
+        if self.cache is not None:
+            self.cache.close()
 
     def reset_stats(self):
         """Zero the counters (post-warmup), keeping compiled fns and cache
@@ -225,6 +241,7 @@ class ServeEngine:
         if self.cache is not None:
             self.cache.hits = self.cache.misses = 0
             self.cache.evictions = self.cache.skipped_inserts = 0
+            self.cache.store.counters = StoreCounters()
 
     # -- encode ------------------------------------------------------------
 

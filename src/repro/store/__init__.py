@@ -1,0 +1,28 @@
+"""The ONE historical-embedding store (paper §3.2's table T, unified).
+
+Three former implementations — the replicated training table, the
+row-sharded dist table, and the serving cache's slot pool — now share this
+residency layer: ``DeviceStore`` keeps the whole table in device memory
+(the oracle), ``TieredStore`` caps device residency at a bounded LRU of
+hot rows spilled to a host-RAM tier, with async device→host write-back on
+the pipeline's writer thread.  Jitted step code sees only a plain
+``EmbeddingTable`` of device rows; bit-exactness vs the oracle is the
+contract (tests/test_store.py, tests/test_store_props.py).
+"""
+from repro.store.base import (  # noqa: F401
+    DeviceStore,
+    EmbeddingStore,
+    PreparedMigration,
+    StoreCounters,
+    padded_rows,
+    rows_per_shard,
+)
+from repro.store.slots import SlotMap  # noqa: F401
+from repro.store.tiered import TieredStore  # noqa: F401
+from repro.store.writeback import AsyncHostWriter  # noqa: F401
+
+__all__ = [
+    "AsyncHostWriter", "DeviceStore", "EmbeddingStore", "PreparedMigration",
+    "SlotMap", "StoreCounters", "TieredStore",
+    "padded_rows", "rows_per_shard",
+]

@@ -1,0 +1,80 @@
+"""LRU slot allocation — the machinery generalized out of serve/cache.py.
+
+A ``SlotMap`` owns ``capacity`` integer slots and maps hashable keys onto
+them in LRU order: the serving cache keys slots by segment content hash,
+the tiered store (store/tiered.py) keys each shard's device slots by the
+global table row resident in them.  Only bookkeeping lives here — what a
+slot physically holds (a device row, a cache entry) is the caller's
+business, which is exactly why both tiers can share it.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Hashable, Iterator, List, Optional, Tuple
+
+
+class SlotMap:
+    """key -> slot map, LRU-ordered, with pinned-key-aware eviction.
+
+    Eviction picks the least-recently-used key not in the caller's pinned
+    set; ``reserve`` reports the displaced (key, slot) pair so the caller
+    can migrate/drop whatever the slot held.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("slot capacity must be >= 1")
+        self.capacity = capacity
+        self._slots: "OrderedDict[Hashable, int]" = OrderedDict()
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._slots
+
+    def items(self) -> Iterator[Tuple[Hashable, int]]:
+        return iter(self._slots.items())
+
+    def get(self, key: Hashable, *, touch: bool = True) -> Optional[int]:
+        """Slot of ``key`` or None; ``touch`` refreshes its LRU position."""
+        slot = self._slots.get(key)
+        if slot is not None and touch:
+            self._slots.move_to_end(key)
+        return slot
+
+    def touch(self, key: Hashable) -> None:
+        self._slots.move_to_end(key)
+
+    def reserve(self, key: Hashable, pinned=frozenset(),
+                ) -> Tuple[Optional[int], Optional[Tuple[Hashable, int]]]:
+        """Allocate a slot for a NEW key (appended at the MRU end).
+
+        Returns ``(slot, evicted)``: ``evicted`` is the displaced
+        ``(old_key, slot)`` pair when a live entry had to make room, None
+        when a free slot was used.  ``(None, None)`` when the map is full
+        and every live key is pinned.
+        """
+        if key in self._slots:
+            raise KeyError(f"key already mapped: {key!r}")
+        if self._free:
+            slot = self._free.pop()
+            self._slots[key] = slot
+            return slot, None
+        for old_key in self._slots:
+            if old_key not in pinned:
+                slot = self._slots.pop(old_key)
+                self._slots[key] = slot
+                return slot, (old_key, slot)
+        return None, None
+
+    def release(self, key: Hashable) -> int:
+        """Drop ``key`` and return its slot to the free list."""
+        slot = self._slots.pop(key)
+        self._free.append(slot)
+        return slot
+
+    def clear(self) -> None:
+        self._slots.clear()
+        self._free = list(range(self.capacity - 1, -1, -1))

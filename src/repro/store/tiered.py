@@ -1,0 +1,367 @@
+"""TieredStore: a bounded device tier (LRU of hot rows) over host RAM.
+
+FreshGNN's regime (PAPERS.md): the historical table outgrows device HBM,
+but historical embeddings are STABLE, so a small device-resident cache of
+hot rows backed by host memory captures most traffic.  Layout per shard
+(num_shards=1 collapses to the single-device case):
+
+        host tier  (R rows, numpy, authoritative for non-resident rows)
+            ▲  eviction write-back — async, on the pipeline's
+            │  AsyncHostWriter thread, overlapped with the step
+            ▼  miss fetch — staged in begin(), applied in commit()
+      device tier  (C <= R rows = "slots", LRU via store/slots.SlotMap)
+
+A global row id r lives on shard ``r // R``; when resident it occupies
+device row ``shard*C + slot``, so the dist ring exchange's owner
+arithmetic (``id // rows``) works UNCHANGED on slot ids with rows=C.
+
+Invariants (tests/test_store_props.py):
+  * device-tier occupancy never exceeds C per shard;
+  * every row is authoritative in EXACTLY one tier (resident rows on
+    device, everything else in host RAM — pending write-backs count as
+    in-flight device rows until the writer lands them);
+  * the slot holds the row's (emb, age, initialized) triple bit-for-bit,
+    so any eviction/fetch sequence is invisible to the training math.
+
+Concurrency contract: ``begin`` may run on the feeder thread while a step
+runs (it only touches host-side bookkeeping and fresh staging buffers);
+``commit`` must run on the consumer thread in begin order — its jitted
+migration reads/writes the live donated table, and XLA's data dependence
+on the table chain orders it against the surrounding steps without host
+syncs.  Eviction content is gathered BEFORE upload scatters inside one
+jitted call, then handed to the writer thread; a later fetch of a
+still-pending row waits for its write-back to land.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import embedding_table as tbl
+from repro.kernels.ops import pad_rows_pow2, pad_leading
+from repro.store.base import (EmbeddingStore, PreparedMigration,
+                              device_rows_per_shard)
+from repro.store.slots import SlotMap
+from repro.store.writeback import AsyncHostWriter
+
+
+class TieredStore(EmbeddingStore):
+    def __init__(self, n_rows: int, j_max: int, d_h: int, *,
+                 device_rows: int, num_shards: int = 1, dtype=jnp.float32,
+                 sharding=None, writer: Optional[AsyncHostWriter] = None,
+                 donate: bool = True):
+        super().__init__(n_rows, j_max, d_h, num_shards=num_shards,
+                         dtype=dtype, sharding=sharding)
+        self._C = device_rows_per_shard(n_rows, self.num_shards, device_rows)
+        self._maps = [SlotMap(self._C) for _ in range(self.num_shards)]
+        self._host = tbl.EmbeddingTable(
+            emb=np.zeros((self.padded_rows, j_max, d_h), jnp.dtype(dtype)),
+            age=np.zeros((self.padded_rows, j_max), np.int32),
+            initialized=np.zeros((self.padded_rows, j_max), bool))
+        self._writer = writer if writer is not None else AsyncHostWriter()
+        self._own_writer = writer is None
+        self._mu = threading.Condition()
+        self._begin_mu = threading.RLock()
+        self._pending: Dict[int, int] = {}   # row -> evicting begin ticket
+        self._begin_ticket = 0
+        self._commit_next = 1
+        self._done_ticket = 0
+        self._wb_exc: Optional[BaseException] = None  # failed write-back
+        donate_args = (0,) if donate else ()
+        self._migrate = jax.jit(self._migrate_impl, donate_argnums=donate_args)
+        self._upload = jax.jit(self._upload_impl, donate_argnums=donate_args)
+        self._gather_ev = jax.jit(self._gather_impl)
+
+    # -- geometry ----------------------------------------------------------
+
+    @property
+    def device_rows_per_shard(self) -> int:
+        return self._C
+
+    def occupancy(self) -> int:
+        return sum(len(m) for m in self._maps)
+
+    def resident_slot(self, row: int) -> Optional[int]:
+        shard = int(row) // self.rows_per_shard
+        slot = self._maps[shard].get(int(row), touch=False)
+        return None if slot is None else shard * self._C + slot
+
+    # -- jitted migration bodies (shapes pow2-padded by begin) -------------
+
+    def _constrain(self, table: tbl.EmbeddingTable) -> tbl.EmbeddingTable:
+        if self.sharding is None:
+            return table
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.with_sharding_constraint(x, self.sharding),
+            table)
+
+    def _upload_impl(self, table, up_slots, up_emb, up_age, up_init):
+        return self._constrain(tbl.EmbeddingTable(
+            table.emb.at[up_slots].set(up_emb),
+            table.age.at[up_slots].set(up_age),
+            table.initialized.at[up_slots].set(up_init)))
+
+    def _gather_impl(self, table, ev_slots):
+        return (table.emb[ev_slots], table.age[ev_slots],
+                table.initialized[ev_slots])
+
+    def _migrate_impl(self, table, up_slots, up_emb, up_age, up_init,
+                      ev_slots):
+        ev = self._gather_impl(table, ev_slots)  # before the scatter lands
+        return self._upload_impl(table, up_slots, up_emb, up_age, up_init), ev
+
+    # -- residency ---------------------------------------------------------
+
+    def begin(self, row_ids, *, fetch: bool = True) -> PreparedMigration:
+        """Host half of a migration: residency bookkeeping + staging.
+
+        Safe to call on the feeder thread while a step runs.  With
+        ``fetch=False`` missing rows are made resident WITHOUT copying
+        host content up (their device slots hold garbage until the caller
+        overwrites them — the serving cache's insert path, which writes
+        the full row right after prepare)."""
+        ids = np.asarray(row_ids).ravel()
+        R, C = self.rows_per_shard, self._C
+        with self._begin_mu:
+            # validate the WHOLE batch before touching any residency state,
+            # so a bad batch raises cleanly instead of leaving half-reserved
+            # slots and an uncommittable ticket behind
+            uniq = list(dict.fromkeys(int(r) for r in ids))
+            per_shard: Dict[int, int] = {}
+            for rid in uniq:
+                if not 0 <= rid < self.n_rows:
+                    raise IndexError(
+                        f"row {rid} outside table [0, {self.n_rows})")
+                per_shard[rid // R] = per_shard.get(rid // R, 0) + 1
+            worst = max(per_shard.values(), default=0)
+            if worst > C:
+                raise RuntimeError(
+                    f"device tier exhausted: shard {max(per_shard, key=per_shard.get)} "
+                    f"needs {worst} resident rows for one batch but has only "
+                    f"{C} device rows — raise the device-row cap "
+                    "(--table-device-rows) to at least the per-shard batch "
+                    "row count")
+            self._begin_ticket += 1
+            ticket = self._begin_ticket
+            pinned = set(uniq)
+            slot_of: Dict[int, int] = {}
+            uploads: List[tuple] = []   # (row, device_row)
+            evicts: List[tuple] = []    # (row, device_row)
+            n_hit = 0
+            for rid in uniq:
+                shard = rid // R
+                m = self._maps[shard]
+                slot = m.get(rid)
+                if slot is None:
+                    slot, displaced = m.reserve(rid, pinned=pinned)
+                    # per-shard demand <= C was checked above, so a reserve
+                    # can always displace a non-pinned entry
+                    assert slot is not None
+                    if displaced is not None:
+                        evicts.append((displaced[0], shard * C + displaced[1]))
+                    uploads.append((rid, shard * C + slot))
+                else:
+                    n_hit += 1
+                slot_of[rid] = shard * C + slot
+            slots = np.asarray([slot_of[int(r)] for r in ids], np.int32)
+            with self._mu:
+                # lookups count UNIQUE rows, so hits + misses == lookups and
+                # pow2-padding duplicates don't skew the hit-rate
+                self.counters.lookups += len(uniq)
+                self.counters.hits += n_hit
+                self.counters.misses += len(uploads)
+                for row, _ in evicts:
+                    self._pending[row] = ticket
+
+            prep = dict(slots=slots, ticket=ticket)
+            if evicts:
+                (ev_slots_p,) = pad_rows_pow2([g for _, g in evicts])
+                prep.update(n_ev=len(evicts), ev_slots=jnp.asarray(ev_slots_p),
+                            ev_rows=np.asarray([r for r, _ in evicts]))
+            if uploads and fetch:
+                rows = [r for r, _ in uploads]
+                self._wait_rows(rows)   # pending write-backs must land first
+                gs_p, rs_p = pad_rows_pow2([g for _, g in uploads], rows)
+                prep.update(
+                    n_up=len(uploads),
+                    up_slots=jnp.asarray(gs_p),
+                    up_emb=jnp.asarray(self._host.emb[rs_p]),
+                    up_age=jnp.asarray(self._host.age[rs_p]),
+                    up_init=jnp.asarray(self._host.initialized[rs_p]))
+                with self._mu:
+                    self.counters.bytes_h2d += len(uploads) * self.row_bytes
+            return PreparedMigration(**prep)
+
+    def commit(self, table: tbl.EmbeddingTable,
+               prep: PreparedMigration) -> tbl.EmbeddingTable:
+        """Device half: apply the staged migration to the live table (in
+        begin order) and hand evicted content to the write-back thread."""
+        if prep.ticket != self._commit_next:
+            raise RuntimeError(
+                f"commit order violated: expected ticket {self._commit_next}, "
+                f"got {prep.ticket}")
+        self._commit_next += 1
+        ev = None
+        if prep.n_up and prep.n_ev:
+            table, ev = self._migrate(table, prep.up_slots, prep.up_emb,
+                                      prep.up_age, prep.up_init, prep.ev_slots)
+        elif prep.n_up:
+            table = self._upload(table, prep.up_slots, prep.up_emb,
+                                 prep.up_age, prep.up_init)
+        elif prep.n_ev:
+            ev = self._gather_ev(table, prep.ev_slots)
+        if prep.n_ev:
+            with self._mu:
+                self.counters.evictions += prep.n_ev
+                self.counters.bytes_d2h += prep.n_ev * self.row_bytes
+            self._writer.submit(self._writeback_thunk(
+                ev, prep.ev_rows, prep.n_ev, prep.ticket))
+        return table
+
+    def _writeback_thunk(self, ev, rows, n, ticket):
+        def write():
+            try:
+                emb, age, init = (np.asarray(x)[:n] for x in ev)
+                self._host.emb[rows] = emb
+                self._host.age[rows] = age
+                self._host.initialized[rows] = init
+            except BaseException as e:
+                with self._mu:
+                    if self._wb_exc is None:
+                        self._wb_exc = e
+                raise   # AsyncHostWriter also records it for flush()
+            finally:
+                # ALWAYS advance the ticket (failure included) so a waiter
+                # raises the stored exception instead of spinning forever
+                with self._mu:
+                    self._done_ticket = ticket
+                    for r in rows:
+                        if self._pending.get(int(r)) == ticket:
+                            del self._pending[int(r)]
+                    self._mu.notify_all()
+        return write
+
+    def _raise_wb_exc_locked(self):
+        if self._wb_exc is not None:
+            exc, self._wb_exc = self._wb_exc, None
+            raise RuntimeError("eviction write-back failed — the host tier "
+                               "is no longer trustworthy") from exc
+
+    def _wait_rows(self, rows) -> None:
+        """Block until pending write-backs covering ``rows`` have landed."""
+        with self._mu:
+            need = max((self._pending.get(int(r), 0) for r in rows), default=0)
+            self._raise_wb_exc_locked()
+        if not need:
+            return
+        t0 = time.perf_counter()
+        with self._mu:
+            while self._done_ticket < need:
+                self._mu.wait(timeout=0.05)
+            self._raise_wb_exc_locked()
+            self.counters.writeback_wait_ms += (time.perf_counter() - t0) * 1e3
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _assert_quiescent(self):
+        if self._begin_ticket != self._commit_next - 1:
+            raise RuntimeError(
+                "store has begun-but-uncommitted migrations — drain the "
+                "feeder before snapshot/restore")
+
+    def flush_writebacks(self) -> None:
+        self._writer.flush()
+
+    def snapshot(self, table: tbl.EmbeddingTable) -> tbl.EmbeddingTable:
+        """Dense (n_rows, J, d) host view: host tier overlaid with every
+        device-resident row — the checkpointable whole table."""
+        self._assert_quiescent()
+        self._writer.flush()
+        host = jax.tree_util.tree_map(np.copy, self._host)
+        dev = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), table)
+        rows, gs = self._resident_index()
+        if rows.size:
+            host.emb[rows] = dev.emb[gs]
+            host.age[rows] = dev.age[gs]
+            host.initialized[rows] = dev.initialized[gs]
+        return tbl.EmbeddingTable(*(x[:self.n_rows] for x in host))
+
+    def _resident_index(self):
+        """(rows, device_rows) index arrays over every resident row — one
+        vectorized fancy-index merge instead of a per-row Python loop."""
+        rows, gs = [], []
+        for shard, m in enumerate(self._maps):
+            for row, slot in m.items():
+                rows.append(row)
+                gs.append(shard * self._C + slot)
+        return np.asarray(rows, np.int64), np.asarray(gs, np.int64)
+
+    def restore(self, snap: tbl.EmbeddingTable) -> tbl.EmbeddingTable:
+        """Reset from a dense snapshot: everything starts in the host tier,
+        the device tier comes back empty (residency is not semantic state —
+        the first batches re-fault their rows)."""
+        self._assert_quiescent()
+        self._writer.flush()
+        for m in self._maps:
+            m.clear()
+        with self._mu:
+            self._pending.clear()
+        self._host = tbl.EmbeddingTable(
+            *(pad_leading(np.array(jax.device_get(x)), self.padded_rows)
+              for x in snap))
+        return self.init_device_table()
+
+    def invalidate_rows(self, table: tbl.EmbeddingTable,
+                        rows) -> tbl.EmbeddingTable:
+        if len(rows) == 0:
+            return table
+        dev_rows, host_rows = [], []
+        for r in rows:
+            slot = self.resident_slot(r)
+            if slot is not None:
+                dev_rows.append(slot)
+            else:
+                host_rows.append(int(r))
+        if host_rows:
+            self._wait_rows(host_rows)
+            self._host.initialized[host_rows] = False
+        if dev_rows:
+            (dev_p,) = pad_rows_pow2(dev_rows)
+            table = self._evict_jit(table, jnp.asarray(dev_p))
+        return table
+
+    def ages_init(self, table):
+        # stats-grade view: no writer flush (a flush here would serialize
+        # the serving hot path against the async write-back lane every
+        # window).  Rows with an in-flight write-back may read one
+        # migration stale — fine for monitoring; snapshot() is the
+        # consistent view.
+        age = np.copy(self._host.age)
+        init = np.copy(self._host.initialized)
+        dev_age = np.asarray(jax.device_get(table.age))
+        dev_init = np.asarray(jax.device_get(table.initialized))
+        rows, gs = self._resident_index()
+        if rows.size:
+            age[rows] = dev_age[gs]
+            init[rows] = dev_init[gs]
+        return age[:self.n_rows], init[:self.n_rows]
+
+    def close(self) -> None:
+        if self._own_writer:
+            self._writer.close()
+
+    def stats(self) -> dict:
+        d = super().stats()
+        d.update({
+            "device_rows_per_shard": self._C,
+            "host_rows": self.padded_rows,
+            "occupancy_frac": self.occupancy() / max(self.device_rows, 1),
+            "pending_writebacks": self._writer.pending,
+        })
+        return d

@@ -1,0 +1,143 @@
+"""Property tests for the tiered embedding store's tier invariants.
+
+Random (geometry, batch-sequence) draws — via hypothesis when installed,
+the deterministic fallback otherwise (tests/_hypothesis_compat.py) —
+checked after EVERY prepare/update against a dense oracle table:
+
+  * device-tier occupancy never exceeds the per-shard capacity, and no
+    two keys ever share a slot (SlotMap internal consistency);
+  * every row is authoritative in exactly one tier: resident rows answer
+    from the device tier, everything else from host RAM, and the merged
+    snapshot equals the oracle bit for bit;
+  * lookups after ANY eviction sequence are bit-exact vs the oracle —
+    residency is invisible to the training math.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import embedding_table as tbl
+from repro.store import SlotMap, TieredStore
+
+
+def _random_ops(store, table, oracle, rng, n_steps, batch):
+    """Drive identical random lookups/updates through the tiered store and
+    the dense oracle; yields after each op for invariant checks."""
+    n, J, d = oracle.emb.shape
+    R, C = store.rows_per_shard, store.device_rows_per_shard
+    for t in range(n_steps):
+        # per-shard draws so one batch never needs more than C rows of a
+        # shard resident (the documented capacity contract)
+        ids = []
+        for s in range(store.num_shards):
+            lo, hi = s * R, min((s + 1) * R, n)
+            if lo >= n:
+                continue
+            k = min(batch, C, hi - lo)
+            ids.extend(rng.choice(np.arange(lo, hi), size=k, replace=False))
+        ids = np.asarray(ids, np.int64)
+        h = rng.normal(size=(len(ids), 1, d)).astype(np.float32)
+        sidx = rng.integers(0, J, (len(ids), 1)).astype(np.int32)
+
+        table, slots = store.prepare(table, ids)
+        e_t, i_t = tbl.lookup(table, jnp.asarray(slots))
+        e_o, i_o = tbl.lookup(oracle, jnp.asarray(ids))
+
+        table = tbl.update_sampled(table, jnp.asarray(slots),
+                                   jnp.asarray(sidx), jnp.asarray(h), t)
+        oracle = tbl.update_sampled(oracle, jnp.asarray(ids),
+                                    jnp.asarray(sidx), jnp.asarray(h), t)
+        yield table, oracle, ids, slots, (e_t, i_t), (e_o, i_o)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(5, 30), device_frac=st.floats(0.1, 0.9),
+       num_shards=st.sampled_from([1, 2, 4]), seed=st.integers(0, 10**6))
+def test_tier_invariants_hold_under_random_churn(n, device_frac, num_shards,
+                                                 seed):
+    rng = np.random.default_rng(seed)
+    J, d = 2, 4
+    store = TieredStore(n, J, d, num_shards=num_shards,
+                        device_rows=max(1, int(n * device_frac)))
+    table = store.init_device_table()
+    oracle = tbl.init_table(n, J, d)
+    C = store.device_rows_per_shard
+
+    for table, oracle, ids, slots, got, want in _random_ops(
+            store, table, oracle, rng, n_steps=12, batch=3):
+        # lookup bit-exact vs oracle after any eviction sequence
+        assert np.array_equal(np.asarray(got[0]), np.asarray(want[0]))
+        assert np.array_equal(np.asarray(got[1]), np.asarray(want[1]))
+        # occupancy never exceeds per-shard capacity; slots never shared
+        resident = {}
+        for s, m in enumerate(store._maps):
+            assert len(m) <= C
+            entries = dict(m.items())
+            assert len(set(entries.values())) == len(entries)
+            for row, slot in entries.items():
+                assert s * store.rows_per_shard <= row \
+                    < min((s + 1) * store.rows_per_shard, n)
+                resident[row] = s * C + slot
+        # slot ids the batch got must agree with the residency map
+        for rid, slot in zip(ids, slots):
+            assert resident[int(rid)] == int(slot)
+        # every row in exactly one tier: the merged snapshot IS the oracle
+        # (residency must be invisible), and only non-resident rows answer
+        # from the host tier
+        assert store.occupancy() == len(resident)
+
+    store.flush_writebacks()
+    snap = store.snapshot(table)
+    for a, b in zip(snap, oracle):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    store.close()
+
+
+@settings(max_examples=10, deadline=None)
+@given(capacity=st.integers(1, 8), n_keys=st.integers(1, 24),
+       seed=st.integers(0, 10**6))
+def test_slotmap_never_leaks_or_doubles_slots(capacity, n_keys, seed):
+    rng = np.random.default_rng(seed)
+    m = SlotMap(capacity)
+    live = {}
+    for i in range(n_keys):
+        key = f"k{i}"
+        slot, evicted = m.reserve(key)
+        assert slot is not None          # nothing pinned -> always succeeds
+        if evicted is not None:
+            old_key, old_slot = evicted
+            assert live.pop(old_key) == old_slot == slot
+        live[key] = slot
+        if live and rng.random() < 0.3:  # random release
+            victim = rng.choice(sorted(live))
+            m.release(victim)
+            del live[victim]
+        assert len(m) == len(live) <= capacity
+        assert len(set(live.values())) == len(live)
+        for k, s in live.items():
+            assert m.get(k, touch=False) == s
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(4, 20), seed=st.integers(0, 10**6))
+def test_min_capacity_single_slot_store_stays_exact(n, seed):
+    """The degenerate 1-device-row tier: every step evicts, every lookup
+    faults — still bit-exact."""
+    rng = np.random.default_rng(seed)
+    store = TieredStore(n, 1, 3, device_rows=1)
+    table = store.init_device_table()
+    oracle = tbl.init_table(n, 1, 3)
+    for t in range(10):
+        row = int(rng.integers(n))
+        h = rng.normal(size=(1, 1, 3)).astype(np.float32)
+        table, slots = store.prepare(table, np.asarray([row]))
+        z = jnp.zeros((1, 1), jnp.int32)
+        table = tbl.update_sampled(table, jnp.asarray(slots), z,
+                                   jnp.asarray(h), t)
+        oracle = tbl.update_sampled(oracle, jnp.asarray([row]), z,
+                                    jnp.asarray(h), t)
+    snap = store.snapshot(table)
+    for a, b in zip(snap, oracle):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    store.close()
