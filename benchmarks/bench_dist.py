@@ -1,16 +1,20 @@
 """Tracked distributed-GST benchmark — step time and table-exchange bytes
-vs device count, plus async-vs-sync host-blocked milliseconds.
+vs device count AND exchange strategy, plus async-vs-sync host-blocked
+milliseconds.
 
 For each device count in {1, 2, 8} (intersected with what the host
-exposes) it times the shard_map gst_efd train step with the row-sharded
-historical table, records the analytic ring-exchange bytes per step per
-device (dist/table.py accounting), and replays the SAME epoch trace
-through the synchronous and the async double-buffered feeder to compare
-host-blocked milliseconds per batch.
+exposes) it times the shard_map gst_efd train step once per exchange
+strategy (ring | alltoall | bucketed, dist/exchange.py), records each
+strategy's analytic bytes per step per device, and the strategy
+``--exchange=auto`` would pick (the min-bytes one) — so the ring-vs-
+owner-direct crossover is a recorded number instead of a ROADMAP guess.
+The feeder comparison (sync vs async host-blocked ms on the SAME epoch
+trace) runs once per device count through the ring step.
 
 Usage:
     PYTHONPATH=src python benchmarks/bench_dist.py            # full
     PYTHONPATH=src python benchmarks/bench_dist.py --quick    # CI-sized
+    PYTHONPATH=src python benchmarks/bench_dist.py --exchange bucketed
 
 Forces an 8-device CPU host via XLA_FLAGS when run without one (set the
 flag yourself to override).  Writes ``BENCH_gst_dist.json`` merge-keyed
@@ -40,6 +44,7 @@ import numpy as np
 from repro import dist as DT
 from repro.core import gst as G
 from repro.core.embedding_table import init_table
+from repro.dist import exchange as EXC
 from repro.dist import pipeline as DP
 from repro.dist import table as dtbl
 from repro.graphs import data as D
@@ -65,54 +70,99 @@ def _fresh_state(ds, hidden):
     return enc, opt, state
 
 
-def bench_device_count(ds, n_dev: int, *, batch_size: int, hidden: int,
-                       n_iters: int, warmup: int = 2):
+def _make_step(ds, ctx, *, hidden: int):
+    """The gst_efd dist train step under ``ctx``'s exchange strategy as a
+    stateful one(batch) closure, so the feeder comparison can reuse the
+    compiled ring step."""
     enc, opt, state = _fresh_state(ds, hidden)
-    ctx = DT.make_context(DT.make_dist_mesh(n_dev), ds.n)
     step = DT.make_dist_train_step(enc, opt, G.VARIANTS[VARIANT], ctx=ctx,
                                    keep_prob=0.5, num_sampled=NUM_SAMPLED)
     state = DT.device_state(ctx, state)
-    put = lambda b: DT.shard_batch(ctx, b)
-    sched = DP.epoch_ids(ds, batch_size, rng=np.random.default_rng(0),
-                         shuffle=False)
-    batch = put(DP._assemble(ds, sched[0]))
     holder = {"state": state, "i": 0}
 
-    def one():
+    def one(batch):
         holder["state"], m = step(holder["state"], batch,
                                   jax.random.PRNGKey(holder["i"]))
         holder["i"] += 1
         return m["loss"]
 
-    for _ in range(warmup):
-        one()
-    times = []
-    for _ in range(n_iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(one())
-        times.append((time.perf_counter() - t0) * 1e3)
-    train_ms = float(np.median(times))
+    return one, step, holder
+
+
+def bench_device_count(ds, n_dev: int, *, batch_size: int, hidden: int,
+                       n_iters: int, warmup: int = 2, exchange="all"):
+    mesh = DT.make_dist_mesh(n_dev)
+    # deterministic shuffled trace: unshuffled contiguous batches are the
+    # all-rows-on-one-owner adversarial case, which would pin the bucketed
+    # capacity at B_local and hide the owner-direct win
+    sched = DP.epoch_ids(ds, batch_size, rng=np.random.default_rng(0))
+    rows_per_shard = dtbl.rows_per_shard(ds.n, n_dev)
+    cap = EXC.plan_capacity(sched, num_shards=n_dev, rows=rows_per_shard)
+    b_local = batch_size // n_dev
+    # the auto pick uses the SAME planned cap the timed bucketed run gets,
+    # so "--exchange auto" times exactly the strategy the row reports
+    auto = EXC.select_exchange(n_dev, b_local, ds.j_max, NUM_SAMPLED,
+                               hidden, cap=cap)
+    if exchange == "all":
+        strategies = EXC.EXCHANGES
+    elif exchange == "auto":
+        strategies = (auto,)
+    else:
+        strategies = (exchange,)
+    per_strategy = {}
+    feeder_parts = None
+    for name in strategies:
+        ctx = DT.make_context(mesh, ds.n, exchange=name,
+                              exchange_cap=cap if name == "bucketed"
+                              else None)
+        one, step, holder = _make_step(ds, ctx, hidden=hidden)
+        put = lambda b: DT.shard_batch(ctx, b)
+        batch = put(DP._assemble(ds, sched[0]))
+        for _ in range(warmup):
+            one(batch)
+        times = []
+        for _ in range(n_iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(one(batch))
+            times.append((time.perf_counter() - t0) * 1e3)
+        ex = EXC.make_exchange(name, axis_name=DT.AXIS, num_shards=n_dev,
+                               rows=ctx.table_rows, cap=ctx.exchange_cap)
+        per_strategy[name] = {
+            "train_ms": round(float(np.median(times)), 3),
+            "bytes_per_step_per_device": ex.train_step_bytes(
+                b_local, ds.j_max, NUM_SAMPLED, hidden, use_table=True),
+        }
+        if name == "ring" or feeder_parts is None:
+            feeder_parts = (ctx, one, holder, put)
 
     # feeder comparison on the SAME trace (async must beat sync on
-    # host-blocked ms — CI enforces it via --strict)
+    # host-blocked ms — CI enforces it via --strict), through the ring
+    # step when timed, else the first timed strategy (feeder timing is
+    # about host work, not the exchange)
     feeder_rows = {}
+    ctx, one, holder, put = feeder_parts
     for kind in ("sync", "async"):
         feeder = DP.make_feeder(kind, ds, sched, put, depth=2)
+        m = None
         for b in feeder:
-            holder["state"], m = step(holder["state"], b,
-                                      jax.random.PRNGKey(holder["i"]))
-            holder["i"] += 1
-        jax.block_until_ready(m["loss"])
+            m = one(b)
+        jax.block_until_ready(m)
         feeder_rows[kind] = round(feeder.stats.host_blocked_ms_per_batch, 3)
 
-    b_local = batch_size // ctx.num_shards
+    flat_name = "ring" if "ring" in per_strategy else \
+        next(iter(per_strategy))
     return {
-        "device_count": ctx.num_shards,
-        "rows_per_shard": ctx.rows_per_shard,
-        "train_ms": round(train_ms, 3),
-        "exchange_bytes_per_step_per_device": dtbl.train_step_exchange_bytes(
-            ctx.num_shards, b_local, ds.j_max, NUM_SAMPLED, hidden,
-            use_table=True),
+        "device_count": n_dev,
+        "rows_per_shard": rows_per_shard,
+        "bucket_cap": cap,
+        "exchange": per_strategy,
+        "auto_exchange": auto,
+        # PR 3-era flat keys kept for trend continuity (the ring numbers
+        # when timed; flat_keys_strategy names the source otherwise)
+        "flat_keys_strategy": flat_name,
+        "train_ms": per_strategy[flat_name]["train_ms"],
+        "exchange_bytes_per_step_per_device":
+            per_strategy[flat_name]["bytes_per_step_per_device"],
         "host_blocked_ms_sync": feeder_rows["sync"],
         "host_blocked_ms_async": feeder_rows["async"],
     }
@@ -124,6 +174,11 @@ def main():
     ap.add_argument("--strict", action="store_true",
                     help="exit nonzero unless the async pipeline beats the "
                          "synchronous feeder on total host-blocked ms")
+    ap.add_argument("--exchange", default="all",
+                    choices=["all", "ring", "alltoall", "bucketed", "auto"],
+                    help="which table-exchange strategies to time: the "
+                         "full matrix (default), one strategy, or the one "
+                         "the auto policy picks")
     ap.add_argument("--out", default=os.path.join(_REPO, "BENCH_gst_dist.json"))
     ap.add_argument("--n-graphs", type=int, default=None)
     ap.add_argument("--iters", type=int, default=None)
@@ -140,16 +195,20 @@ def main():
     counts = [c for c in DEVICE_COUNTS
               if c <= jax.device_count() and args.batch_size % c == 0]
     results = []
-    print(f"{'devices':>7s} {'train ms':>9s} {'xchg KiB':>9s} "
-          f"{'sync ms':>8s} {'async ms':>9s}")
+    print(f"{'devices':>7s} {'strategy':>9s} {'train ms':>9s} "
+          f"{'xchg KiB':>9s} {'sync ms':>8s} {'async ms':>9s}")
     for n_dev in counts:
         row = bench_device_count(ds, n_dev, batch_size=args.batch_size,
-                                 hidden=args.hidden, n_iters=n_iters)
+                                 hidden=args.hidden, n_iters=n_iters,
+                                 exchange=args.exchange)
         results.append(row)
-        print(f"{row['device_count']:7d} {row['train_ms']:9.2f} "
-              f"{row['exchange_bytes_per_step_per_device'] / 1024:9.1f} "
-              f"{row['host_blocked_ms_sync']:8.2f} "
-              f"{row['host_blocked_ms_async']:9.2f}", flush=True)
+        for name, r in row["exchange"].items():
+            mark = " <- auto" if name == row["auto_exchange"] else ""
+            print(f"{row['device_count']:7d} {name:>9s} "
+                  f"{r['train_ms']:9.2f} "
+                  f"{r['bytes_per_step_per_device'] / 1024:9.1f} "
+                  f"{row['host_blocked_ms_sync']:8.2f} "
+                  f"{row['host_blocked_ms_async']:9.2f}{mark}", flush=True)
 
     sync_total = sum(r["host_blocked_ms_sync"] for r in results)
     async_total = sum(r["host_blocked_ms_async"] for r in results)
@@ -164,12 +223,24 @@ def main():
         "host_blocked_ms_sync_total": round(sync_total, 3),
         "host_blocked_ms_async_total": round(async_total, 3),
         "max_devices": max((r["device_count"] for r in results), default=0),
+        # the auto pick per device count, and whether it is indeed the
+        # min-bytes strategy of the recorded rows (the acceptance gate;
+        # None when the auto pick wasn't among the timed strategies)
+        "auto_exchange": {str(r["device_count"]): r["auto_exchange"]
+                          for r in results},
+        "auto_is_min_bytes": (all(
+            r["exchange"][r["auto_exchange"]]["bytes_per_step_per_device"]
+            == min(v["bytes_per_step_per_device"]
+                   for v in r["exchange"].values())
+            for r in results if r["auto_exchange"] in r["exchange"])
+            if any(r["auto_exchange"] in r["exchange"] for r in results)
+            else None),
     }
     config = {
         "n_graphs": n_graphs, "batch_size": args.batch_size,
         "hidden": args.hidden, "max_seg_nodes": args.max_seg_nodes,
         "bucket": spec.key, "j_max": ds.j_max, "e_max": ds.e_max,
-        "iters": n_iters, "quick": args.quick,
+        "iters": n_iters, "quick": args.quick, "exchange": args.exchange,
     }
     env = {
         "backend": jax.default_backend(),

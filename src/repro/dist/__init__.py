@@ -1,11 +1,16 @@
-"""Distributed GST: row-sharded historical table (table.py), shard_map
-data-parallel train/refresh/finetune steps (train.py), and the async
-host→device segment pipeline (pipeline.py).
+"""Distributed GST: row-sharded historical table (table.py), pluggable
+table-exchange strategies ring | alltoall | bucketed (exchange.py),
+shard_map data-parallel train/refresh/finetune steps (train.py), and the
+async host→device segment pipeline (pipeline.py).
 
 Force a multi-device host for CPU development/CI with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set BEFORE jax
 initializes; ``python -m repro.launch.train_dist`` does it for you).
 """
+from repro.dist.exchange import (EXCHANGES, Exchange, make_exchange,
+                                 measured_exchange_bytes, pad_ragged,
+                                 plan_capacity, required_capacity,
+                                 select_exchange)
 from repro.dist.pipeline import (AsyncSegmentFeeder, SyncSegmentFeeder,
                                  epoch_ids, make_feeder,
                                  segment_dataset_shared, shared_bucket)
@@ -17,12 +22,14 @@ from repro.dist.train import (AXIS, DistContext, batch_sharding, device_state,
                               replicate, shard_batch)
 
 __all__ = [
-    "AXIS", "AsyncSegmentFeeder", "DistContext", "SyncSegmentFeeder",
+    "AXIS", "AsyncSegmentFeeder", "DistContext", "EXCHANGES", "Exchange",
+    "SyncSegmentFeeder",
     "batch_sharding", "device_state", "device_table", "epoch_ids",
     "host_table",
     "make_context", "make_dist_eval_step", "make_dist_finetune_step",
     "make_dist_mesh", "make_dist_refresh_step", "make_dist_store",
-    "make_dist_train_step",
-    "make_feeder", "replicate", "segment_dataset_shared", "shard_batch",
-    "shared_bucket",
+    "make_dist_train_step", "make_exchange", "make_feeder",
+    "measured_exchange_bytes", "pad_ragged", "plan_capacity", "replicate",
+    "required_capacity", "segment_dataset_shared", "select_exchange",
+    "shard_batch", "shared_bucket",
 ]

@@ -1,0 +1,646 @@
+"""Pluggable table-exchange strategies for the row-sharded historical table.
+
+The distributed GST lookups/write-backs (dist/table.py geometry: device k
+owns rows [k·R, (k+1)·R)) used to be hard-wired to a ring of
+``jax.lax.ppermute`` hops.  The ring's per-device traffic is
+``D · B_local · row_bytes`` per exchange — every payload buffer visits
+every shard — which stops winning as the shard count grows (ROADMAP's
+ring-vs-all-to-all crossover).  This module makes the exchange a STRATEGY
+behind one ``Exchange`` API, everything still running INSIDE ``shard_map``
+on global row ids against the local (R, J, d) table shard:
+
+  ``ring``      the original D-hop ppermute loop: the (ids, payload)
+                buffers ride the ring, every shard answers/applies the
+                rows it owns as the buffer passes through.  D hops for
+                lookups (answers must come home), D-1 for writes.
+
+  ``alltoall``  one-shot dissemination of the FULL local buffer: queries
+                all_gather to every shard, each shard answers everything
+                it owns, and one ``jax.lax.all_to_all`` brings the dense
+                (D, B_local) answer block home (the requester selects its
+                owner's answer — pure row selection, no reductions).
+                Saves the ring's per-hop latency (2 collectives instead
+                of D) and one payload hop, but still moves the dense
+                answer block: ~(D-1)·B_local·row_bytes.
+
+  ``bucketed``  owner-direct: queries are sorted by owner shard
+                (device-side stable sort; the CAPACITY of the per-owner
+                buckets is planned host-side — see ``plan_capacity``) and
+                each row travels exactly one hop to its owner and one hop
+                back, as two ``all_to_all`` s of (D, cap) buckets.  With a
+                near-uniform owner distribution cap ≈ B_local/D and the
+                traffic drops to ~2·B_local·row_bytes per device,
+                independent of the shard count — the high-shard-count
+                winner.
+
+Every strategy ships an ANALYTIC per-device bytes-per-exchange model
+(``lookup_bytes`` / ``update_sampled_bytes`` / ``update_all_bytes`` /
+``train_step_bytes``) whose conventions match ``measured_exchange_bytes``,
+which counts the actual collective traffic in a jaxpr — the parity of the
+two is asserted per strategy in tests/test_exchange_props.py, and
+``select_exchange`` ("--exchange=auto") picks the min-bytes strategy at
+the current shard count (benchmarked into BENCH_gst_dist.json).
+
+Bit-exactness contract (tests/test_exchange_props.py): every strategy is
+pure row selection / single-owner scatter — no cross-shard reductions —
+so lookups and write-backs are BIT-exact vs the dense single-device table
+ops, and all 7 GST variants train to oracle parity through any of them.
+
+Ragged batches: a global batch whose size doesn't divide the shard count
+must be padded to one that does BEFORE sharding (``pad_ragged``).  Pad
+rows carry the sentinel id ``num_shards · rows`` which every strategy's
+write path drops and every strategy's lookup answers with zeros.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import embedding_table as tbl
+from repro.kernels.ops import iter_jaxpr_eqns
+
+EXCHANGES = ("ring", "alltoall", "bucketed")
+
+# collective primitives counted by measured_exchange_bytes, with the
+# per-device send cost of each as a fraction of the operand:
+#   ppermute   — the whole buffer leaves the device every hop:        1
+#   all_to_all — (D-1) of the D leading-axis chunks leave:      (D-1)/D
+#   all_gather — ring dissemination forwards D-1 chunks:           (D-1)
+_COLLECTIVES = ("ppermute", "all_to_all", "all_gather")
+
+
+# ---------------------------------------------------------------------------
+# strategy base
+# ---------------------------------------------------------------------------
+
+
+class Exchange:
+    """One exchange strategy bound to a (axis_name, num_shards, rows) mesh
+    geometry.  ``rows`` is the per-shard row count OF THE TABLE THE STEP
+    SEES (``DistContext.table_rows`` — device-tier rows under a tiered
+    store); owner arithmetic is ``id // rows`` throughout.
+
+    ``cap`` (bucketed only): per-(device, owner) bucket capacity.  None
+    falls back to the trace-time B_local — always safe, never smaller
+    than needed — while a host-planned cap (``plan_capacity``) is what
+    makes the strategy win; a batch exceeding the planned cap would be
+    silently truncated, so drivers must validate with
+    ``required_capacity`` before stepping.
+    """
+
+    name = "?"
+
+    def __init__(self, *, axis_name: str, num_shards: int, rows: int,
+                 cap: Optional[int] = None):
+        self.axis_name = axis_name
+        self.num_shards = num_shards
+        self.rows = rows
+        self.cap = cap
+
+    @property
+    def sentinel(self) -> int:
+        """Row id used for ragged padding: out of every shard's range, so
+        writes drop it and lookups answer zeros (``pad_ragged``)."""
+        return self.num_shards * self.rows
+
+    # -- table ops (inside shard_map) --------------------------------------
+
+    def lookup(self, table: tbl.EmbeddingTable, graph_ids
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        raise NotImplementedError
+
+    def update_sampled(self, table: tbl.EmbeddingTable, graph_ids, seg_idx,
+                       h_new, step) -> tbl.EmbeddingTable:
+        raise NotImplementedError
+
+    def update_all(self, table: tbl.EmbeddingTable, graph_ids, h_all,
+                   seg_valid, step) -> tbl.EmbeddingTable:
+        raise NotImplementedError
+
+    # -- analytic per-device bytes (match measured_exchange_bytes) ---------
+
+    def lookup_bytes(self, b_local: int, j_max: int, d_h: int,
+                     itemsize: int = 4) -> int:
+        raise NotImplementedError
+
+    def update_sampled_bytes(self, b_local: int, s: int, d_h: int,
+                             itemsize: int = 4) -> int:
+        raise NotImplementedError
+
+    def update_all_bytes(self, b_local: int, j_max: int, d_h: int,
+                         itemsize: int = 4) -> int:
+        raise NotImplementedError
+
+    def train_step_bytes(self, b_local: int, j_max: int, s: int, d_h: int,
+                         *, use_table: bool, itemsize: int = 4) -> int:
+        """Per-device exchange traffic of one dist train step (lookup +
+        sampled write-back when the variant uses the table)."""
+        if not use_table:
+            return 0
+        return (self.lookup_bytes(b_local, j_max, d_h, itemsize)
+                + self.update_sampled_bytes(b_local, s, d_h, itemsize))
+
+    # -- shared local fallbacks (num_shards == 1: no collectives) ----------
+
+    def _local_lookup(self, table, graph_ids):
+        mine = (graph_ids // self.rows) == 0
+        local = jnp.clip(graph_ids, 0, self.rows - 1)
+        e, i = tbl.lookup(table, local)
+        return (jnp.where(mine[:, None, None], e, 0),
+                jnp.where(mine[:, None], i, False))
+
+    def _local_write_rows(self, graph_ids):
+        mine = (graph_ids // self.rows) == 0
+        return jnp.where(mine, graph_ids, self.rows)  # rows => dropped
+
+
+# ---------------------------------------------------------------------------
+# ring (the PR 3 exchange, now a strategy)
+# ---------------------------------------------------------------------------
+
+
+def _ring_perm(num_shards: int):
+    return [(i, (i + 1) % num_shards) for i in range(num_shards)]
+
+
+def _hop(axis_name, num_shards, *bufs):
+    perm = _ring_perm(num_shards)
+    return tuple(jax.lax.ppermute(b, axis_name, perm) for b in bufs)
+
+
+class RingExchange(Exchange):
+    """D-hop ppermute ring: rows a device owns are answered by a plain
+    local gather on the first ring stop (zero communication for a
+    perfectly-aligned batch); remote rows ride the ring — the (ids,
+    payload) buffers hop with shift +1 and every shard answers/applies
+    the rows it owns as the buffer passes through.  D hops for lookups
+    (the answered buffer must come home), D-1 for writes (applied in
+    place, nothing returns)."""
+
+    name = "ring"
+
+    def lookup(self, table, graph_ids):
+        """Distributed ``tbl.lookup``: global graph_ids (B_l,) against the
+        local (R, J, d) shard.  Pure row selection — no reductions — so
+        the result is BIT-EXACT vs the dense single-device lookup."""
+        me = jax.lax.axis_index(self.axis_name)
+        rows, num_shards = self.rows, self.num_shards
+        B = graph_ids.shape[0]
+        emb = jnp.zeros((B,) + table.emb.shape[1:], table.emb.dtype)
+        init = jnp.zeros((B,) + table.initialized.shape[1:],
+                         table.initialized.dtype)
+        ids = graph_ids
+        for _ in range(num_shards):
+            owner = ids // rows
+            mine = owner == me
+            local_row = jnp.clip(ids - me * rows, 0, rows - 1)
+            e, i = tbl.lookup(table, local_row)
+            emb = jnp.where(mine[:, None, None], e, emb)
+            init = jnp.where(mine[:, None], i, init)
+            if num_shards > 1:
+                ids, emb, init = _hop(self.axis_name, num_shards,
+                                      ids, emb, init)
+        return emb, init
+
+    def update_sampled(self, table, graph_ids, seg_idx, h_new, step):
+        """Distributed ``tbl.update_sampled``: the (ids, seg_idx, h_new)
+        write buffer rides the ring; each shard applies the writes it owns
+        in place (donated scatter, mode="drop" for everything else)."""
+        ids, sidx, h = graph_ids, seg_idx, h_new
+        me = jax.lax.axis_index(self.axis_name)
+        rows, num_shards = self.rows, self.num_shards
+        for t in range(num_shards):
+            mine = (ids // rows) == me
+            local_row = jnp.where(mine, ids - me * rows, rows)  # => dropped
+            table = tbl.update_sampled(table, local_row, sidx, h, step,
+                                       mode="drop")
+            if t < num_shards - 1:  # write buffers need no homecoming hop
+                ids, sidx, h = _hop(self.axis_name, num_shards, ids, sidx, h)
+        return table
+
+    def update_all(self, table, graph_ids, h_all, seg_valid, step):
+        """Distributed ``tbl.update_all`` (refresh phase) over the ring."""
+        ids, h, sv = graph_ids, h_all, seg_valid
+        me = jax.lax.axis_index(self.axis_name)
+        rows, num_shards = self.rows, self.num_shards
+        for t in range(num_shards):
+            mine = (ids // rows) == me
+            local_row = jnp.where(mine, ids - me * rows, rows)
+            table = tbl.update_all(table, local_row, h, sv, step, mode="drop")
+            if t < num_shards - 1:  # write buffers need no homecoming hop
+                ids, h, sv = _hop(self.axis_name, num_shards, ids, h, sv)
+        return table
+
+    def lookup_bytes(self, b_local, j_max, d_h, itemsize=4):
+        return lookup_exchange_bytes(self.num_shards, b_local, j_max, d_h,
+                                     itemsize)
+
+    def update_sampled_bytes(self, b_local, s, d_h, itemsize=4):
+        return update_sampled_exchange_bytes(self.num_shards, b_local, s,
+                                             d_h, itemsize)
+
+    def update_all_bytes(self, b_local, j_max, d_h, itemsize=4):
+        return update_all_exchange_bytes(self.num_shards, b_local, j_max,
+                                         d_h, itemsize)
+
+
+# ---------------------------------------------------------------------------
+# alltoall (full-buffer dissemination, one payload round-trip)
+# ---------------------------------------------------------------------------
+
+
+def _a2a(x, axis_name):
+    """Transpose-exchange: x (D, cap, ...) where x[j] is destined to device
+    j; the result's row j is what device j sent here."""
+    return jax.lax.all_to_all(x, axis_name, 0, 0, tiled=True)
+
+
+class AllToAllExchange(Exchange):
+    """Full-buffer dissemination: queries ``all_gather`` to every shard
+    (ids are cheap), each shard answers the dense (D, B_local) block for
+    the rows it owns, and ONE ``all_to_all`` brings the answers home —
+    the requester selects its owner's answer by direct indexing (no
+    masked sums, so -0.0 and NaN payloads stay bit-identical).  Writes
+    are the dual: the full (ids, payload) buffers all_gather to every
+    shard and each shard applies the rows it owns with mode="drop".
+
+    vs ring: 2 collectives instead of D hops and one payload leg fewer
+    on lookups ((D-1) vs D), but the dense answer block still scales
+    with D·B_local."""
+
+    name = "alltoall"
+
+    def lookup(self, table, graph_ids):
+        rows, D, ax = self.rows, self.num_shards, self.axis_name
+        B = graph_ids.shape[0]
+        if D == 1:
+            return self._local_lookup(table, graph_ids)
+        me = jax.lax.axis_index(ax)
+        all_ids = jax.lax.all_gather(graph_ids, ax)          # (D, B)
+        local = jnp.clip(all_ids - me * rows, 0, rows - 1).reshape(-1)
+        owned = (all_ids // rows).reshape(-1) == me
+        e, i = tbl.lookup(table, local)
+        # zero non-owned answers so ragged/padded positions come home as
+        # zeros no matter which shard they were clipped into
+        e = jnp.where(owned[:, None, None], e, 0)
+        i = jnp.where(owned[:, None], i, False)
+        e_back = _a2a(e.reshape((D, B) + table.emb.shape[1:]), ax)
+        i_back = _a2a(i.reshape((D, B) + table.initialized.shape[1:]), ax)
+        owner = jnp.clip(graph_ids // rows, 0, D - 1)
+        r = jnp.arange(B)
+        return e_back[owner, r], i_back[owner, r]
+
+    def _gathered_writes(self, graph_ids, *payloads):
+        ax = self.axis_name
+        ids = jax.lax.all_gather(graph_ids, ax).reshape(-1)
+        flat = [jax.lax.all_gather(p, ax).reshape((-1,) + p.shape[1:])
+                for p in payloads]
+        me = jax.lax.axis_index(ax)
+        mine = (ids // self.rows) == me
+        local_row = jnp.where(mine, ids - me * self.rows, self.rows)
+        return (local_row, *flat)
+
+    def update_sampled(self, table, graph_ids, seg_idx, h_new, step):
+        if self.num_shards == 1:
+            local_row = self._local_write_rows(graph_ids)
+            return tbl.update_sampled(table, local_row, seg_idx, h_new,
+                                      step, mode="drop")
+        local_row, sidx, h = self._gathered_writes(graph_ids, seg_idx, h_new)
+        return tbl.update_sampled(table, local_row, sidx, h, step,
+                                  mode="drop")
+
+    def update_all(self, table, graph_ids, h_all, seg_valid, step):
+        if self.num_shards == 1:
+            local_row = self._local_write_rows(graph_ids)
+            return tbl.update_all(table, local_row, h_all, seg_valid, step,
+                                  mode="drop")
+        local_row, h, sv = self._gathered_writes(graph_ids, h_all, seg_valid)
+        return tbl.update_all(table, local_row, h, sv, step, mode="drop")
+
+    def lookup_bytes(self, b_local, j_max, d_h, itemsize=4):
+        if self.num_shards <= 1:
+            return 0
+        # ids all_gather + (emb f32, init bool) answers all_to_all
+        return (self.num_shards - 1) * b_local * (
+            4 + j_max * d_h * itemsize + j_max * 1)
+
+    def update_sampled_bytes(self, b_local, s, d_h, itemsize=4):
+        if self.num_shards <= 1:
+            return 0
+        # (ids, seg_idx, h_new) all_gathered to every shard
+        return (self.num_shards - 1) * b_local * (
+            4 + s * 4 + s * d_h * itemsize)
+
+    def update_all_bytes(self, b_local, j_max, d_h, itemsize=4):
+        if self.num_shards <= 1:
+            return 0
+        # (ids, h_all, seg_valid f32) all_gathered to every shard
+        return (self.num_shards - 1) * b_local * (
+            4 + j_max * d_h * itemsize + j_max * 4)
+
+
+# ---------------------------------------------------------------------------
+# bucketed (owner-direct: one hop there, one hop back)
+# ---------------------------------------------------------------------------
+
+
+class BucketedExchange(Exchange):
+    """Owner-direct exchange: local queries are stable-sorted by owner
+    shard and scattered into (D, cap) per-owner buckets; ONE all_to_all
+    delivers each bucket straight to its owner, which answers/applies it,
+    and (for lookups) one all_to_all brings exactly the requested rows
+    back.  Each row travels one hop to its owner and one hop home —
+    traffic scales with the BUCKET capacity, not the shard count.
+
+    ``cap`` is a static shape: None falls back to B_local (safe for any
+    owner distribution, but then the buckets are as big as the alltoall
+    block).  The win comes from host-side planning — ``plan_capacity``
+    over the epoch's id schedule gives the tightest safe cap (≈ B_local/D
+    for near-uniform batches).  A batch needing more than ``cap`` rows of
+    one owner from one device would be silently truncated by the
+    mode="drop" bucket scatter, so drivers MUST validate planned caps
+    with ``required_capacity`` (launch/train_dist.py and the parity
+    harness do)."""
+
+    name = "bucketed"
+
+    def _plan(self, graph_ids):
+        """(order, sorted_owner, rank-within-owner) for the local batch."""
+        owner = jnp.clip(graph_ids // self.rows, 0, self.num_shards - 1)
+        order = jnp.argsort(owner, stable=True)
+        so = owner[order]
+        pos = jnp.arange(graph_ids.shape[0]) - jnp.searchsorted(
+            so, so, side="left")
+        return order, so, pos
+
+    def _bucket(self, cap, so, pos, x_sorted, fill):
+        b = jnp.full((self.num_shards, cap) + x_sorted.shape[1:], fill,
+                     x_sorted.dtype)
+        return b.at[so, pos].set(x_sorted, mode="drop")
+
+    def lookup(self, table, graph_ids):
+        rows, D, ax = self.rows, self.num_shards, self.axis_name
+        B = graph_ids.shape[0]
+        if D == 1:
+            return self._local_lookup(table, graph_ids)
+        cap = self.cap or B
+        order, so, pos = self._plan(graph_ids)
+        buckets = self._bucket(cap, so, pos, graph_ids[order],
+                               jnp.int32(self.sentinel))
+        q = _a2a(buckets, ax)                      # (D, cap) queries I own
+        me = jax.lax.axis_index(ax)
+        local = jnp.clip(q - me * rows, 0, rows - 1).reshape(-1)
+        owned = (q // rows).reshape(-1) == me      # False for sentinel slots
+        e, i = tbl.lookup(table, local)
+        e = jnp.where(owned[:, None, None], e, 0)
+        i = jnp.where(owned[:, None], i, False)
+        e_back = _a2a(e.reshape((D, cap) + table.emb.shape[1:]), ax)
+        i_back = _a2a(i.reshape((D, cap) + table.initialized.shape[1:]), ax)
+        inv = jnp.argsort(order, stable=True)
+        return e_back[so, pos][inv], i_back[so, pos][inv]
+
+    def _bucketed_writes(self, graph_ids, *payloads):
+        cap = self.cap or graph_ids.shape[0]
+        order, so, pos = self._plan(graph_ids)
+        idb = self._bucket(cap, so, pos, graph_ids[order],
+                           jnp.int32(self.sentinel))
+        bufs = [self._bucket(cap, so, pos, p[order], p.dtype.type(0))
+                for p in payloads]
+        q = _a2a(idb, self.axis_name).reshape(-1)
+        flat = [_a2a(b, self.axis_name).reshape((-1,) + b.shape[2:])
+                for b in bufs]
+        me = jax.lax.axis_index(self.axis_name)
+        mine = (q // self.rows) == me              # sentinel never matches
+        local_row = jnp.where(mine, q - me * self.rows, self.rows)
+        return (local_row, *flat)
+
+    def update_sampled(self, table, graph_ids, seg_idx, h_new, step):
+        if self.num_shards == 1:
+            local_row = self._local_write_rows(graph_ids)
+            return tbl.update_sampled(table, local_row, seg_idx, h_new,
+                                      step, mode="drop")
+        local_row, sidx, h = self._bucketed_writes(graph_ids, seg_idx, h_new)
+        return tbl.update_sampled(table, local_row, sidx, h, step,
+                                  mode="drop")
+
+    def update_all(self, table, graph_ids, h_all, seg_valid, step):
+        if self.num_shards == 1:
+            local_row = self._local_write_rows(graph_ids)
+            return tbl.update_all(table, local_row, h_all, seg_valid, step,
+                                  mode="drop")
+        local_row, h, sv = self._bucketed_writes(graph_ids, h_all, seg_valid)
+        return tbl.update_all(table, local_row, h, sv, step, mode="drop")
+
+    def _cap(self, b_local: int) -> int:
+        return self.cap if self.cap is not None else b_local
+
+    def lookup_bytes(self, b_local, j_max, d_h, itemsize=4):
+        if self.num_shards <= 1:
+            return 0
+        c = self._cap(b_local)
+        # id buckets one hop there + (emb f32, init bool) one hop back
+        return (self.num_shards - 1) * c * (
+            4 + j_max * d_h * itemsize + j_max * 1)
+
+    def update_sampled_bytes(self, b_local, s, d_h, itemsize=4):
+        if self.num_shards <= 1:
+            return 0
+        c = self._cap(b_local)
+        return (self.num_shards - 1) * c * (4 + s * 4 + s * d_h * itemsize)
+
+    def update_all_bytes(self, b_local, j_max, d_h, itemsize=4):
+        if self.num_shards <= 1:
+            return 0
+        c = self._cap(b_local)
+        return (self.num_shards - 1) * c * (
+            4 + j_max * d_h * itemsize + j_max * 4)
+
+
+# ---------------------------------------------------------------------------
+# construction / auto selection
+# ---------------------------------------------------------------------------
+
+_STRATEGIES = {cls.name: cls
+               for cls in (RingExchange, AllToAllExchange, BucketedExchange)}
+
+
+def make_exchange(name: str, *, axis_name: str, num_shards: int, rows: int,
+                  cap: Optional[int] = None) -> Exchange:
+    """Strategy by name.  "auto" is a DRIVER-side policy — resolve it with
+    ``select_exchange`` (it needs the batch geometry) before building."""
+    if name == "auto":
+        raise ValueError(
+            '"auto" must be resolved before building steps: call '
+            "select_exchange(num_shards, b_local, j_max, s, d_h) with the "
+            "batch geometry and pass the returned strategy name")
+    if name not in _STRATEGIES:
+        raise ValueError(f"unknown exchange strategy {name!r} — expected "
+                         f"one of {EXCHANGES} or 'auto'")
+    return _STRATEGIES[name](axis_name=axis_name, num_shards=num_shards,
+                             rows=rows, cap=cap)
+
+
+def select_exchange(num_shards: int, b_local: int, j_max: int, s: int,
+                    d_h: int, *, cap: Optional[int] = None,
+                    itemsize: int = 4) -> str:
+    """The "--exchange=auto" policy: the strategy with the fewest analytic
+    per-device train-step bytes at this shard count (first of EXCHANGES
+    wins ties, so 1 shard — where every model is 0 — stays on the ring).
+
+    ``cap``: the bucketed strategy's planned bucket capacity; defaults to
+    the uniform-owner estimate ceil(b_local / num_shards), which is what a
+    host-planned cap converges to for shuffled batches."""
+    if num_shards <= 1:
+        return "ring"
+    cap_est = cap if cap is not None else -(-b_local // num_shards)
+    best_name, best_bytes = None, None
+    for name in EXCHANGES:
+        ex = make_exchange(name, axis_name="_model", num_shards=num_shards,
+                           rows=1, cap=cap_est)
+        b = ex.train_step_bytes(b_local, j_max, s, d_h, use_table=True,
+                                itemsize=itemsize)
+        if best_bytes is None or b < best_bytes:
+            best_name, best_bytes = name, b
+    return best_name
+
+
+# ---------------------------------------------------------------------------
+# host-side planning: ragged batches + bucket capacity
+# ---------------------------------------------------------------------------
+
+
+def pad_ragged(num_shards: int, rows: int, ids, *payloads):
+    """Pad a GLOBAL exchange batch to a shard-divisible size.
+
+    The shard_map batch specs split the leading axis evenly, so a batch
+    whose global size doesn't divide the shard count (a ragged last
+    shard) used to be the CALLER's problem.  This is the guard: ids are
+    padded with the strategies' sentinel (``num_shards · rows`` — out of
+    every shard's owner range, so writes drop the pad rows and lookups
+    answer zeros there) and payloads with zeros.
+
+    Returns ``(padded_ids, *padded_payloads, n_real)``; slice exchange
+    results back to ``[:n_real]``.
+    """
+    ids = np.asarray(ids)
+    B = ids.shape[0]
+    Bp = -(-B // num_shards) * num_shards
+    if Bp == B:
+        return (ids, *[np.asarray(p) for p in payloads], B)
+    out = [np.concatenate(
+        [ids, np.full(Bp - B, num_shards * rows, ids.dtype)])]
+    for p in payloads:
+        p = np.asarray(p)
+        out.append(np.concatenate(
+            [p, np.zeros((Bp - B,) + p.shape[1:], p.dtype)]))
+    return (*out, B)
+
+
+def required_capacity(global_ids, *, num_shards: int, rows: int) -> int:
+    """Smallest per-(device, owner) bucket capacity that fits ONE global
+    batch under the contiguous batch split (device k gets batch rows
+    [k·B_local, (k+1)·B_local)).  Out-of-range/sentinel ids count against
+    the last shard's bucket, matching the clipped owner arithmetic."""
+    ids = np.asarray(global_ids).ravel()
+    if ids.size % num_shards:
+        ids = pad_ragged(num_shards, rows, ids)[0]
+    per_dev = ids.reshape(num_shards, -1)
+    owner = np.clip(per_dev // rows, 0, num_shards - 1)
+    cap = 1
+    for dev in range(num_shards):
+        counts = np.bincount(owner[dev], minlength=num_shards)
+        cap = max(cap, int(counts.max()))
+    return cap
+
+
+def plan_capacity(id_batches: Iterable, *, num_shards: int,
+                  rows: int) -> int:
+    """Bucket capacity covering EVERY batch of an id schedule — the
+    host-side planning step that makes ``bucketed`` beat the ring (the
+    cap, not the shard count, sizes its buckets)."""
+    cap = 1
+    for ids in id_batches:
+        cap = max(cap, required_capacity(ids, num_shards=num_shards,
+                                         rows=rows))
+    return cap
+
+
+# ---------------------------------------------------------------------------
+# measured collective traffic (validates the analytic models)
+# ---------------------------------------------------------------------------
+
+
+def measured_exchange_bytes(fn, num_shards: int, *args, **kwargs) -> int:
+    """Per-device bytes moved through the collective eqns of ``fn``'s
+    jaxpr (recursing through shard_map/pjit).  Counting conventions match
+    the analytic models: a ppermute sends its whole operand every hop, an
+    all_to_all keeps 1/D of its operand home, an all_gather forwards D-1
+    chunks of its input.  tests/test_exchange_props.py asserts equality
+    with every strategy's ``*_bytes`` model."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    total = 0
+    for eqn in iter_jaxpr_eqns(closed.jaxpr):
+        if eqn.primitive.name not in _COLLECTIVES:
+            continue
+        for v in eqn.invars:
+            aval = getattr(v, "aval", None)
+            if aval is None or not hasattr(aval, "shape"):
+                continue
+            nbytes = int(np.prod(aval.shape, dtype=np.int64)) * \
+                np.dtype(aval.dtype).itemsize
+            if eqn.primitive.name == "ppermute":
+                total += nbytes
+            elif eqn.primitive.name == "all_to_all":
+                total += nbytes * (num_shards - 1) // num_shards
+            else:  # all_gather
+                total += nbytes * (num_shards - 1)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# ring byte accounting (module-level: the PR 3 names, re-exported by
+# dist/table.py for backward compatibility)
+# ---------------------------------------------------------------------------
+
+
+def lookup_exchange_bytes(num_shards: int, b_local: int, j_max: int,
+                          d_h: int, itemsize: int = 4) -> int:
+    """Per-device bytes moved through the ring for ONE lookup: D hops of the
+    (ids int32, emb f32, initialized bool) buffer.  0 when unsharded."""
+    if num_shards <= 1:
+        return 0
+    per_hop = b_local * (4 + j_max * d_h * itemsize + j_max * 1)
+    return num_shards * per_hop
+
+
+def update_sampled_exchange_bytes(num_shards: int, b_local: int, s: int,
+                                  d_h: int, itemsize: int = 4) -> int:
+    """Per-device ring bytes for ONE sampled write-back: (ids, seg_idx,
+    h_new) buffers, D-1 hops (writes need no homecoming hop)."""
+    if num_shards <= 1:
+        return 0
+    per_hop = b_local * (4 + s * 4 + s * d_h * itemsize)
+    return (num_shards - 1) * per_hop
+
+
+def update_all_exchange_bytes(num_shards: int, b_local: int, j_max: int,
+                              d_h: int, itemsize: int = 4) -> int:
+    """Per-device ring bytes for ONE full refresh write: (ids, h_all,
+    seg_valid) buffers, D-1 hops (writes need no homecoming hop)."""
+    if num_shards <= 1:
+        return 0
+    per_hop = b_local * (4 + j_max * d_h * itemsize + j_max * 4)
+    return (num_shards - 1) * per_hop
+
+
+def train_step_exchange_bytes(num_shards: int, b_local: int, j_max: int,
+                              s: int, d_h: int, *, use_table: bool) -> int:
+    """Total per-device ring traffic of one dist train step (lookup +
+    sampled write-back when the variant uses the table)."""
+    if not use_table:
+        return 0
+    return (lookup_exchange_bytes(num_shards, b_local, j_max, d_h)
+            + update_sampled_exchange_bytes(num_shards, b_local, s, d_h))

@@ -1,4 +1,4 @@
-"""Row-sharded historical embedding table + ring exchange (dist subsystem).
+"""Row-sharded historical embedding table geometry (dist subsystem).
 
 The dense table T (n_graphs, J_max, d_h) of core/embedding_table.py is
 partitioned BLOCK-wise on the graph-row axis across the data mesh axis:
@@ -7,47 +7,26 @@ padded to D·R; padding rows are never referenced — graph_ids < n).
 
 FreshGNN / Bai et al. (PAPERS.md) motivate the design: the historical
 embedding store is the scaling bottleneck, so it must be partitioned with
-the compute instead of replicated.  Lookups and write-backs therefore run
-as a RING exchange inside shard_map (jax.lax.ppermute), never an
-all-gather of embedding data:
-
-  * rows a device already owns are answered by a plain local gather on the
-    first ring stop (zero communication for a perfectly-aligned batch);
-  * remote rows ride the ring — the (ids, payload) buffers hop with
-    shift +1 and every shard answers/applies the rows it owns as the
-    buffer passes through: D hops for lookups (the answered buffer must
-    come home), D-1 for writes (applied in place, nothing returns).
-
-Per-device traffic is D · B_local · row_bytes per exchange (reported by
-the *_exchange_bytes helpers and tracked in BENCH_gst_dist.json), vs
-n · row_bytes for gathering a replicated table — independent of the table
-size, which is the point.
-
-Everything here runs INSIDE shard_map: ``table`` arguments are the local
-(R, J, d) shard, ids are global graph ids, and ``axis_name`` is the data
-axis.  Writes are applied with scatter mode="drop": non-owned rows are
-redirected out of range and skipped, so each write lands exactly once
-(graph ids are unique within a batch) and stays a donated in-place
-scatter per PR 1.
+the compute instead of replicated.  HOW the shards exchange lookups and
+write-backs is a pluggable strategy since ISSUE 5 — dist/exchange.py owns
+the ring / alltoall / bucketed implementations and their bytes models;
+this module keeps the row geometry (pad/unpad, rows_per_shard) and
+re-exports the PR 3 ring API for its existing callers.
 """
 from __future__ import annotations
-
-from typing import Tuple
-
-import jax
-import jax.numpy as jnp
 
 from repro.core import embedding_table as tbl
 from repro.kernels.ops import pad_leading
 
+# canonical row-partition definitions live with the embedding store
+# (store/base.py), which owns row geometry now
+from repro.store.base import padded_rows, rows_per_shard  # noqa: F401
 
-# ---------------------------------------------------------------------------
-# row partitioning (host-side, static) — canonical definitions live with the
-# embedding store (store/base.py), which owns row geometry now; re-exported
-# here because the ring exchange is phrased in terms of them
-# ---------------------------------------------------------------------------
-
-from repro.store.base import padded_rows, rows_per_shard  # noqa: E402,F401
+# byte accounting + the ring strategy moved to dist/exchange.py (ISSUE 5);
+# re-exported here so PR 3-era callers keep working unchanged
+from repro.dist.exchange import (  # noqa: F401
+    RingExchange, lookup_exchange_bytes, train_step_exchange_bytes,
+    update_all_exchange_bytes, update_sampled_exchange_bytes)
 
 
 def pad_table(table: tbl.EmbeddingTable, num_shards: int) -> tbl.EmbeddingTable:
@@ -62,118 +41,30 @@ def unpad_table(table: tbl.EmbeddingTable, n_rows: int) -> tbl.EmbeddingTable:
 
 
 # ---------------------------------------------------------------------------
-# ring exchange (inside shard_map)
+# PR 3 ring entry points (now thin wrappers over the ring strategy)
 # ---------------------------------------------------------------------------
 
 
-def _ring_perm(num_shards: int):
-    return [(i, (i + 1) % num_shards) for i in range(num_shards)]
+def _ring(axis_name: str, num_shards: int, rows: int) -> RingExchange:
+    return RingExchange(axis_name=axis_name, num_shards=num_shards,
+                        rows=rows)
 
 
-def _hop(axis_name, num_shards, *bufs):
-    perm = _ring_perm(num_shards)
-    return tuple(jax.lax.ppermute(b, axis_name, perm) for b in bufs)
+def ring_lookup(table, graph_ids, *, axis_name: str, num_shards: int,
+                rows: int):
+    """Distributed ``tbl.lookup`` over the ring (see RingExchange)."""
+    return _ring(axis_name, num_shards, rows).lookup(table, graph_ids)
 
 
-def ring_lookup(table: tbl.EmbeddingTable, graph_ids, *, axis_name: str,
-                num_shards: int, rows: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Distributed ``tbl.lookup``: global graph_ids (B_l,) against the local
-    (R, J, d) shard.  Locally-owned rows are a plain gather; remote rows are
-    collected as the query buffer rides the ring (D ppermute hops, the last
-    one bringing the answered buffer home).  Pure row selection — no
-    reductions — so the result is BIT-EXACT vs the dense single-device
-    lookup (asserted in tests/test_dist.py)."""
-    me = jax.lax.axis_index(axis_name)
-    B = graph_ids.shape[0]
-    emb = jnp.zeros((B,) + table.emb.shape[1:], table.emb.dtype)
-    init = jnp.zeros((B,) + table.initialized.shape[1:],
-                     table.initialized.dtype)
-    ids = graph_ids
-    for _ in range(num_shards):
-        owner = ids // rows
-        mine = owner == me
-        local_row = jnp.clip(ids - me * rows, 0, rows - 1)
-        e, i = tbl.lookup(table, local_row)
-        emb = jnp.where(mine[:, None, None], e, emb)
-        init = jnp.where(mine[:, None], i, init)
-        if num_shards > 1:
-            ids, emb, init = _hop(axis_name, num_shards, ids, emb, init)
-    return emb, init
+def ring_update_sampled(table, graph_ids, seg_idx, h_new, step, *,
+                        axis_name: str, num_shards: int, rows: int):
+    """Distributed ``tbl.update_sampled`` over the ring (see RingExchange)."""
+    return _ring(axis_name, num_shards, rows).update_sampled(
+        table, graph_ids, seg_idx, h_new, step)
 
 
-def ring_update_sampled(table: tbl.EmbeddingTable, graph_ids, seg_idx, h_new,
-                        step, *, axis_name: str, num_shards: int,
-                        rows: int) -> tbl.EmbeddingTable:
-    """Distributed ``tbl.update_sampled``: the (ids, seg_idx, h_new) write
-    buffer rides the ring; each shard applies the writes it owns in place
-    (donated scatter, mode="drop" for everything else)."""
-    ids, sidx, h = graph_ids, seg_idx, h_new
-    me = jax.lax.axis_index(axis_name)
-    for t in range(num_shards):
-        mine = (ids // rows) == me
-        local_row = jnp.where(mine, ids - me * rows, rows)  # rows => dropped
-        table = tbl.update_sampled(table, local_row, sidx, h, step,
-                                   mode="drop")
-        if t < num_shards - 1:  # write buffers need no homecoming hop
-            ids, sidx, h = _hop(axis_name, num_shards, ids, sidx, h)
-    return table
-
-
-def ring_update_all(table: tbl.EmbeddingTable, graph_ids, h_all, seg_valid,
-                    step, *, axis_name: str, num_shards: int,
-                    rows: int) -> tbl.EmbeddingTable:
-    """Distributed ``tbl.update_all`` (refresh phase) over the ring."""
-    ids, h, sv = graph_ids, h_all, seg_valid
-    me = jax.lax.axis_index(axis_name)
-    for t in range(num_shards):
-        mine = (ids // rows) == me
-        local_row = jnp.where(mine, ids - me * rows, rows)
-        table = tbl.update_all(table, local_row, h, sv, step, mode="drop")
-        if t < num_shards - 1:  # write buffers need no homecoming hop
-            ids, h, sv = _hop(axis_name, num_shards, ids, h, sv)
-    return table
-
-
-# ---------------------------------------------------------------------------
-# exchange-byte accounting (bench_dist.py / tests)
-# ---------------------------------------------------------------------------
-
-
-def lookup_exchange_bytes(num_shards: int, b_local: int, j_max: int,
-                          d_h: int, itemsize: int = 4) -> int:
-    """Per-device bytes moved through the ring for ONE lookup: D hops of the
-    (ids int32, emb f32, initialized bool) buffer.  0 when unsharded."""
-    if num_shards <= 1:
-        return 0
-    per_hop = b_local * (4 + j_max * d_h * itemsize + j_max * 1)
-    return num_shards * per_hop
-
-
-def update_sampled_exchange_bytes(num_shards: int, b_local: int, s: int,
-                                  d_h: int, itemsize: int = 4) -> int:
-    """Per-device ring bytes for ONE sampled write-back: (ids, seg_idx,
-    h_new) buffers, D-1 hops (writes need no homecoming hop)."""
-    if num_shards <= 1:
-        return 0
-    per_hop = b_local * (4 + s * 4 + s * d_h * itemsize)
-    return (num_shards - 1) * per_hop
-
-
-def update_all_exchange_bytes(num_shards: int, b_local: int, j_max: int,
-                              d_h: int, itemsize: int = 4) -> int:
-    """Per-device ring bytes for ONE full refresh write: (ids, h_all,
-    seg_valid) buffers, D-1 hops (writes need no homecoming hop)."""
-    if num_shards <= 1:
-        return 0
-    per_hop = b_local * (4 + j_max * d_h * itemsize + j_max * 4)
-    return (num_shards - 1) * per_hop
-
-
-def train_step_exchange_bytes(num_shards: int, b_local: int, j_max: int,
-                              s: int, d_h: int, *, use_table: bool) -> int:
-    """Total per-device ring traffic of one dist train step (lookup +
-    sampled write-back when the variant uses the table)."""
-    if not use_table:
-        return 0
-    return (lookup_exchange_bytes(num_shards, b_local, j_max, d_h)
-            + update_sampled_exchange_bytes(num_shards, b_local, s, d_h))
+def ring_update_all(table, graph_ids, h_all, seg_valid, step, *,
+                    axis_name: str, num_shards: int, rows: int):
+    """Distributed ``tbl.update_all`` over the ring (see RingExchange)."""
+    return _ring(axis_name, num_shards, rows).update_all(
+        table, graph_ids, h_all, seg_valid, step)

@@ -9,7 +9,9 @@ Wraps the UNCHANGED step builders of core/gst.py in ``shard_map`` over a
     whatever device tier the context's EmbeddingStore provides
     (``make_dist_store``): the full table (DeviceStore, default) or each
     shard's bounded LRU slice of it (TieredStore, ``device_rows=``), with
-    the ring exchange routing on device-row ids via ``ctx.table_rows``;
+    the table exchange — a pluggable ring/alltoall/bucketed strategy
+    since ISSUE 5 (dist/exchange.py, ``ctx.exchange``) — routing on
+    device-row ids via ``ctx.table_rows``;
   * batch — sharded on the leading batch dim, carrying ``batch_pos`` so
     every row draws the same per-row RNG stream as the single-device
     oracle (core/segment.py::per_row_keys);
@@ -24,7 +26,6 @@ mesh.  The whole step stays jit-donated: table shards scatter in place.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -36,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import embedding_table as tbl
 from repro.core import gst as G
 from repro.dist import table as dtbl
+from repro.dist.exchange import EXCHANGES, make_exchange
 from repro.store import DeviceStore, EmbeddingStore, TieredStore
 from repro.store import base as store_base
 
@@ -55,11 +57,19 @@ class DistContext:
     n_rows: int          # unpadded historical-table rows (n_graphs)
     rows_per_shard: int
     # device-resident rows PER SHARD when the table is tiered (store/),
-    # None = fully device-resident.  The ring exchange routes by
+    # None = fully device-resident.  The table exchange routes by
     # ``id // table_rows``; with a tiered store the ids the step sees are
     # the store's device-row ("slot") ids, whose owner arithmetic uses the
     # device-tier row count instead of the full shard row count.
     device_rows_per_shard: Optional[int] = None
+    # table-exchange strategy (dist/exchange.py): "ring", "alltoall" or
+    # "bucketed" — "auto" is resolved by the driver via select_exchange
+    # BEFORE make_context (it needs the batch geometry)
+    exchange: str = "ring"
+    # bucketed-only: host-planned per-(device, owner) bucket capacity
+    # (exchange.plan_capacity over the id schedule); None = B_local, safe
+    # for any owner distribution but no smaller than the alltoall block
+    exchange_cap: Optional[int] = None
 
     @property
     def axis_name(self) -> str:
@@ -67,7 +77,7 @@ class DistContext:
 
     @property
     def table_rows(self) -> int:
-        """Rows per shard OF THE TABLE THE STEP SEES (ring-exchange owner
+        """Rows per shard OF THE TABLE THE STEP SEES (exchange owner
         arithmetic)."""
         return self.device_rows_per_shard or self.rows_per_shard
 
@@ -85,30 +95,44 @@ def make_dist_mesh(num_devices: Optional[int] = None) -> Mesh:
 
 
 def make_context(mesh: Mesh, n_rows: int,
-                 device_rows: Optional[int] = None) -> DistContext:
+                 device_rows: Optional[int] = None, *,
+                 exchange: str = "ring",
+                 exchange_cap: Optional[int] = None) -> DistContext:
     """``device_rows``: total device-resident row cap (the
-    --table-device-rows knob); None keeps the table fully resident."""
+    --table-device-rows knob); None keeps the table fully resident.
+    ``exchange``/``exchange_cap``: table-exchange strategy + its planned
+    bucket capacity (see DistContext)."""
+    if exchange not in EXCHANGES:
+        raise ValueError(
+            f"unknown exchange strategy {exchange!r} — expected one of "
+            f"{EXCHANGES}; resolve 'auto' with exchange.select_exchange "
+            "before make_context")
     d = mesh.shape[AXIS]
     per_shard = None if device_rows is None else \
         store_base.device_rows_per_shard(n_rows, d, device_rows)
     return DistContext(mesh=mesh, num_shards=d, n_rows=n_rows,
                        rows_per_shard=dtbl.rows_per_shard(n_rows, d),
-                       device_rows_per_shard=per_shard)
+                       device_rows_per_shard=per_shard,
+                       exchange=exchange, exchange_cap=exchange_cap)
 
 
 def make_dist_store(ctx: DistContext, j_max: int, d_h: int,
-                    dtype=jnp.float32) -> EmbeddingStore:
+                    dtype=jnp.float32,
+                    evict_policy: str = "lru") -> EmbeddingStore:
     """The context's embedding store: tiered per-shard slices when the
     context carries a device-row cap, the dense device-resident backend
     otherwise.  Either way the device tier is row-sharded over the mesh
-    (P(AXIS)) and the ring exchange runs unchanged on its rows."""
+    (P(AXIS)) and the table exchange runs unchanged on its rows.
+    ``evict_policy``: the tiered device tier's eviction policy
+    (store/slots.py — "lru" or "stale-first")."""
     sh = batch_sharding(ctx)
     if ctx.device_rows_per_shard is None:
         return DeviceStore(ctx.n_rows, j_max, d_h, num_shards=ctx.num_shards,
                            dtype=dtype, sharding=sh)
     return TieredStore(ctx.n_rows, j_max, d_h,
                        device_rows=ctx.device_rows_per_shard * ctx.num_shards,
-                       num_shards=ctx.num_shards, dtype=dtype, sharding=sh)
+                       num_shards=ctx.num_shards, dtype=dtype, sharding=sh,
+                       evict_policy=evict_policy)
 
 
 # ---------------------------------------------------------------------------
@@ -185,12 +209,10 @@ def _batch_spec() -> G.GSTBatch:
 
 
 def _table_ops(ctx: DistContext):
-    kw = dict(axis_name=AXIS, num_shards=ctx.num_shards,
-              rows=ctx.table_rows)
-    lookup = partial(dtbl.ring_lookup, **kw)
-    update = partial(dtbl.ring_update_sampled, **kw)
-    update_all = partial(dtbl.ring_update_all, **kw)
-    return lookup, update, update_all
+    ex = make_exchange(ctx.exchange, axis_name=AXIS,
+                       num_shards=ctx.num_shards, rows=ctx.table_rows,
+                       cap=ctx.exchange_cap)
+    return ex.lookup, ex.update_sampled, ex.update_all
 
 
 # ---------------------------------------------------------------------------

@@ -89,19 +89,12 @@ def batched_neighbor_sum(h, src, dst, w, *, use_pallas: bool = True):
     return ref.segment_spmm_batched_ref(h, src, dst, w)
 
 
-def count_pallas_calls(fn, *args, **kwargs) -> int:
-    """Number of ``pallas_call`` eqns in fn's jaxpr (recursing into sub-jaxprs).
-
-    The fused-path contract (one batched kernel launch per message-passing
-    layer rather than one per vmapped segment) is asserted with this in
-    tests/test_fused_path.py and recorded by benchmarks/bench_step.py.
-
-    The recursion walks EVERY Jaxpr-valued eqn param, so it sees through
-    pjit, scan/while bodies, custom-VJP wrappers AND ``shard_map`` — the
-    dist/ subsystem uses that to assert its per-shard step launches exactly
-    the same batched kernels as the single-device step
-    (tests/test_dist.py::test_dist_step_kernel_launch_contract).
-    """
+def iter_jaxpr_eqns(jaxpr):
+    """Depth-first iterator over every eqn of ``jaxpr``, recursing into
+    EVERY Jaxpr-valued eqn param — pjit, scan/while bodies, custom-VJP
+    wrappers AND ``shard_map``.  Shared by ``count_pallas_calls`` (kernel
+    launch contracts) and ``dist/exchange.py::measured_exchange_bytes``
+    (collective-traffic accounting against the analytic bytes models)."""
     try:  # jax >= 0.5 moved the jaxpr types; 0.4.x only has jax.core
         from jax.extend import core as jcore
     except ImportError:  # pragma: no cover
@@ -117,16 +110,30 @@ def count_pallas_calls(fn, *args, **kwargs) -> int:
                     yield u
 
     def walk(jaxpr):
-        n = 0
         for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                n += 1
+            yield eqn
             for sub in subjaxprs(eqn.params):
-                n += walk(sub)
-        return n
+                yield from walk(sub)
 
+    yield from walk(jaxpr)
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` eqns in fn's jaxpr (recursing into sub-jaxprs).
+
+    The fused-path contract (one batched kernel launch per message-passing
+    layer rather than one per vmapped segment) is asserted with this in
+    tests/test_fused_path.py and recorded by benchmarks/bench_step.py.
+
+    The recursion (iter_jaxpr_eqns) sees through pjit, scan/while bodies,
+    custom-VJP wrappers AND ``shard_map`` — the dist/ subsystem uses that
+    to assert its per-shard step launches exactly the same batched kernels
+    as the single-device step
+    (tests/test_dist.py::test_dist_step_kernel_launch_contract).
+    """
     closed = jax.make_jaxpr(fn)(*args, **kwargs)
-    return walk(closed.jaxpr)
+    return sum(1 for eqn in iter_jaxpr_eqns(closed.jaxpr)
+               if eqn.primitive.name == "pallas_call")
 
 
 def max_intermediate_bytes(fn, *args, **kwargs) -> int:

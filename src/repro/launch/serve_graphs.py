@@ -30,6 +30,7 @@ def build_engine(args):
         cache_capacity=args.cache_capacity,
         cache_enabled=not args.no_cache,
         table_device_rows=args.table_device_rows,
+        evict_policy=args.evict_policy,
         stream_chunk=args.stream_chunk,
     )
     return ServeEngine(cfg, seed=args.seed)
@@ -76,6 +77,12 @@ def main(argv=None):
                          "spill to a host-RAM tier and fault back on hit "
                          "instead of being re-encoded (store/tiered.py). "
                          "Default: all cache rows on device")
+    ap.add_argument("--evict-policy", default="lru",
+                    choices=["lru", "stale-first"],
+                    help="device-tier eviction policy under "
+                         "--table-device-rows: pure LRU or age-aware "
+                         "stale-first (evict stale-and-cold rows before "
+                         "fresh-and-hot ones)")
     ap.add_argument("--max-seg-nodes", type=int, default=64)
     ap.add_argument("--stream-chunk", type=int, default=8)
     ap.add_argument("--warmup", type=int, default=4,

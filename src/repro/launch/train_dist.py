@@ -11,6 +11,10 @@ table and the async host→device segment pipeline:
     PYTHONPATH=src python -m repro.launch.train_dist \
         --devices 8 --feeder sync --epochs 5
 
+    # owner-direct table exchange, capacity planned over the schedules
+    PYTHONPATH=src python -m repro.launch.train_dist \
+        --devices 8 --exchange bucketed --epochs 5
+
 ``--devices N`` forces an N-device host via XLA_FLAGS when jax has not
 initialized yet (CPU development / CI; on a real TPU slice leave it unset
 to use the attached devices).
@@ -57,12 +61,28 @@ def main(argv=None):
                          "(default) or the synchronous baseline")
     ap.add_argument("--depth", type=int, default=2,
                     help="async pipeline depth (in-flight device batches)")
+    ap.add_argument("--exchange", default="ring",
+                    choices=["ring", "alltoall", "bucketed", "auto"],
+                    help="table-exchange strategy (dist/exchange.py): the "
+                         "D-hop ppermute ring, full-buffer all_to_all "
+                         "dissemination, owner-direct bucketed routing, or "
+                         "auto = fewest analytic bytes per step at this "
+                         "shard count")
+    ap.add_argument("--exchange-cap", type=int, default=None,
+                    help="bucketed only: per-(device, owner) bucket "
+                         "capacity.  Default: planned host-side over the "
+                         "run's precomputed id schedules "
+                         "(exchange.plan_capacity — the tightest safe cap)")
     ap.add_argument("--table-device-rows", type=int, default=None,
                     help="cap on device-resident historical-table rows "
                          "(total, split over shards; clamped up so every "
                          "shard can pin one batch).  The rest spill to a "
                          "host-RAM tier with async write-back.  Default: "
                          "whole table on device")
+    ap.add_argument("--evict-policy", default="lru",
+                    choices=["lru", "stale-first"],
+                    help="tiered-store device-tier eviction policy under "
+                         "--table-device-rows (store/slots.py)")
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -75,6 +95,7 @@ def main(argv=None):
     from repro import dist as DT
     from repro.core import gst as G
     from repro.core.embedding_table import init_table
+    from repro.dist import exchange as EXC
     from repro.dist import pipeline as DP
     from repro.dist import table as dtbl
     from repro.graphs import data as D
@@ -111,8 +132,48 @@ def main(argv=None):
     if args.table_device_rows is not None:
         # every shard must be able to pin one batch's rows at once
         device_rows = max(args.table_device_rows, n_dev * args.batch_size)
-    ctx = DT.make_context(mesh, ds.n, device_rows=device_rows)
-    store = DT.make_dist_store(ctx, ds.j_max, args.hidden)
+
+    # precompute every id schedule up front (same rng draw order as the
+    # former per-epoch draws, so traces are unchanged): the bucketed
+    # exchange sizes its per-owner buckets host-side over the WHOLE run
+    # (exchange.plan_capacity) before any step is built
+    rng = np.random.default_rng(args.seed + 3)
+    train_scheds = [DP.epoch_ids(ds, args.batch_size, rng=rng)
+                    for _ in range(args.epochs)]
+    refresh_sched = DP.epoch_ids(ds, args.batch_size, rng=rng, shuffle=False)
+    ft_scheds = [DP.epoch_ids(ds, args.batch_size, rng=rng)
+                 for _ in range(args.finetune_epochs)] \
+        if var.finetune_head else []
+    eval_sched = DP.epoch_ids(ds, args.batch_size, rng=rng, shuffle=False)
+
+    # owner histograms are identical in graph-row and tiered slot space
+    # (a row's slot stays on its owner shard), so capacity planned on
+    # graph ids is exact for either table the step sees
+    rows_per_shard = dtbl.rows_per_shard(ds.n, n_dev)
+    exchange_batches = [ids for sched in
+                        (*train_scheds, refresh_sched, *ft_scheds)
+                        for ids in sched]
+    need_cap = EXC.plan_capacity(exchange_batches, num_shards=n_dev,
+                                 rows=rows_per_shard)
+    cap = args.exchange_cap
+    if cap is None:
+        cap = need_cap
+    elif cap < need_cap:
+        ap.error(f"--exchange-cap {cap} is below the {need_cap} rows one "
+                 "owner bucket needs for this run's schedules — the "
+                 "bucketed exchange would silently truncate writes")
+    b_local = args.batch_size // n_dev
+    exchange = args.exchange
+    if exchange == "auto":
+        exchange = EXC.select_exchange(n_dev, b_local, ds.j_max,
+                                       args.num_sampled, args.hidden,
+                                       cap=cap)
+    ctx = DT.make_context(mesh, ds.n, device_rows=device_rows,
+                          exchange=exchange,
+                          exchange_cap=cap if exchange == "bucketed"
+                          else None)
+    store = DT.make_dist_store(ctx, ds.j_max, args.hidden,
+                               evict_policy=args.evict_policy)
     state = DT.device_state(ctx, state, store=store)
     step = DT.make_dist_train_step(enc, opt, var, ctx=ctx,
                                    keep_prob=args.keep_prob,
@@ -120,23 +181,40 @@ def main(argv=None):
                                    use_pallas=args.use_pallas)
     eval_step = DT.make_dist_eval_step(enc, ctx=ctx,
                                        use_pallas=args.use_pallas)
-    xbytes = dtbl.train_step_exchange_bytes(
-        ctx.num_shards, args.batch_size // ctx.num_shards, ds.j_max,
-        args.num_sampled, args.hidden, use_table=var.use_table)
+    ex_model = EXC.make_exchange(exchange, axis_name=DT.AXIS,
+                                 num_shards=ctx.num_shards,
+                                 rows=ctx.table_rows, cap=ctx.exchange_cap)
+    xbytes = ex_model.train_step_bytes(b_local, ds.j_max, args.num_sampled,
+                                       args.hidden, use_table=var.use_table)
     print(f"[dist] devices={ctx.num_shards} rows/shard={ctx.rows_per_shard} "
           f"device-rows/shard={ctx.table_rows} "
           f"bucket={spec.key} feeder={args.feeder} "
-          f"exchange={xbytes / 1024:.1f} KiB/step/device")
+          f"exchange={exchange} ({xbytes / 1024:.1f} KiB/step/device"
+          + (f", cap={cap}" if exchange == "bucketed" else "") + ")")
 
     try:
-        rng = np.random.default_rng(args.seed + 3)
+        # monotone per-begin counter, same clock the jitted steps write
+        # ages with — the stale-first refresh hint for rows a train/
+        # refresh step is about to rewrite (finetune only READS the
+        # table, so its put passes no hint)
+        step_counter = {"t": 0}
 
-        def put(b):
+        def _put(b, counting):
             # route graph ids -> store device rows on the feeder thread, so the
             # host-tier gather + staging device_put overlap with the running
             # step; the consumer commits the staged migration in order below
-            prep = store.begin(np.asarray(b.graph_ids))
+            hint = None
+            if counting:
+                hint = step_counter["t"]
+                step_counter["t"] += 1
+            prep = store.begin(np.asarray(b.graph_ids), step=hint)
             return prep, DT.shard_batch(ctx, b._replace(graph_ids=prep.slots))
+
+        def put(b):
+            return _put(b, True)
+
+        def put_readonly(b):
+            return _put(b, False)
 
         def print_store_line():
             s = store.stats()
@@ -149,10 +227,9 @@ def main(argv=None):
 
         t_start = time.perf_counter()
         last_stats = None
-        for epoch in range(args.epochs):
-            feeder = DP.make_feeder(args.feeder, ds,
-                                    DP.epoch_ids(ds, args.batch_size, rng=rng),
-                                    put, depth=args.depth)
+        for epoch, sched in enumerate(train_scheds):
+            feeder = DP.make_feeder(args.feeder, ds, sched, put,
+                                    depth=args.depth)
             losses = []
             for prep, batch in feeder:
                 state = state._replace(table=store.commit(state.table, prep))
@@ -167,10 +244,7 @@ def main(argv=None):
 
         if var.finetune_head:
             refresh = DT.make_dist_refresh_step(enc, ctx=ctx)
-            for prep, batch in DP.make_feeder(
-                    "sync", ds,
-                    DP.epoch_ids(ds, args.batch_size, rng=rng, shuffle=False),
-                    put):
+            for prep, batch in DP.make_feeder("sync", ds, refresh_sched, put):
                 state = state._replace(table=store.commit(state.table, prep))
                 state = refresh(state, batch)
             ft_opt = make_optimizer("adam", lr=args.lr * 0.5)
@@ -179,10 +253,9 @@ def main(argv=None):
             ft = DT.make_dist_finetune_step(ft_opt, ctx=ctx,
                                             use_pallas=args.use_pallas)
             m = None
-            for fe in range(args.finetune_epochs):
+            for sched in ft_scheds:
                 for prep, batch in DP.make_feeder(
-                        args.feeder, ds,
-                        DP.epoch_ids(ds, args.batch_size, rng=rng), put,
+                        args.feeder, ds, sched, put_readonly,
                         depth=args.depth):
                     state = state._replace(table=store.commit(state.table, prep))
                     state, m = ft(state, batch)
@@ -192,10 +265,8 @@ def main(argv=None):
         # eval never reads the table — no store routing (a begun-but-uncommitted
         # migration would corrupt residency bookkeeping)
         metrics = []
-        for batch in DP.make_feeder(
-                "sync", ds, DP.epoch_ids(ds, args.batch_size, rng=rng,
-                                         shuffle=False),
-                lambda b: DT.shard_batch(ctx, b)):
+        for batch in DP.make_feeder("sync", ds, eval_sched,
+                                    lambda b: DT.shard_batch(ctx, b)):
             metrics.append(float(eval_step(state, batch)["metric"]))
         # surface any failed async write-back BEFORE reporting success
         store.flush_writebacks()

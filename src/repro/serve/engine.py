@@ -157,6 +157,9 @@ class ServeConfig:
     # TieredStore — cold entries spill to host RAM and fault back on hit
     # instead of being re-encoded
     table_device_rows: Optional[int] = None
+    # device-tier eviction policy when table_device_rows is set
+    # (store/slots.py: "lru" or age-aware "stale-first")
+    evict_policy: str = "lru"
     stream_chunk: int = 8
 
     def resolved_ladder(self) -> Tuple[BucketSpec, ...]:
@@ -219,7 +222,8 @@ class ServeEngine:
         store = None
         if cfg.cache_enabled and cfg.table_device_rows is not None:
             store = TieredStore(cfg.cache_capacity, 1, cfg.hidden,
-                                device_rows=cfg.table_device_rows)
+                                device_rows=cfg.table_device_rows,
+                                evict_policy=cfg.evict_policy)
         self.cache = (SegmentCache(cfg.cache_capacity, cfg.hidden, store=store)
                       if cfg.cache_enabled else None)
         self.stats = ServeStats()

@@ -148,7 +148,8 @@ class EmbeddingStore:
 
     # -- residency ---------------------------------------------------------
 
-    def begin(self, row_ids, *, fetch: bool = True) -> PreparedMigration:
+    def begin(self, row_ids, *, fetch: bool = True,
+              step: Optional[int] = None) -> PreparedMigration:
         raise NotImplementedError
 
     def commit(self, table: tbl.EmbeddingTable,
@@ -156,9 +157,11 @@ class EmbeddingStore:
         raise NotImplementedError
 
     def prepare(self, table: tbl.EmbeddingTable, row_ids, *,
-                fetch: bool = True) -> Tuple[tbl.EmbeddingTable, np.ndarray]:
-        """begin + commit in one call (synchronous drivers)."""
-        prep = self.begin(row_ids, fetch=fetch)
+                fetch: bool = True, step: Optional[int] = None,
+                ) -> Tuple[tbl.EmbeddingTable, np.ndarray]:
+        """begin + commit in one call (synchronous drivers).  ``step``:
+        refresh hint for stale-first eviction (see TieredStore.begin)."""
+        prep = self.begin(row_ids, fetch=fetch, step=step)
         return self.commit(table, prep), prep.slots
 
     def resident_slot(self, row: int) -> Optional[int]:
@@ -220,7 +223,8 @@ class DeviceStore(EmbeddingStore):
     ``commit`` are pure bookkeeping no-ops, preserving the donated in-place
     scatter semantics of the original core/embedding_table.py path."""
 
-    def begin(self, row_ids, *, fetch: bool = True) -> PreparedMigration:
+    def begin(self, row_ids, *, fetch: bool = True,
+              step: Optional[int] = None) -> PreparedMigration:
         slots = np.asarray(row_ids, np.int32)
         # count UNIQUE rows like TieredStore.begin, so the counters the
         # CLIs/bench print are comparable across backends (callers pass

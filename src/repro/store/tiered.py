@@ -9,7 +9,8 @@ hot rows backed by host memory captures most traffic.  Layout per shard
             ▲  eviction write-back — async, on the pipeline's
             │  AsyncHostWriter thread, overlapped with the step
             ▼  miss fetch — staged in begin(), applied in commit()
-      device tier  (C <= R rows = "slots", LRU via store/slots.SlotMap)
+      device tier  (C <= R rows = "slots", store/slots.SlotMap —
+                    ``evict_policy`` "lru" or age-aware "stale-first")
 
 A global row id r lives on shard ``r // R``; when resident it occupies
 device row ``shard*C + slot``, so the dist ring exchange's owner
@@ -54,11 +55,13 @@ class TieredStore(EmbeddingStore):
     def __init__(self, n_rows: int, j_max: int, d_h: int, *,
                  device_rows: int, num_shards: int = 1, dtype=jnp.float32,
                  sharding=None, writer: Optional[AsyncHostWriter] = None,
-                 donate: bool = True):
+                 donate: bool = True, evict_policy: str = "lru"):
         super().__init__(n_rows, j_max, d_h, num_shards=num_shards,
                          dtype=dtype, sharding=sharding)
         self._C = device_rows_per_shard(n_rows, self.num_shards, device_rows)
-        self._maps = [SlotMap(self._C) for _ in range(self.num_shards)]
+        self.evict_policy = evict_policy
+        self._maps = [SlotMap(self._C, policy=evict_policy)
+                      for _ in range(self.num_shards)]
         self._host = tbl.EmbeddingTable(
             emb=np.zeros((self.padded_rows, j_max, d_h), jnp.dtype(dtype)),
             age=np.zeros((self.padded_rows, j_max), np.int32),
@@ -117,14 +120,23 @@ class TieredStore(EmbeddingStore):
 
     # -- residency ---------------------------------------------------------
 
-    def begin(self, row_ids, *, fetch: bool = True) -> PreparedMigration:
+    def begin(self, row_ids, *, fetch: bool = True,
+              step: Optional[int] = None) -> PreparedMigration:
         """Host half of a migration: residency bookkeeping + staging.
 
         Safe to call on the feeder thread while a step runs.  With
         ``fetch=False`` missing rows are made resident WITHOUT copying
         host content up (their device slots hold garbage until the caller
         overwrites them — the serving cache's insert path, which writes
-        the full row right after prepare)."""
+        the full row right after prepare).
+
+        ``step``: optional refresh hint for stale-first eviction — the
+        training step about to WRITE these rows (train/refresh paths,
+        where a requested row is refreshed on device; pass nothing for
+        read-only paths like finetune lookups).  Without it a resident
+        row keeps the age it carried in from the host tier, so a
+        long-resident hot row would score as stale as its last eviction
+        left it."""
         ids = np.asarray(row_ids).ravel()
         R, C = self.rows_per_shard, self._C
         with self._begin_mu:
@@ -165,8 +177,17 @@ class TieredStore(EmbeddingStore):
                     if displaced is not None:
                         evicts.append((displaced[0], shard * C + displaced[1]))
                     uploads.append((rid, shard * C + slot))
+                    if self.evict_policy != "lru":
+                        # stale-first scores by the age the row carried in
+                        # from the host tier (its most recent segment
+                        # refresh); host ages are brought up to date by
+                        # the eviction write-backs
+                        m.set_age(rid, int(self._host.age[rid].max())
+                                  if step is None else int(step))
                 else:
                     n_hit += 1
+                    if self.evict_policy != "lru" and step is not None:
+                        m.set_age(rid, int(step))  # about to be rewritten
                 slot_of[rid] = shard * C + slot
             slots = np.asarray([slot_of[int(r)] for r in ids], np.int32)
             with self._mu:
@@ -363,5 +384,6 @@ class TieredStore(EmbeddingStore):
             "host_rows": self.padded_rows,
             "occupancy_frac": self.occupancy() / max(self.device_rows, 1),
             "pending_writebacks": self._writer.pending,
+            "evict_policy": self.evict_policy,
         })
         return d

@@ -293,6 +293,67 @@ def test_checkpoint_roundtrip_resumes_bit_exact(dataset, backend, tmp_path):
     st2.close()
 
 
+def test_checkpoint_with_pending_writebacks_flushes_and_resumes(tmp_path):
+    """Checkpointing while AsyncHostWriter still has eviction write-backs
+    in flight: ``snapshot`` must flush them before merging tiers, so the
+    file carries the evicted rows' content and a resumed run continues
+    bit-exactly vs the uninterrupted one."""
+    import threading
+
+    n, J, d = 6, 1, 4
+    rng_vals = np.random.default_rng(11)
+    vals = rng_vals.normal(size=(32, 1, 1, d)).astype(np.float32)
+    sched = [0, 1, 2, 3, 4, 5, 0, 1, 2, 3, 4, 5]  # C=2 -> constant churn
+
+    def make_store():
+        return TieredStore(n, J, d, device_rows=2)
+
+    def run(store, table, oracle, steps):
+        for t in steps:
+            row = sched[t]
+            table, slots = store.prepare(table, np.asarray([row]))
+            z = jnp.zeros((1, 1), jnp.int32)
+            table = tbl.update_sampled(table, jnp.asarray(slots), z,
+                                       jnp.asarray(vals[t]), t)
+            oracle = tbl.update_sampled(oracle, jnp.asarray([row]), z,
+                                        jnp.asarray(vals[t]), t)
+        return table, oracle
+
+    # uninterrupted reference
+    ref = make_store()
+    ref_table, oracle = run(ref, ref.init_device_table(),
+                            tbl.init_table(n, J, d), range(len(sched)))
+
+    # interrupted run: half the steps, then BLOCK the write-back lane and
+    # trigger one more eviction so its write-back is genuinely pending at
+    # save time
+    st1 = make_store()
+    table1, _ = run(st1, st1.init_device_table(), tbl.init_table(n, J, d),
+                    range(6))
+    gate = threading.Event()
+    st1._writer.submit(lambda: gate.wait(timeout=10.0))
+    table1, slots = st1.prepare(table1, np.asarray([sched[6]]))  # evicts
+    assert st1._writer.pending >= 1
+    threading.Timer(0.2, gate.set).start()
+    path = save_store_checkpoint(str(tmp_path), 6, st1, table1)
+    assert st1._writer.pending == 0          # snapshot flushed the lane
+    st1.close()
+
+    # resume: finish the schedule on a fresh store.  Step 6's prepare ran
+    # before the save but its update didn't — replay from step 6.
+    st2 = make_store()
+    table2, extra = load_store_checkpoint(path, st2)
+    table2, oracle2 = run(st2, table2, tbl.init_table(n, J, d),
+                          range(6, len(sched)))
+    st2.flush_writebacks()
+    snap_ref = ref.snapshot(ref_table)
+    snap_res = st2.snapshot(table2)
+    assert _table_bitwise(snap_ref, snap_res)
+    assert _tree_bitwise(tuple(snap_ref), tuple(oracle))
+    ref.close()
+    st2.close()
+
+
 def test_snapshot_restore_preserves_host_tier():
     """Rows living ONLY in the host tier at save time must round-trip."""
     rng = np.random.default_rng(0)

@@ -10,10 +10,15 @@ checked after EVERY prepare/update against a dense oracle table:
     from the device tier, everything else from host RAM, and the merged
     snapshot equals the oracle bit for bit;
   * lookups after ANY eviction sequence are bit-exact vs the oracle —
-    residency is invisible to the training math.
+    residency is invisible to the training math;
+  * the eviction POLICY (lru | stale-first, store/slots.py) only changes
+    WHICH row migrates, never the math: the churn invariants hold under
+    both, and under stale-first the stale-and-cold rows demonstrably
+    leave the device tier before fresh-and-hot ones.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from _hypothesis_compat import given, settings, st
 
@@ -53,13 +58,15 @@ def _random_ops(store, table, oracle, rng, n_steps, batch):
 
 @settings(max_examples=8, deadline=None)
 @given(n=st.integers(5, 30), device_frac=st.floats(0.1, 0.9),
-       num_shards=st.sampled_from([1, 2, 4]), seed=st.integers(0, 10**6))
+       num_shards=st.sampled_from([1, 2, 4]), seed=st.integers(0, 10**6),
+       policy=st.sampled_from(["lru", "stale-first"]))
 def test_tier_invariants_hold_under_random_churn(n, device_frac, num_shards,
-                                                 seed):
+                                                 seed, policy):
     rng = np.random.default_rng(seed)
     J, d = 2, 4
     store = TieredStore(n, J, d, num_shards=num_shards,
-                        device_rows=max(1, int(n * device_frac)))
+                        device_rows=max(1, int(n * device_frac)),
+                        evict_policy=policy)
     table = store.init_device_table()
     oracle = tbl.init_table(n, J, d)
     C = store.device_rows_per_shard
@@ -117,6 +124,104 @@ def test_slotmap_never_leaks_or_doubles_slots(capacity, n_keys, seed):
         assert len(set(live.values())) == len(live)
         for k, s in live.items():
             assert m.get(k, touch=False) == s
+
+
+# ---------------------------------------------------------------------------
+# staleness-aware eviction (--evict-policy=stale-first)
+# ---------------------------------------------------------------------------
+
+
+def _aged_store(policy):
+    """A store restored from a snapshot whose per-row ages are crafted:
+    rows 0-3 will fill the 4-slot device tier; rows 4-6 arrive later and
+    force evictions.  Ages: 0->5, 1->1, 2->9, 3->1, 4..6->20."""
+    n, J, d, C = 8, 2, 4, 4
+    rng = np.random.default_rng(0)
+    ages = np.array([5, 1, 9, 1, 20, 20, 20, 3])
+    snap = tbl.EmbeddingTable(
+        emb=rng.normal(size=(n, J, d)).astype(np.float32),
+        age=np.tile(ages[:, None], (1, J)).astype(np.int32),
+        initialized=np.ones((n, J), bool))
+    store = TieredStore(n, J, d, device_rows=C, evict_policy=policy)
+    return store, store.restore(snap), snap
+
+
+def test_stale_first_evicts_stale_and_cold_rows_first():
+    store, table, snap = _aged_store("stale-first")
+    table, _ = store.prepare(table, np.asarray([0, 1, 2, 3]))  # tier full
+    # rows 1 and 3 are equally stale (age 1); row 1 is colder (faulted
+    # earlier), so it leaves first — NOT row 0, the pure-LRU victim
+    table, _ = store.prepare(table, np.asarray([4]))
+    assert store.resident_slot(1) is None
+    assert all(store.resident_slot(r) is not None for r in (0, 2, 3, 4))
+    table, _ = store.prepare(table, np.asarray([5]))
+    assert store.resident_slot(3) is None                      # age 1
+    table, _ = store.prepare(table, np.asarray([6]))
+    assert store.resident_slot(0) is None                      # age 5
+    assert store.resident_slot(2) is not None                  # fresh: 9
+    # the policy never touched the math: the merged view is still the
+    # restored snapshot, bit for bit, and an evicted row faults back exact
+    store.flush_writebacks()
+    got = store.snapshot(table)
+    for a, b in zip(got, snap):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    table, slots = store.prepare(table, np.asarray([1]))
+    e, i = tbl.lookup(table, jnp.asarray(slots))
+    assert np.array_equal(np.asarray(e)[0], np.asarray(snap.emb)[1])
+    assert np.array_equal(np.asarray(i)[0], np.asarray(snap.initialized)[1])
+    store.close()
+
+
+def test_stale_first_step_hint_keeps_rewritten_resident_rows():
+    """A resident row a train step is about to rewrite (prepare's ``step``
+    hint) must stop scoring as stale as its fault-in age — without the
+    hint the stalest-at-fault-in row would be evicted even while hot."""
+    store, table, _ = _aged_store("stale-first")
+    table, _ = store.prepare(table, np.asarray([0, 1, 2, 3]))
+    # row 1 (fault-in age 1, the stalest) is requested by a writing step
+    table, _ = store.prepare(table, np.asarray([1]), step=100)
+    # eviction pressure now spares it: the victim is row 3 (age 1)
+    table, _ = store.prepare(table, np.asarray([4]))
+    assert store.resident_slot(3) is None
+    assert store.resident_slot(1) is not None
+    store.close()
+
+
+def test_lru_contrast_evicts_coldest_not_stalest():
+    store, table, _ = _aged_store("lru")
+    table, _ = store.prepare(table, np.asarray([0, 1, 2, 3]))
+    table, _ = store.prepare(table, np.asarray([4]))
+    assert store.resident_slot(0) is None     # coldest, despite mid age
+    assert store.resident_slot(1) is not None  # stalest but newer in LRU
+    store.close()
+
+
+def test_slotmap_stale_first_scoring_and_pinning():
+    m = SlotMap(2, policy="stale-first")
+    assert m.reserve("a")[0] is not None
+    m.set_age("a", 10)
+    assert m.reserve("b")[0] is not None
+    m.set_age("b", 2)
+    slot, evicted = m.reserve("c")            # b is stalest
+    assert evicted[0] == "b" and evicted[1] == slot
+    # a key with NO reported age counts as stalest of all
+    slot, evicted = m.reserve("d")
+    assert evicted[0] == "c"
+    # pinning excludes the stalest: the other key is displaced instead
+    m.set_age("d", 0)
+    slot, evicted = m.reserve("e", pinned={"d"})
+    assert evicted[0] == "a"
+    # full map, everything pinned -> (None, None)
+    assert m.reserve("f", pinned={"d", "e"}) == (None, None)
+    # release cleans the age bookkeeping too
+    m.set_age("e", 7)
+    m.release("e")
+    assert m.age_of("e") is None
+
+
+def test_slotmap_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="policy"):
+        SlotMap(4, policy="freshest-first")
 
 
 @settings(max_examples=6, deadline=None)
