@@ -1,15 +1,18 @@
 """Tracked distributed-GST benchmark — step time and table-exchange bytes
-vs device count AND exchange strategy, plus async-vs-sync host-blocked
-milliseconds.
+vs device count, exchange strategy, AND wire payload dtype, plus
+async-vs-sync host-blocked milliseconds.
 
 For each device count in {1, 2, 8} (intersected with what the host
 exposes) it times the shard_map gst_efd train step once per exchange
-strategy (ring | alltoall | bucketed, dist/exchange.py), records each
-strategy's analytic bytes per step per device, and the strategy
-``--exchange=auto`` would pick (the min-bytes one) — so the ring-vs-
-owner-direct crossover is a recorded number instead of a ROADMAP guess.
-The feeder comparison (sync vs async host-blocked ms on the SAME epoch
-trace) runs once per device count through the ring step.
+strategy (ring | alltoall | bucketed, dist/exchange.py) per payload
+dtype (f32 | bf16 | int8 — multi-device only; one shard never crosses
+the wire so the codec pins f32 there), records each cell's analytic
+bytes per step per device, and the strategy ``--exchange=auto`` would
+pick at each dtype (the min-bytes one) — so both the ring-vs-owner-
+direct crossover and the compressed-traffic saving (int8 ~0.3x f32)
+are recorded numbers instead of ROADMAP guesses.  The feeder
+comparison (sync vs async host-blocked ms on the SAME epoch trace)
+runs once per device count through the f32 ring step.
 
 Usage:
     PYTHONPATH=src python benchmarks/bench_dist.py            # full
@@ -90,7 +93,8 @@ def _make_step(ds, ctx, *, hidden: int):
 
 
 def bench_device_count(ds, n_dev: int, *, batch_size: int, hidden: int,
-                       n_iters: int, warmup: int = 2, exchange="all"):
+                       n_iters: int, warmup: int = 2, exchange="all",
+                       payload="all"):
     mesh = DT.make_dist_mesh(n_dev)
     # deterministic shuffled trace: unshuffled contiguous batches are the
     # all-rows-on-one-owner adversarial case, which would pin the bucketed
@@ -99,41 +103,54 @@ def bench_device_count(ds, n_dev: int, *, batch_size: int, hidden: int,
     rows_per_shard = dtbl.rows_per_shard(ds.n, n_dev)
     cap = EXC.plan_capacity(sched, num_shards=n_dev, rows=rows_per_shard)
     b_local = batch_size // n_dev
+    # one shard never crosses the wire: the codec pins f32 there, so the
+    # dtype sweep only runs multi-device
+    if n_dev <= 1:
+        dtypes = ("f32",)
+    elif payload == "all":
+        dtypes = EXC.PAYLOAD_DTYPES
+    else:
+        dtypes = (payload,)
     # the auto pick uses the SAME planned cap the timed bucketed run gets,
-    # so "--exchange auto" times exactly the strategy the row reports
-    auto = EXC.select_exchange(n_dev, b_local, ds.j_max, NUM_SAMPLED,
-                               hidden, cap=cap)
+    # so "--exchange auto" times exactly the strategy the row reports —
+    # re-picked per dtype (compression shifts the crossover)
+    auto = {dt: EXC.select_exchange(n_dev, b_local, ds.j_max, NUM_SAMPLED,
+                                    hidden, cap=cap, payload_dtype=dt)
+            for dt in dtypes}
     if exchange == "all":
         strategies = EXC.EXCHANGES
     elif exchange == "auto":
-        strategies = (auto,)
+        strategies = tuple(dict.fromkeys(auto.values()))
     else:
         strategies = (exchange,)
     per_strategy = {}
     feeder_parts = None
     for name in strategies:
-        ctx = DT.make_context(mesh, ds.n, exchange=name,
-                              exchange_cap=cap if name == "bucketed"
-                              else None)
-        one, step, holder = _make_step(ds, ctx, hidden=hidden)
-        put = lambda b: DT.shard_batch(ctx, b)
-        batch = put(DP._assemble(ds, sched[0]))
-        for _ in range(warmup):
-            one(batch)
-        times = []
-        for _ in range(n_iters):
-            t0 = time.perf_counter()
-            jax.block_until_ready(one(batch))
-            times.append((time.perf_counter() - t0) * 1e3)
-        ex = EXC.make_exchange(name, axis_name=DT.AXIS, num_shards=n_dev,
-                               rows=ctx.table_rows, cap=ctx.exchange_cap)
-        per_strategy[name] = {
-            "train_ms": round(float(np.median(times)), 3),
-            "bytes_per_step_per_device": ex.train_step_bytes(
-                b_local, ds.j_max, NUM_SAMPLED, hidden, use_table=True),
-        }
-        if name == "ring" or feeder_parts is None:
-            feeder_parts = (ctx, one, holder, put)
+        per_strategy[name] = {}
+        for dt in dtypes:
+            ctx = DT.make_context(mesh, ds.n, exchange=name,
+                                  exchange_cap=cap if name == "bucketed"
+                                  else None, payload_dtype=dt)
+            one, step, holder = _make_step(ds, ctx, hidden=hidden)
+            put = lambda b: DT.shard_batch(ctx, b)
+            batch = put(DP._assemble(ds, sched[0]))
+            for _ in range(warmup):
+                one(batch)
+            times = []
+            for _ in range(n_iters):
+                t0 = time.perf_counter()
+                jax.block_until_ready(one(batch))
+                times.append((time.perf_counter() - t0) * 1e3)
+            ex = EXC.make_exchange(name, axis_name=DT.AXIS,
+                                   num_shards=n_dev, rows=ctx.table_rows,
+                                   cap=ctx.exchange_cap, payload_dtype=dt)
+            per_strategy[name][dt] = {
+                "train_ms": round(float(np.median(times)), 3),
+                "bytes_per_step_per_device": ex.train_step_bytes(
+                    b_local, ds.j_max, NUM_SAMPLED, hidden, use_table=True),
+            }
+            if feeder_parts is None or (name == "ring" and dt == "f32"):
+                feeder_parts = (ctx, one, holder, put)
 
     # feeder comparison on the SAME trace (async must beat sync on
     # host-blocked ms — CI enforces it via --strict), through the ring
@@ -151,21 +168,53 @@ def bench_device_count(ds, n_dev: int, *, batch_size: int, hidden: int,
 
     flat_name = "ring" if "ring" in per_strategy else \
         next(iter(per_strategy))
+    flat_dt = "f32" if "f32" in per_strategy[flat_name] else \
+        next(iter(per_strategy[flat_name]))
     return {
         "device_count": n_dev,
         "rows_per_shard": rows_per_shard,
         "bucket_cap": cap,
+        # nested per-(strategy, payload dtype) cells since ISSUE 6
         "exchange": per_strategy,
-        "auto_exchange": auto,
-        # PR 3-era flat keys kept for trend continuity (the ring numbers
-        # when timed; flat_keys_strategy names the source otherwise)
+        "payload_dtypes": list(dtypes),
+        "auto_exchange": auto.get("f32", next(iter(auto.values()))),
+        "auto_exchange_by_dtype": auto,
+        # PR 3-era flat keys kept for trend continuity (the f32 ring
+        # numbers when timed; flat_keys_strategy names the source otherwise)
         "flat_keys_strategy": flat_name,
-        "train_ms": per_strategy[flat_name]["train_ms"],
+        "train_ms": per_strategy[flat_name][flat_dt]["train_ms"],
         "exchange_bytes_per_step_per_device":
-            per_strategy[flat_name]["bytes_per_step_per_device"],
+            per_strategy[flat_name][flat_dt]["bytes_per_step_per_device"],
         "host_blocked_ms_sync": feeder_rows["sync"],
         "host_blocked_ms_async": feeder_rows["async"],
     }
+
+
+def _auto_is_min_bytes(results):
+    checks = []
+    for r in results:
+        for dt, pick in r["auto_exchange_by_dtype"].items():
+            if pick not in r["exchange"] or dt not in r["exchange"][pick]:
+                continue
+            cells = [by_dt[dt]["bytes_per_step_per_device"]
+                     for by_dt in r["exchange"].values() if dt in by_dt]
+            checks.append(
+                r["exchange"][pick][dt]["bytes_per_step_per_device"]
+                == min(cells))
+    return all(checks) if checks else None
+
+
+def _compression_ratios(results):
+    big = max(results, key=lambda r: r["device_count"], default=None)
+    if big is None or big["device_count"] <= 1:
+        return None
+    out = {}
+    for name, by_dt in big["exchange"].items():
+        if "int8" in by_dt and "f32" in by_dt:
+            out[name] = round(
+                by_dt["int8"]["bytes_per_step_per_device"]
+                / by_dt["f32"]["bytes_per_step_per_device"], 4)
+    return out or None
 
 
 def main():
@@ -179,6 +228,10 @@ def main():
                     help="which table-exchange strategies to time: the "
                          "full matrix (default), one strategy, or the one "
                          "the auto policy picks")
+    ap.add_argument("--payload-dtype", default="all",
+                    choices=["all", "f32", "bf16", "int8"],
+                    help="which wire payload dtypes to sweep per strategy "
+                         "(multi-device rows only; one shard is always f32)")
     ap.add_argument("--out", default=os.path.join(_REPO, "BENCH_gst_dist.json"))
     ap.add_argument("--n-graphs", type=int, default=None)
     ap.add_argument("--iters", type=int, default=None)
@@ -195,20 +248,26 @@ def main():
     counts = [c for c in DEVICE_COUNTS
               if c <= jax.device_count() and args.batch_size % c == 0]
     results = []
-    print(f"{'devices':>7s} {'strategy':>9s} {'train ms':>9s} "
-          f"{'xchg KiB':>9s} {'sync ms':>8s} {'async ms':>9s}")
+    print(f"{'devices':>7s} {'strategy':>9s} {'payload':>7s} "
+          f"{'train ms':>9s} {'xchg KiB':>9s} {'sync ms':>8s} "
+          f"{'async ms':>9s}")
     for n_dev in counts:
         row = bench_device_count(ds, n_dev, batch_size=args.batch_size,
                                  hidden=args.hidden, n_iters=n_iters,
-                                 exchange=args.exchange)
+                                 exchange=args.exchange,
+                                 payload=args.payload_dtype)
         results.append(row)
-        for name, r in row["exchange"].items():
-            mark = " <- auto" if name == row["auto_exchange"] else ""
-            print(f"{row['device_count']:7d} {name:>9s} "
-                  f"{r['train_ms']:9.2f} "
-                  f"{r['bytes_per_step_per_device'] / 1024:9.1f} "
-                  f"{row['host_blocked_ms_sync']:8.2f} "
-                  f"{row['host_blocked_ms_async']:9.2f}{mark}", flush=True)
+        for name, by_dt in row["exchange"].items():
+            for dt, r in by_dt.items():
+                mark = (" <- auto"
+                        if name == row["auto_exchange_by_dtype"].get(dt)
+                        else "")
+                print(f"{row['device_count']:7d} {name:>9s} {dt:>7s} "
+                      f"{r['train_ms']:9.2f} "
+                      f"{r['bytes_per_step_per_device'] / 1024:9.1f} "
+                      f"{row['host_blocked_ms_sync']:8.2f} "
+                      f"{row['host_blocked_ms_async']:9.2f}{mark}",
+                      flush=True)
 
     sync_total = sum(r["host_blocked_ms_sync"] for r in results)
     async_total = sum(r["host_blocked_ms_async"] for r in results)
@@ -224,23 +283,23 @@ def main():
         "host_blocked_ms_async_total": round(async_total, 3),
         "max_devices": max((r["device_count"] for r in results), default=0),
         # the auto pick per device count, and whether it is indeed the
-        # min-bytes strategy of the recorded rows (the acceptance gate;
-        # None when the auto pick wasn't among the timed strategies)
+        # min-bytes strategy of the recorded rows AT EVERY SWEPT DTYPE
+        # (the acceptance gate; None when no auto pick was among the
+        # timed strategies)
         "auto_exchange": {str(r["device_count"]): r["auto_exchange"]
                           for r in results},
-        "auto_is_min_bytes": (all(
-            r["exchange"][r["auto_exchange"]]["bytes_per_step_per_device"]
-            == min(v["bytes_per_step_per_device"]
-                   for v in r["exchange"].values())
-            for r in results if r["auto_exchange"] in r["exchange"])
-            if any(r["auto_exchange"] in r["exchange"] for r in results)
-            else None),
+        "auto_is_min_bytes": _auto_is_min_bytes(results),
+        # compressed-traffic acceptance: int8 / f32 analytic bytes per
+        # strategy at the largest timed device count (None unless both
+        # dtypes were swept there)
+        "int8_over_f32_bytes": _compression_ratios(results),
     }
     config = {
         "n_graphs": n_graphs, "batch_size": args.batch_size,
         "hidden": args.hidden, "max_seg_nodes": args.max_seg_nodes,
         "bucket": spec.key, "j_max": ds.j_max, "e_max": ds.e_max,
         "iters": n_iters, "quick": args.quick, "exchange": args.exchange,
+        "payload": args.payload_dtype,
     }
     env = {
         "backend": jax.default_backend(),

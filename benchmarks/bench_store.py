@@ -10,6 +10,14 @@ host<->device migration bytes per step, tier hit-rate, and the store
 counters; a parity gate asserts the 10%-tier run reproduces the oracle's
 final loss bit-for-bit before anything is written.
 
+A delta-gated leg re-runs the smallest tier with ``--wb-threshold`` so
+evictions of barely-moved rows skip the device->host emb copy
+(store/writeback.delta_gate); the run asserts the gated leg migrates
+strictly fewer KiB/step than the ungated one and records the saving
+under ``summary["delta_gate"]``.  Parity gates apply to the ungated
+legs only — the gate intentionally trades bounded staleness for
+traffic.
+
 Usage:
     PYTHONPATH=src python benchmarks/bench_store.py           # full
     PYTHONPATH=src python benchmarks/bench_store.py --quick   # CI-sized
@@ -57,7 +65,8 @@ def _fresh(ds, hidden):
 
 
 def bench_store(ds, *, hidden: int, batch_size: int, n_iters: int,
-                fraction=None, warmup: int = None):
+                fraction=None, warmup: int = None,
+                wb_threshold: float = 0.0):
     """fraction None -> DeviceStore oracle; else TieredStore with
     device_rows = max(fraction * n, batch_size)."""
     enc, opt, bb, head = _fresh(ds, hidden)
@@ -66,7 +75,8 @@ def bench_store(ds, *, hidden: int, batch_size: int, n_iters: int,
     else:
         store = TieredStore(ds.n, ds.j_max, hidden,
                             device_rows=max(int(round(fraction * ds.n)),
-                                            batch_size))
+                                            batch_size),
+                            wb_threshold=wb_threshold)
     state = G.TrainState(bb, head, opt.init((bb, head)),
                          store.init_device_table(), jnp.zeros((), jnp.int32))
     step = jax.jit(G.make_train_step(enc, opt, G.VARIANTS[VARIANT],
@@ -126,6 +136,12 @@ def main():
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--hidden", type=int, default=32)
     ap.add_argument("--max-seg-nodes", type=int, default=32)
+    ap.add_argument("--wb-threshold", type=float, default=0.1,
+                    help="delta-gate threshold for the gated leg (max-abs "
+                         "embedding movement below which an evicted row "
+                         "skips the host write; embeddings here are O(1) "
+                         "encoder outputs, so 0.1 skips the near-static "
+                         "tail); 0 disables the leg")
     args = ap.parse_args()
     n_graphs = args.n_graphs or (48 if args.quick else 96)
     n_iters = args.iters or (6 if args.quick else 20)
@@ -154,9 +170,28 @@ def main():
               f"{row['migration_bytes_per_step']:11d} "
               f"{row['tier_hit_rate']:5.2f}", flush=True)
 
+    # delta-gated leg: the smallest (churning) tier again, write-backs
+    # admitted only for rows that actually moved
+    gated = None
+    if args.wb_threshold > 0:
+        gated, _ = bench_store(ds, hidden=args.hidden,
+                               batch_size=args.batch_size,
+                               n_iters=n_iters, fraction=FRACTIONS[-1],
+                               wb_threshold=args.wb_threshold)
+        gated["fraction"] = f"{FRACTIONS[-1]}+gate"
+        results.append(gated)
+        print(f"{gated['fraction']:>8s} {gated['device_rows']:8d} "
+              f"{gated['step_ms']:8.2f} "
+              f"{gated['migration_bytes_per_step']:11d} "
+              f"{gated['tier_hit_rate']:5.2f}  "
+              f"(skipped {gated['store']['wb_skipped_rows']} rows, "
+              f"{gated['store']['wb_skipped_bytes'] / 1024:.1f} KiB)",
+              flush=True)
+
     # contract gates BEFORE the write (a failing run must not pollute the
-    # tracked file): tiering must be invisible to the math, and a full-size
-    # device tier must go migration-free once warm
+    # tracked file): tiering must be invisible to the math (ungated legs
+    # only — the delta gate trades bounded staleness for traffic), and a
+    # full-size device tier must go migration-free once warm
     assert all(loss == dense_loss for loss in frac_loss.values()), \
         f"tiered losses {frac_loss} != oracle {dense_loss} — bit-parity broken"
     full = next(r for r in results if r["fraction"] == 1.0)
@@ -165,6 +200,13 @@ def main():
     small = next(r for r in results if r["fraction"] == 0.1)
     assert small["store"]["evictions"] > 0, \
         "the 10% tier must actually churn"
+    if gated is not None:
+        assert gated["store"]["wb_skipped_rows"] > 0, \
+            "the delta gate never skipped a write-back — threshold too low " \
+            "for this trace"
+        assert gated["migration_bytes_per_step"] < \
+            small["migration_bytes_per_step"], \
+            "delta-gated migration traffic must be strictly below ungated"
 
     summary = {
         "variant": VARIANT,
@@ -176,12 +218,22 @@ def main():
             str(r["fraction"]): r["migration_bytes_per_step"]
             for r in results if r["fraction"] != "dense"},
         "bit_parity_with_oracle": True,
+        "delta_gate": ({
+            "wb_threshold": args.wb_threshold,
+            "migration_bytes_per_step_gated":
+                gated["migration_bytes_per_step"],
+            "migration_bytes_per_step_ungated":
+                small["migration_bytes_per_step"],
+            "wb_skipped_rows": gated["store"]["wb_skipped_rows"],
+            "wb_skipped_bytes": gated["store"]["wb_skipped_bytes"],
+            "gated_below_ungated": True,
+        } if gated is not None else None),
     }
     config = {
         "n_graphs": n_graphs, "batch_size": args.batch_size,
         "hidden": args.hidden, "max_seg_nodes": args.max_seg_nodes,
         "bucket": spec.key, "j_max": ds.j_max, "iters": n_iters,
-        "quick": args.quick,
+        "quick": args.quick, "wb_threshold": args.wb_threshold,
     }
     env = {
         "backend": jax.default_backend(),

@@ -7,7 +7,8 @@ Force a multi-device host for CPU development/CI with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set BEFORE jax
 initializes; ``python -m repro.launch.train_dist`` does it for you).
 """
-from repro.dist.exchange import (EXCHANGES, Exchange, make_exchange,
+from repro.dist.exchange import (EXCHANGES, PAYLOAD_DTYPES, Exchange,
+                                 PayloadCodec, make_exchange,
                                  measured_exchange_bytes, pad_ragged,
                                  plan_capacity, required_capacity,
                                  select_exchange)
@@ -22,8 +23,8 @@ from repro.dist.train import (AXIS, DistContext, batch_sharding, device_state,
                               replicate, shard_batch)
 
 __all__ = [
-    "AXIS", "AsyncSegmentFeeder", "DistContext", "EXCHANGES", "Exchange",
-    "SyncSegmentFeeder",
+    "AXIS", "AsyncSegmentFeeder", "DistContext", "EXCHANGES",
+    "Exchange", "PAYLOAD_DTYPES", "PayloadCodec", "SyncSegmentFeeder",
     "batch_sharding", "device_state", "device_table", "epoch_ids",
     "host_table",
     "make_context", "make_dist_eval_step", "make_dist_finetune_step",

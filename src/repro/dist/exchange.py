@@ -50,6 +50,17 @@ Ragged batches: a global batch whose size doesn't divide the shard count
 must be padded to one that does BEFORE sharding (``pad_ragged``).  Pad
 rows carry the sentinel id ``num_shards · rows`` which every strategy's
 write path drops and every strategy's lookup answers with zeros.
+
+Compressed traffic (``--payload-dtype``): the embedding payloads crossing
+the collectives — lookup answers and write-back rows — optionally travel
+as bf16 or int8-with-per-row-scale wire rows (``PayloadCodec`` over
+kernels/quant.py) and dequantize at the endpoint.  Lookups round
+deterministically to nearest; write-backs round STOCHASTICALLY (keyed on
+(step, shard)) so repeated round-trips stay unbiased.  ids / seg_idx /
+seg_valid / initialized stay exact, f32 is the identity codec (the
+bit-exactness contract above keeps its teeth), and the bytes models —
+still asserted against ``measured_exchange_bytes`` — shrink accordingly,
+moving the ``select_exchange`` crossover points per (shard count, dtype).
 """
 from __future__ import annotations
 
@@ -60,7 +71,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import embedding_table as tbl
-from repro.kernels.ops import iter_jaxpr_eqns
+from repro.kernels.ops import (dequantize_payload, iter_jaxpr_eqns,
+                               quantize_payload)
+from repro.kernels.quant import PAYLOAD_DTYPES
 
 EXCHANGES = ("ring", "alltoall", "bucketed")
 
@@ -70,6 +83,92 @@ EXCHANGES = ("ring", "alltoall", "bucketed")
 #   all_to_all — (D-1) of the D leading-axis chunks leave:      (D-1)/D
 #   all_gather — ring dissemination forwards D-1 chunks:           (D-1)
 _COLLECTIVES = ("ppermute", "all_to_all", "all_gather")
+
+
+# ---------------------------------------------------------------------------
+# payload wire format
+# ---------------------------------------------------------------------------
+
+
+class PayloadCodec:
+    """Wire format for the embedding payloads that cross the collectives.
+
+    ``f32`` is the identity codec — encode/decode pass the array through
+    untouched, so the default exchange stays bit-exact with an unchanged
+    jaxpr.  ``bf16``/``int8`` pack rows via kernels/quant.py: encoded
+    parts are ``(values,)`` for bf16 and ``(values int8, scale f32)`` for
+    int8, with one scale per LEADING row (a bucket slot / batch row), 0
+    for all-zero rows so ragged sentinel rows decode to exact zeros
+    through every strategy.
+
+    Read path (lookup answers): deterministic round-to-nearest — a repeated
+    lookup of an unchanged row answers identically.  Write path: stochastic
+    rounding with bits folded from ``(seed, step, shard)`` so repeated
+    write round-trips stay unbiased and shards never share a bit stream.
+    ``use_pallas`` routes the pack/unpack through the Pallas kernels
+    (interpret mode off-TPU); the default jnp path computes the same bits
+    exactly and lets XLA fuse the elementwise math into the step.
+    """
+
+    def __init__(self, dtype: str = "f32", *, axis_name: Optional[str] = None,
+                 use_pallas: bool = False, seed: int = 0x6E57):
+        if dtype not in PAYLOAD_DTYPES:
+            raise ValueError(f"unknown payload dtype {dtype!r} — expected "
+                             f"one of {PAYLOAD_DTYPES}")
+        self.dtype = dtype
+        self.axis_name = axis_name
+        self.use_pallas = use_pallas
+        self.seed = seed
+
+    @property
+    def itemsize(self) -> int:
+        return {"f32": 4, "bf16": 2, "int8": 1}[self.dtype]
+
+    @property
+    def scale_bytes(self) -> int:
+        """Per-leading-row side-channel bytes riding next to the values."""
+        return 4 if self.dtype == "int8" else 0
+
+    def row_bytes(self, n_elem: int) -> int:
+        """Wire bytes of one leading row holding n_elem f32 elements."""
+        return n_elem * self.itemsize + self.scale_bytes
+
+    def encode_zeros(self, shape) -> Tuple[jnp.ndarray, ...]:
+        """Encoded parts of an all-zero (B, ...) buffer — the ring
+        lookup's riding answer buffer starts as this."""
+        if self.dtype == "f32":
+            return (jnp.zeros(shape, jnp.float32),)
+        if self.dtype == "bf16":
+            return (jnp.zeros(shape, jnp.bfloat16),)
+        return (jnp.zeros(shape, jnp.int8),
+                jnp.zeros(shape[:1], jnp.float32))
+
+    def encode_read(self, x) -> Tuple[jnp.ndarray, ...]:
+        """Lookup-answer packing: deterministic round-to-nearest."""
+        if self.dtype == "f32":
+            return (x,)
+        return quantize_payload(x, dtype=self.dtype,
+                                use_pallas=self.use_pallas)
+
+    def encode_write(self, x, step) -> Tuple[jnp.ndarray, ...]:
+        """Write-back packing: stochastic rounding, bits folded from
+        (seed, step, shard) — deterministic given the step, distinct per
+        shard, unbiased over repeated round-trips."""
+        if self.dtype == "f32":
+            return (x,)
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        if self.axis_name is not None:
+            key = jax.random.fold_in(key, jax.lax.axis_index(self.axis_name))
+        bits = jax.random.bits(key, x.shape, jnp.uint32)
+        return quantize_payload(x, bits, dtype=self.dtype,
+                                use_pallas=self.use_pallas)
+
+    def decode(self, parts) -> jnp.ndarray:
+        parts = tuple(parts)
+        if self.dtype == "f32":
+            return parts[0]
+        return dequantize_payload(parts, dtype=self.dtype,
+                                  use_pallas=self.use_pallas)
 
 
 # ---------------------------------------------------------------------------
@@ -89,16 +188,23 @@ class Exchange:
     makes the strategy win; a batch exceeding the planned cap would be
     silently truncated, so drivers must validate with
     ``required_capacity`` before stepping.
+
+    ``payload_dtype``: wire format for the embedding payloads
+    (``PayloadCodec``).  Forced to the f32 identity at num_shards == 1,
+    where nothing crosses a wire — single-shard runs stay bit-exact no
+    matter the setting.
     """
 
     name = "?"
 
     def __init__(self, *, axis_name: str, num_shards: int, rows: int,
-                 cap: Optional[int] = None):
+                 cap: Optional[int] = None, payload_dtype: str = "f32"):
         self.axis_name = axis_name
         self.num_shards = num_shards
         self.rows = rows
         self.cap = cap
+        self.payload_dtype = "f32" if num_shards <= 1 else payload_dtype
+        self.codec = PayloadCodec(self.payload_dtype, axis_name=axis_name)
 
     @property
     def sentinel(self) -> int:
@@ -122,26 +228,24 @@ class Exchange:
 
     # -- analytic per-device bytes (match measured_exchange_bytes) ---------
 
-    def lookup_bytes(self, b_local: int, j_max: int, d_h: int,
-                     itemsize: int = 4) -> int:
+    def lookup_bytes(self, b_local: int, j_max: int, d_h: int) -> int:
         raise NotImplementedError
 
-    def update_sampled_bytes(self, b_local: int, s: int, d_h: int,
-                             itemsize: int = 4) -> int:
+    def update_sampled_bytes(self, b_local: int, s: int, d_h: int) -> int:
         raise NotImplementedError
 
-    def update_all_bytes(self, b_local: int, j_max: int, d_h: int,
-                         itemsize: int = 4) -> int:
+    def update_all_bytes(self, b_local: int, j_max: int, d_h: int) -> int:
         raise NotImplementedError
 
     def train_step_bytes(self, b_local: int, j_max: int, s: int, d_h: int,
-                         *, use_table: bool, itemsize: int = 4) -> int:
+                         *, use_table: bool) -> int:
         """Per-device exchange traffic of one dist train step (lookup +
-        sampled write-back when the variant uses the table)."""
+        sampled write-back when the variant uses the table), at this
+        exchange's payload dtype."""
         if not use_table:
             return 0
-        return (self.lookup_bytes(b_local, j_max, d_h, itemsize)
-                + self.update_sampled_bytes(b_local, s, d_h, itemsize))
+        return (self.lookup_bytes(b_local, j_max, d_h)
+                + self.update_sampled_bytes(b_local, s, d_h))
 
     # -- shared local fallbacks (num_shards == 1: no collectives) ----------
 
@@ -184,12 +288,14 @@ class RingExchange(Exchange):
 
     def lookup(self, table, graph_ids):
         """Distributed ``tbl.lookup``: global graph_ids (B_l,) against the
-        local (R, J, d) shard.  Pure row selection — no reductions — so
-        the result is BIT-EXACT vs the dense single-device lookup."""
+        local (R, J, d) shard.  Pure row selection — no reductions — so at
+        f32 the result is BIT-EXACT vs the dense single-device lookup; at
+        bf16/int8 the answer buffer rides the ring in encoded form (each
+        owner packs its answers in place) and decodes once at home."""
         me = jax.lax.axis_index(self.axis_name)
         rows, num_shards = self.rows, self.num_shards
         B = graph_ids.shape[0]
-        emb = jnp.zeros((B,) + table.emb.shape[1:], table.emb.dtype)
+        parts = self.codec.encode_zeros((B,) + table.emb.shape[1:])
         init = jnp.zeros((B,) + table.initialized.shape[1:],
                          table.initialized.dtype)
         ids = graph_ids
@@ -198,53 +304,74 @@ class RingExchange(Exchange):
             mine = owner == me
             local_row = jnp.clip(ids - me * rows, 0, rows - 1)
             e, i = tbl.lookup(table, local_row)
-            emb = jnp.where(mine[:, None, None], e, emb)
+            e_parts = self.codec.encode_read(e)
+            parts = tuple(
+                jnp.where(mine.reshape((B,) + (1,) * (p.ndim - 1)), ep, p)
+                for p, ep in zip(parts, e_parts))
             init = jnp.where(mine[:, None], i, init)
             if num_shards > 1:
-                ids, emb, init = _hop(self.axis_name, num_shards,
-                                      ids, emb, init)
-        return emb, init
+                ids, init, *parts = _hop(self.axis_name, num_shards,
+                                         ids, init, *parts)
+        return self.codec.decode(parts), init
 
     def update_sampled(self, table, graph_ids, seg_idx, h_new, step):
-        """Distributed ``tbl.update_sampled``: the (ids, seg_idx, h_new)
+        """Distributed ``tbl.update_sampled``: the (ids, seg_idx, payload)
         write buffer rides the ring; each shard applies the writes it owns
-        in place (donated scatter, mode="drop" for everything else)."""
-        ids, sidx, h = graph_ids, seg_idx, h_new
+        in place (donated scatter, mode="drop" for everything else).  The
+        payload is packed ONCE at the source (stochastic rounding) and
+        each shard decodes the passing buffer before its scatter."""
+        ids, sidx = graph_ids, seg_idx
+        parts = self.codec.encode_write(h_new, step)
         me = jax.lax.axis_index(self.axis_name)
         rows, num_shards = self.rows, self.num_shards
         for t in range(num_shards):
             mine = (ids // rows) == me
             local_row = jnp.where(mine, ids - me * rows, rows)  # => dropped
-            table = tbl.update_sampled(table, local_row, sidx, h, step,
+            table = tbl.update_sampled(table, local_row, sidx,
+                                       self.codec.decode(parts), step,
                                        mode="drop")
             if t < num_shards - 1:  # write buffers need no homecoming hop
-                ids, sidx, h = _hop(self.axis_name, num_shards, ids, sidx, h)
+                ids, sidx, *parts = _hop(self.axis_name, num_shards,
+                                         ids, sidx, *parts)
         return table
 
     def update_all(self, table, graph_ids, h_all, seg_valid, step):
         """Distributed ``tbl.update_all`` (refresh phase) over the ring."""
-        ids, h, sv = graph_ids, h_all, seg_valid
+        ids, sv = graph_ids, seg_valid
+        parts = self.codec.encode_write(h_all, step)
         me = jax.lax.axis_index(self.axis_name)
         rows, num_shards = self.rows, self.num_shards
         for t in range(num_shards):
             mine = (ids // rows) == me
             local_row = jnp.where(mine, ids - me * rows, rows)
-            table = tbl.update_all(table, local_row, h, sv, step, mode="drop")
+            table = tbl.update_all(table, local_row,
+                                   self.codec.decode(parts), sv, step,
+                                   mode="drop")
             if t < num_shards - 1:  # write buffers need no homecoming hop
-                ids, h, sv = _hop(self.axis_name, num_shards, ids, h, sv)
+                ids, sv, *parts = _hop(self.axis_name, num_shards,
+                                       ids, sv, *parts)
         return table
 
-    def lookup_bytes(self, b_local, j_max, d_h, itemsize=4):
-        return lookup_exchange_bytes(self.num_shards, b_local, j_max, d_h,
-                                     itemsize)
+    def lookup_bytes(self, b_local, j_max, d_h):
+        # D hops of the (ids i32, init bool, payload) buffer
+        if self.num_shards <= 1:
+            return 0
+        per_hop = b_local * (
+            4 + j_max * 1 + self.codec.row_bytes(j_max * d_h))
+        return self.num_shards * per_hop
 
-    def update_sampled_bytes(self, b_local, s, d_h, itemsize=4):
-        return update_sampled_exchange_bytes(self.num_shards, b_local, s,
-                                             d_h, itemsize)
+    def update_sampled_bytes(self, b_local, s, d_h):
+        if self.num_shards <= 1:
+            return 0
+        per_hop = b_local * (4 + s * 4 + self.codec.row_bytes(s * d_h))
+        return (self.num_shards - 1) * per_hop
 
-    def update_all_bytes(self, b_local, j_max, d_h, itemsize=4):
-        return update_all_exchange_bytes(self.num_shards, b_local, j_max,
-                                         d_h, itemsize)
+    def update_all_bytes(self, b_local, j_max, d_h):
+        if self.num_shards <= 1:
+            return 0
+        per_hop = b_local * (
+            4 + j_max * 4 + self.codec.row_bytes(j_max * d_h))
+        return (self.num_shards - 1) * per_hop
 
 
 # ---------------------------------------------------------------------------
@@ -284,14 +411,18 @@ class AllToAllExchange(Exchange):
         owned = (all_ids // rows).reshape(-1) == me
         e, i = tbl.lookup(table, local)
         # zero non-owned answers so ragged/padded positions come home as
-        # zeros no matter which shard they were clipped into
+        # zeros no matter which shard they were clipped into (an all-zero
+        # row packs to scale 0 under int8, so it decodes to exact zeros)
         e = jnp.where(owned[:, None, None], e, 0)
         i = jnp.where(owned[:, None], i, False)
-        e_back = _a2a(e.reshape((D, B) + table.emb.shape[1:]), ax)
+        parts = self.codec.encode_read(e)                    # leading D·B
+        parts_back = tuple(_a2a(p.reshape((D, B) + p.shape[1:]), ax)
+                           for p in parts)
         i_back = _a2a(i.reshape((D, B) + table.initialized.shape[1:]), ax)
         owner = jnp.clip(graph_ids // rows, 0, D - 1)
         r = jnp.arange(B)
-        return e_back[owner, r], i_back[owner, r]
+        return (self.codec.decode(tuple(p[owner, r] for p in parts_back)),
+                i_back[owner, r])
 
     def _gathered_writes(self, graph_ids, *payloads):
         ax = self.axis_name
@@ -308,8 +439,11 @@ class AllToAllExchange(Exchange):
             local_row = self._local_write_rows(graph_ids)
             return tbl.update_sampled(table, local_row, seg_idx, h_new,
                                       step, mode="drop")
-        local_row, sidx, h = self._gathered_writes(graph_ids, seg_idx, h_new)
-        return tbl.update_sampled(table, local_row, sidx, h, step,
+        parts = self.codec.encode_write(h_new, step)
+        local_row, sidx, *eparts = self._gathered_writes(
+            graph_ids, seg_idx, *parts)
+        return tbl.update_sampled(table, local_row, sidx,
+                                  self.codec.decode(eparts), step,
                                   mode="drop")
 
     def update_all(self, table, graph_ids, h_all, seg_valid, step):
@@ -317,29 +451,32 @@ class AllToAllExchange(Exchange):
             local_row = self._local_write_rows(graph_ids)
             return tbl.update_all(table, local_row, h_all, seg_valid, step,
                                   mode="drop")
-        local_row, h, sv = self._gathered_writes(graph_ids, h_all, seg_valid)
-        return tbl.update_all(table, local_row, h, sv, step, mode="drop")
+        parts = self.codec.encode_write(h_all, step)
+        local_row, sv, *eparts = self._gathered_writes(
+            graph_ids, seg_valid, *parts)
+        return tbl.update_all(table, local_row, self.codec.decode(eparts),
+                              sv, step, mode="drop")
 
-    def lookup_bytes(self, b_local, j_max, d_h, itemsize=4):
+    def lookup_bytes(self, b_local, j_max, d_h):
         if self.num_shards <= 1:
             return 0
-        # ids all_gather + (emb f32, init bool) answers all_to_all
+        # ids all_gather + (payload, init bool) answers all_to_all
         return (self.num_shards - 1) * b_local * (
-            4 + j_max * d_h * itemsize + j_max * 1)
+            4 + self.codec.row_bytes(j_max * d_h) + j_max * 1)
 
-    def update_sampled_bytes(self, b_local, s, d_h, itemsize=4):
+    def update_sampled_bytes(self, b_local, s, d_h):
         if self.num_shards <= 1:
             return 0
-        # (ids, seg_idx, h_new) all_gathered to every shard
+        # (ids, seg_idx, payload) all_gathered to every shard
         return (self.num_shards - 1) * b_local * (
-            4 + s * 4 + s * d_h * itemsize)
+            4 + s * 4 + self.codec.row_bytes(s * d_h))
 
-    def update_all_bytes(self, b_local, j_max, d_h, itemsize=4):
+    def update_all_bytes(self, b_local, j_max, d_h):
         if self.num_shards <= 1:
             return 0
-        # (ids, h_all, seg_valid f32) all_gathered to every shard
+        # (ids, payload, seg_valid f32) all_gathered to every shard
         return (self.num_shards - 1) * b_local * (
-            4 + j_max * d_h * itemsize + j_max * 4)
+            4 + self.codec.row_bytes(j_max * d_h) + j_max * 4)
 
 
 # ---------------------------------------------------------------------------
@@ -395,12 +532,16 @@ class BucketedExchange(Exchange):
         local = jnp.clip(q - me * rows, 0, rows - 1).reshape(-1)
         owned = (q // rows).reshape(-1) == me      # False for sentinel slots
         e, i = tbl.lookup(table, local)
-        e = jnp.where(owned[:, None, None], e, 0)
+        e = jnp.where(owned[:, None, None], e, 0)  # scale 0 under int8
         i = jnp.where(owned[:, None], i, False)
-        e_back = _a2a(e.reshape((D, cap) + table.emb.shape[1:]), ax)
+        parts = self.codec.encode_read(e)          # leading D·cap
+        parts_back = tuple(_a2a(p.reshape((D, cap) + p.shape[1:]), ax)
+                           for p in parts)
         i_back = _a2a(i.reshape((D, cap) + table.initialized.shape[1:]), ax)
         inv = jnp.argsort(order, stable=True)
-        return e_back[so, pos][inv], i_back[so, pos][inv]
+        return (self.codec.decode(tuple(p[so, pos][inv]
+                                        for p in parts_back)),
+                i_back[so, pos][inv])
 
     def _bucketed_writes(self, graph_ids, *payloads):
         cap = self.cap or graph_ids.shape[0]
@@ -422,8 +563,11 @@ class BucketedExchange(Exchange):
             local_row = self._local_write_rows(graph_ids)
             return tbl.update_sampled(table, local_row, seg_idx, h_new,
                                       step, mode="drop")
-        local_row, sidx, h = self._bucketed_writes(graph_ids, seg_idx, h_new)
-        return tbl.update_sampled(table, local_row, sidx, h, step,
+        parts = self.codec.encode_write(h_new, step)
+        local_row, sidx, *eparts = self._bucketed_writes(
+            graph_ids, seg_idx, *parts)
+        return tbl.update_sampled(table, local_row, sidx,
+                                  self.codec.decode(eparts), step,
                                   mode="drop")
 
     def update_all(self, table, graph_ids, h_all, seg_valid, step):
@@ -431,32 +575,36 @@ class BucketedExchange(Exchange):
             local_row = self._local_write_rows(graph_ids)
             return tbl.update_all(table, local_row, h_all, seg_valid, step,
                                   mode="drop")
-        local_row, h, sv = self._bucketed_writes(graph_ids, h_all, seg_valid)
-        return tbl.update_all(table, local_row, h, sv, step, mode="drop")
+        parts = self.codec.encode_write(h_all, step)
+        local_row, sv, *eparts = self._bucketed_writes(
+            graph_ids, seg_valid, *parts)
+        return tbl.update_all(table, local_row, self.codec.decode(eparts),
+                              sv, step, mode="drop")
 
     def _cap(self, b_local: int) -> int:
         return self.cap if self.cap is not None else b_local
 
-    def lookup_bytes(self, b_local, j_max, d_h, itemsize=4):
+    def lookup_bytes(self, b_local, j_max, d_h):
         if self.num_shards <= 1:
             return 0
         c = self._cap(b_local)
-        # id buckets one hop there + (emb f32, init bool) one hop back
+        # id buckets one hop there + (payload, init bool) one hop back
         return (self.num_shards - 1) * c * (
-            4 + j_max * d_h * itemsize + j_max * 1)
+            4 + self.codec.row_bytes(j_max * d_h) + j_max * 1)
 
-    def update_sampled_bytes(self, b_local, s, d_h, itemsize=4):
-        if self.num_shards <= 1:
-            return 0
-        c = self._cap(b_local)
-        return (self.num_shards - 1) * c * (4 + s * 4 + s * d_h * itemsize)
-
-    def update_all_bytes(self, b_local, j_max, d_h, itemsize=4):
+    def update_sampled_bytes(self, b_local, s, d_h):
         if self.num_shards <= 1:
             return 0
         c = self._cap(b_local)
         return (self.num_shards - 1) * c * (
-            4 + j_max * d_h * itemsize + j_max * 4)
+            4 + s * 4 + self.codec.row_bytes(s * d_h))
+
+    def update_all_bytes(self, b_local, j_max, d_h):
+        if self.num_shards <= 1:
+            return 0
+        c = self._cap(b_local)
+        return (self.num_shards - 1) * c * (
+            4 + self.codec.row_bytes(j_max * d_h) + j_max * 4)
 
 
 # ---------------------------------------------------------------------------
@@ -468,7 +616,8 @@ _STRATEGIES = {cls.name: cls
 
 
 def make_exchange(name: str, *, axis_name: str, num_shards: int, rows: int,
-                  cap: Optional[int] = None) -> Exchange:
+                  cap: Optional[int] = None,
+                  payload_dtype: str = "f32") -> Exchange:
     """Strategy by name.  "auto" is a DRIVER-side policy — resolve it with
     ``select_exchange`` (it needs the batch geometry) before building."""
     if name == "auto":
@@ -480,15 +629,18 @@ def make_exchange(name: str, *, axis_name: str, num_shards: int, rows: int,
         raise ValueError(f"unknown exchange strategy {name!r} — expected "
                          f"one of {EXCHANGES} or 'auto'")
     return _STRATEGIES[name](axis_name=axis_name, num_shards=num_shards,
-                             rows=rows, cap=cap)
+                             rows=rows, cap=cap, payload_dtype=payload_dtype)
 
 
 def select_exchange(num_shards: int, b_local: int, j_max: int, s: int,
                     d_h: int, *, cap: Optional[int] = None,
-                    itemsize: int = 4) -> str:
+                    payload_dtype: str = "f32") -> str:
     """The "--exchange=auto" policy: the strategy with the fewest analytic
-    per-device train-step bytes at this shard count (first of EXCHANGES
-    wins ties, so 1 shard — where every model is 0 — stays on the ring).
+    per-device train-step bytes at this (shard count, payload dtype) —
+    first of EXCHANGES wins ties, so 1 shard — where every model is 0 —
+    stays on the ring.  Precision-aware: compression shrinks the payload
+    term but not the fixed id/seg_idx/init overhead, so the ring/alltoall/
+    bucketed break-even points shift with the dtype.
 
     ``cap``: the bucketed strategy's planned bucket capacity; defaults to
     the uniform-owner estimate ceil(b_local / num_shards), which is what a
@@ -499,9 +651,8 @@ def select_exchange(num_shards: int, b_local: int, j_max: int, s: int,
     best_name, best_bytes = None, None
     for name in EXCHANGES:
         ex = make_exchange(name, axis_name="_model", num_shards=num_shards,
-                           rows=1, cap=cap_est)
-        b = ex.train_step_bytes(b_local, j_max, s, d_h, use_table=True,
-                                itemsize=itemsize)
+                           rows=1, cap=cap_est, payload_dtype=payload_dtype)
+        b = ex.train_step_bytes(b_local, j_max, s, d_h, use_table=True)
         if best_bytes is None or b < best_bytes:
             best_name, best_bytes = name, b
     return best_name

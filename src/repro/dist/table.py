@@ -23,10 +23,13 @@ from repro.kernels.ops import pad_leading
 from repro.store.base import padded_rows, rows_per_shard  # noqa: F401
 
 # byte accounting + the ring strategy moved to dist/exchange.py (ISSUE 5);
-# re-exported here so PR 3-era callers keep working unchanged
+# re-exported here so PR 3-era callers keep working unchanged.  (The
+# module-level *_exchange_bytes models are the PR 3 f32 ring; the
+# strategy methods carry the compressed --payload-dtype models.)
 from repro.dist.exchange import (  # noqa: F401
-    RingExchange, lookup_exchange_bytes, train_step_exchange_bytes,
-    update_all_exchange_bytes, update_sampled_exchange_bytes)
+    PAYLOAD_DTYPES, PayloadCodec, RingExchange, lookup_exchange_bytes,
+    train_step_exchange_bytes, update_all_exchange_bytes,
+    update_sampled_exchange_bytes)
 
 
 def pad_table(table: tbl.EmbeddingTable, num_shards: int) -> tbl.EmbeddingTable:

@@ -37,7 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import embedding_table as tbl
 from repro.core import gst as G
 from repro.dist import table as dtbl
-from repro.dist.exchange import EXCHANGES, make_exchange
+from repro.dist.exchange import EXCHANGES, PAYLOAD_DTYPES, make_exchange
 from repro.store import DeviceStore, EmbeddingStore, TieredStore
 from repro.store import base as store_base
 
@@ -70,6 +70,10 @@ class DistContext:
     # (exchange.plan_capacity over the id schedule); None = B_local, safe
     # for any owner distribution but no smaller than the alltoall block
     exchange_cap: Optional[int] = None
+    # wire format for embedding payloads crossing the exchange collectives
+    # (exchange.PayloadCodec): "f32" (identity, bit-exact), "bf16" or
+    # "int8" (per-row scale, stochastic rounding on write-backs)
+    payload_dtype: str = "f32"
 
     @property
     def axis_name(self) -> str:
@@ -97,34 +101,43 @@ def make_dist_mesh(num_devices: Optional[int] = None) -> Mesh:
 def make_context(mesh: Mesh, n_rows: int,
                  device_rows: Optional[int] = None, *,
                  exchange: str = "ring",
-                 exchange_cap: Optional[int] = None) -> DistContext:
+                 exchange_cap: Optional[int] = None,
+                 payload_dtype: str = "f32") -> DistContext:
     """``device_rows``: total device-resident row cap (the
     --table-device-rows knob); None keeps the table fully resident.
     ``exchange``/``exchange_cap``: table-exchange strategy + its planned
-    bucket capacity (see DistContext)."""
+    bucket capacity (see DistContext).  ``payload_dtype``: exchange wire
+    format (--payload-dtype) — f32, bf16 or int8."""
     if exchange not in EXCHANGES:
         raise ValueError(
             f"unknown exchange strategy {exchange!r} — expected one of "
             f"{EXCHANGES}; resolve 'auto' with exchange.select_exchange "
             "before make_context")
+    if payload_dtype not in PAYLOAD_DTYPES:
+        raise ValueError(
+            f"unknown payload dtype {payload_dtype!r} — expected one of "
+            f"{PAYLOAD_DTYPES}")
     d = mesh.shape[AXIS]
     per_shard = None if device_rows is None else \
         store_base.device_rows_per_shard(n_rows, d, device_rows)
     return DistContext(mesh=mesh, num_shards=d, n_rows=n_rows,
                        rows_per_shard=dtbl.rows_per_shard(n_rows, d),
                        device_rows_per_shard=per_shard,
-                       exchange=exchange, exchange_cap=exchange_cap)
+                       exchange=exchange, exchange_cap=exchange_cap,
+                       payload_dtype=payload_dtype)
 
 
 def make_dist_store(ctx: DistContext, j_max: int, d_h: int,
-                    dtype=jnp.float32,
-                    evict_policy: str = "lru") -> EmbeddingStore:
+                    dtype=jnp.float32, evict_policy: str = "lru",
+                    wb_threshold: float = 0.0) -> EmbeddingStore:
     """The context's embedding store: tiered per-shard slices when the
     context carries a device-row cap, the dense device-resident backend
     otherwise.  Either way the device tier is row-sharded over the mesh
     (P(AXIS)) and the table exchange runs unchanged on its rows.
     ``evict_policy``: the tiered device tier's eviction policy
-    (store/slots.py — "lru" or "stale-first")."""
+    (store/slots.py — "lru" or "stale-first").  ``wb_threshold``: the
+    delta-gated write-back admission threshold (--wb-threshold; 0 keeps
+    every eviction bit-exact)."""
     sh = batch_sharding(ctx)
     if ctx.device_rows_per_shard is None:
         return DeviceStore(ctx.n_rows, j_max, d_h, num_shards=ctx.num_shards,
@@ -132,7 +145,7 @@ def make_dist_store(ctx: DistContext, j_max: int, d_h: int,
     return TieredStore(ctx.n_rows, j_max, d_h,
                        device_rows=ctx.device_rows_per_shard * ctx.num_shards,
                        num_shards=ctx.num_shards, dtype=dtype, sharding=sh,
-                       evict_policy=evict_policy)
+                       evict_policy=evict_policy, wb_threshold=wb_threshold)
 
 
 # ---------------------------------------------------------------------------
@@ -211,7 +224,8 @@ def _batch_spec() -> G.GSTBatch:
 def _table_ops(ctx: DistContext):
     ex = make_exchange(ctx.exchange, axis_name=AXIS,
                        num_shards=ctx.num_shards, rows=ctx.table_rows,
-                       cap=ctx.exchange_cap)
+                       cap=ctx.exchange_cap,
+                       payload_dtype=ctx.payload_dtype)
     return ex.lookup, ex.update_sampled, ex.update_all
 
 

@@ -63,6 +63,7 @@ def run_experiment(
     record_curve: bool = False,
     use_pallas: bool = False,
     table_device_rows: Optional[int] = None,
+    wb_threshold: float = 0.0,
 ) -> ExperimentResult:
     var = G.VARIANTS[variant]
     if dataset == "malnet":
@@ -99,7 +100,8 @@ def run_experiment(
     # host-RAM tier when table_device_rows caps device residency —
     # bit-identical either way (tests/test_store.py)
     store = (TieredStore(ds.n, ds.j_max, hidden,
-                         device_rows=max(table_device_rows, batch_size))
+                         device_rows=max(table_device_rows, batch_size),
+                         wb_threshold=wb_threshold)
              if table_device_rows else DeviceStore(ds.n, ds.j_max, hidden))
     state = G.TrainState(bb, head, opt.init((bb, head)),
                          store.init_device_table(),

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
+from repro.kernels.quant import dequantize_rows as _dequantize_rows
+from repro.kernels.quant import quantize_rows as _quantize_rows
 from repro.kernels.sed_pool import sed_pool as _sed_pool
 from repro.kernels.segment_spmm import segment_spmm as _segment_spmm
 from repro.kernels.segment_spmm import segment_spmm_batched as _segment_spmm_batched
@@ -206,6 +208,24 @@ def sed_aggregate(h, seg_valid, fresh_mask, drop_mask, *, keep_prob: float,
                          interpret=_default_interpret())
     return ref.sed_pool_ref(h, seg_valid, fresh_mask, drop_mask, keep_prob,
                             num_sampled, agg)
+
+
+@partial(jax.jit, static_argnames=("dtype", "use_pallas"))
+def quantize_payload(x, rand_bits=None, *, dtype: str,
+                     use_pallas: bool = True):
+    """Pack f32 rows into the compressed exchange wire format (bf16, or
+    int8 + per-leading-row f32 scale).  ``rand_bits`` (uint32, x.shape)
+    turns on stochastic rounding — the write path; None rounds to nearest
+    (the read path, deterministic).  Returns the wire-parts tuple."""
+    return _quantize_rows(x, dtype, rand_bits, use_pallas=use_pallas,
+                          interpret=_default_interpret())
+
+
+@partial(jax.jit, static_argnames=("dtype", "use_pallas"))
+def dequantize_payload(parts, *, dtype: str, use_pallas: bool = True):
+    """Unpack compressed wire parts back to f32 rows."""
+    return _dequantize_rows(tuple(parts), dtype, use_pallas=use_pallas,
+                            interpret=_default_interpret())
 
 
 @partial(jax.jit, static_argnames=("window", "use_pallas"))

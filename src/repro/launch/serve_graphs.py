@@ -31,6 +31,7 @@ def build_engine(args):
         cache_enabled=not args.no_cache,
         table_device_rows=args.table_device_rows,
         evict_policy=args.evict_policy,
+        wb_threshold=args.wb_threshold,
         stream_chunk=args.stream_chunk,
     )
     return ServeEngine(cfg, seed=args.seed)
@@ -83,6 +84,11 @@ def main(argv=None):
                          "--table-device-rows: pure LRU or age-aware "
                          "stale-first (evict stale-and-cold rows before "
                          "fresh-and-hot ones)")
+    ap.add_argument("--wb-threshold", type=float, default=0.0,
+                    help="delta-gated write-back under --table-device-rows: "
+                         "skip the host-tier emb write for spilled rows "
+                         "whose embedding moved less than this (max-abs) "
+                         "while device-resident. 0 = gate off, bit-exact")
     ap.add_argument("--max-seg-nodes", type=int, default=64)
     ap.add_argument("--stream-chunk", type=int, default=8)
     ap.add_argument("--warmup", type=int, default=4,

@@ -38,7 +38,8 @@ def train_graph(args):
         n_graphs=args.n_graphs, epochs=args.epochs,
         finetune_epochs=args.finetune_epochs, keep_prob=args.keep_prob,
         seed=args.seed, use_pallas=args.use_pallas,
-        table_device_rows=args.table_device_rows)
+        table_device_rows=args.table_device_rows,
+        wb_threshold=args.wb_threshold)
     print(f"[graph/{args.dataset}] {args.backbone} {args.variant}"
           f"{' [pallas]' if args.use_pallas else ''}: "
           f"train={r.train_metric:.3f} test={r.test_metric:.3f} "
@@ -71,7 +72,8 @@ def train_seq(args):
     # --table-device-rows caps how many doc rows stay in device memory
     store = (TieredStore(args.n_docs, J, cfg.d_model,
                          device_rows=max(args.table_device_rows,
-                                         args.batch_size))
+                                         args.batch_size),
+                         wb_threshold=args.wb_threshold)
              if args.table_device_rows
              else DeviceStore(args.n_docs, J, cfg.d_model))
     state = G.TrainState(params, head, opt.init((params, head)),
@@ -176,6 +178,12 @@ def main():
                          "rest spill to a host-RAM tier (store/tiered.py). "
                          "Clamped up to the batch size. Default: whole "
                          "table on device")
+    ap.add_argument("--wb-threshold", type=float, default=0.0,
+                    help="delta-gated write-back under --table-device-rows: "
+                         "skip the host-tier emb write for evicted rows "
+                         "whose embedding moved less than this (max-abs) "
+                         "while resident (store/writeback.delta_gate). "
+                         "0 = gate off, bit-exact store")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--lr", type=float, default=1e-3)
     # seq/lm track

@@ -73,6 +73,14 @@ def main(argv=None):
                          "capacity.  Default: planned host-side over the "
                          "run's precomputed id schedules "
                          "(exchange.plan_capacity — the tightest safe cap)")
+    ap.add_argument("--payload-dtype", default="f32",
+                    choices=["f32", "bf16", "int8"],
+                    help="wire format for embedding payloads crossing the "
+                         "exchange collectives (exchange.PayloadCodec): "
+                         "f32 = identity (bit-exact), bf16, or int8 with a "
+                         "per-row scale; write-backs use stochastic "
+                         "rounding.  --exchange=auto re-picks the min-"
+                         "bytes strategy at this dtype")
     ap.add_argument("--table-device-rows", type=int, default=None,
                     help="cap on device-resident historical-table rows "
                          "(total, split over shards; clamped up so every "
@@ -83,6 +91,13 @@ def main(argv=None):
                     choices=["lru", "stale-first"],
                     help="tiered-store device-tier eviction policy under "
                          "--table-device-rows (store/slots.py)")
+    ap.add_argument("--wb-threshold", type=float, default=0.0,
+                    help="delta-gated write-back admission under "
+                         "--table-device-rows: skip the host-tier emb "
+                         "write for evicted rows whose embedding moved "
+                         "less than this (max-abs) while resident "
+                         "(store/writeback.delta_gate).  0 = gate off, "
+                         "bit-exact store")
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -167,13 +182,16 @@ def main(argv=None):
     if exchange == "auto":
         exchange = EXC.select_exchange(n_dev, b_local, ds.j_max,
                                        args.num_sampled, args.hidden,
-                                       cap=cap)
+                                       cap=cap,
+                                       payload_dtype=args.payload_dtype)
     ctx = DT.make_context(mesh, ds.n, device_rows=device_rows,
                           exchange=exchange,
                           exchange_cap=cap if exchange == "bucketed"
-                          else None)
+                          else None,
+                          payload_dtype=args.payload_dtype)
     store = DT.make_dist_store(ctx, ds.j_max, args.hidden,
-                               evict_policy=args.evict_policy)
+                               evict_policy=args.evict_policy,
+                               wb_threshold=args.wb_threshold)
     state = DT.device_state(ctx, state, store=store)
     step = DT.make_dist_train_step(enc, opt, var, ctx=ctx,
                                    keep_prob=args.keep_prob,
@@ -183,13 +201,15 @@ def main(argv=None):
                                        use_pallas=args.use_pallas)
     ex_model = EXC.make_exchange(exchange, axis_name=DT.AXIS,
                                  num_shards=ctx.num_shards,
-                                 rows=ctx.table_rows, cap=ctx.exchange_cap)
+                                 rows=ctx.table_rows, cap=ctx.exchange_cap,
+                                 payload_dtype=ctx.payload_dtype)
     xbytes = ex_model.train_step_bytes(b_local, ds.j_max, args.num_sampled,
                                        args.hidden, use_table=var.use_table)
     print(f"[dist] devices={ctx.num_shards} rows/shard={ctx.rows_per_shard} "
           f"device-rows/shard={ctx.table_rows} "
           f"bucket={spec.key} feeder={args.feeder} "
-          f"exchange={exchange} ({xbytes / 1024:.1f} KiB/step/device"
+          f"exchange={exchange} (payload={ex_model.payload_dtype}, "
+          f"{xbytes / 1024:.1f} KiB/step/device"
           + (f", cap={cap}" if exchange == "bucketed" else "") + ")")
 
     try:
@@ -219,11 +239,14 @@ def main(argv=None):
         def print_store_line():
             s = store.stats()
             if ctx.device_rows_per_shard is not None:
+                gate = (f", delta-gate skipped {s['wb_skipped_rows']} rows "
+                        f"({s['wb_skipped_bytes'] / 1024:.1f} KiB)"
+                        if s.get("wb_threshold", 0.0) > 0.0 else "")
                 print(f"  store [{s['backend']}] device rows {s['device_rows']}/"
                       f"{s['n_rows']}  hit-rate {s['hit_rate']:.2f} "
                       f"({s['misses']} faults), {s['evictions']} evictions, "
                       f"{s['migration_bytes'] / 1024:.1f} KiB migrated, "
-                      f"occupancy {s['occupancy']}", flush=True)
+                      f"occupancy {s['occupancy']}{gate}", flush=True)
 
         t_start = time.perf_counter()
         last_stats = None

@@ -160,6 +160,10 @@ class ServeConfig:
     # device-tier eviction policy when table_device_rows is set
     # (store/slots.py: "lru" or age-aware "stale-first")
     evict_policy: str = "lru"
+    # delta-gated write-back: skip the host-tier emb write for spilled rows
+    # that moved less than this while device-resident (store/writeback.py);
+    # 0 keeps the store bit-exact
+    wb_threshold: float = 0.0
     stream_chunk: int = 8
 
     def resolved_ladder(self) -> Tuple[BucketSpec, ...]:
@@ -223,7 +227,8 @@ class ServeEngine:
         if cfg.cache_enabled and cfg.table_device_rows is not None:
             store = TieredStore(cfg.cache_capacity, 1, cfg.hidden,
                                 device_rows=cfg.table_device_rows,
-                                evict_policy=cfg.evict_policy)
+                                evict_policy=cfg.evict_policy,
+                                wb_threshold=cfg.wb_threshold)
         self.cache = (SegmentCache(cfg.cache_capacity, cfg.hidden, store=store)
                       if cfg.cache_enabled else None)
         self.stats = ServeStats()

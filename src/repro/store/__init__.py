@@ -19,10 +19,10 @@ from repro.store.base import (  # noqa: F401
 )
 from repro.store.slots import SlotMap  # noqa: F401
 from repro.store.tiered import TieredStore  # noqa: F401
-from repro.store.writeback import AsyncHostWriter  # noqa: F401
+from repro.store.writeback import AsyncHostWriter, delta_gate  # noqa: F401
 
 __all__ = [
     "AsyncHostWriter", "DeviceStore", "EmbeddingStore", "PreparedMigration",
-    "SlotMap", "StoreCounters", "TieredStore",
+    "SlotMap", "StoreCounters", "TieredStore", "delta_gate",
     "padded_rows", "rows_per_shard",
 ]

@@ -72,6 +72,12 @@ class StoreCounters:
     bytes_h2d: int = 0
     bytes_d2h: int = 0
     writeback_wait_ms: float = 0.0   # begin() blocked on pending write-backs
+    # delta-gated write-back admission (TieredStore ``wb_threshold``):
+    # evicted rows whose embedding moved less than the threshold skip the
+    # host-tier emb write; bytes_d2h is settled down by the skipped emb
+    # bytes when the writer thread lands the eviction
+    wb_skipped_rows: int = 0
+    wb_skipped_bytes: int = 0
 
     def as_dict(self) -> dict:
         total = max(self.lookups, 1)
@@ -84,6 +90,8 @@ class StoreCounters:
             "bytes_h2d": self.bytes_h2d,
             "bytes_d2h": self.bytes_d2h,
             "migration_bytes": self.bytes_h2d + self.bytes_d2h,
+            "wb_skipped_rows": self.wb_skipped_rows,
+            "wb_skipped_bytes": self.wb_skipped_bytes,
             "writeback_wait_ms": round(self.writeback_wait_ms, 3),
         }
 

@@ -48,18 +48,25 @@ from repro.kernels.ops import pad_rows_pow2, pad_leading
 from repro.store.base import (EmbeddingStore, PreparedMigration,
                               device_rows_per_shard)
 from repro.store.slots import SlotMap
-from repro.store.writeback import AsyncHostWriter
+from repro.store.writeback import AsyncHostWriter, delta_gate
 
 
 class TieredStore(EmbeddingStore):
     def __init__(self, n_rows: int, j_max: int, d_h: int, *,
                  device_rows: int, num_shards: int = 1, dtype=jnp.float32,
                  sharding=None, writer: Optional[AsyncHostWriter] = None,
-                 donate: bool = True, evict_policy: str = "lru"):
+                 donate: bool = True, evict_policy: str = "lru",
+                 wb_threshold: float = 0.0):
         super().__init__(n_rows, j_max, d_h, num_shards=num_shards,
                          dtype=dtype, sharding=sharding)
         self._C = device_rows_per_shard(n_rows, self.num_shards, device_rows)
         self.evict_policy = evict_policy
+        # delta-gated write-back admission (--wb-threshold, FreshGNN): an
+        # evicted row whose embedding moved less than this (max-abs vs the
+        # stale host copy it faulted in from) skips the host-tier emb
+        # write.  0.0 disables the gate — every eviction writes back and
+        # the store stays bit-exact vs the device-resident oracle.
+        self.wb_threshold = float(wb_threshold)
         self._maps = [SlotMap(self._C, policy=evict_policy)
                       for _ in range(self.num_shards)]
         self._host = tbl.EmbeddingTable(
@@ -248,7 +255,30 @@ class TieredStore(EmbeddingStore):
         def write():
             try:
                 emb, age, init = (np.asarray(x)[:n] for x in ev)
-                self._host.emb[rows] = emb
+                if self.wb_threshold > 0.0:
+                    # the host copy is the row's content when it faulted in
+                    # (stale while resident), so this measures exactly how
+                    # far the row moved during its device residency
+                    admit = delta_gate(emb, self._host.emb[rows],
+                                       init, self._host.initialized[rows],
+                                       self.wb_threshold)
+                    nskip = int(n - admit.sum())
+                    if nskip:
+                        # emb bytes of the skipped rows never cross to the
+                        # host tier: settle the eager bytes_d2h from commit
+                        # and surface the saving (ages/init still land, so
+                        # staleness bookkeeping stays exact even gated)
+                        emb_bytes = self.j_max * self.d_h * emb.dtype.itemsize
+                        with self._mu:
+                            self.counters.wb_skipped_rows += nskip
+                            self.counters.wb_skipped_bytes += \
+                                nskip * emb_bytes
+                            self.counters.bytes_d2h -= nskip * emb_bytes
+                        self._host.emb[rows[admit]] = emb[admit]
+                    else:
+                        self._host.emb[rows] = emb
+                else:
+                    self._host.emb[rows] = emb
                 self._host.age[rows] = age
                 self._host.initialized[rows] = init
             except BaseException as e:
@@ -385,5 +415,6 @@ class TieredStore(EmbeddingStore):
             "occupancy_frac": self.occupancy() / max(self.device_rows, 1),
             "pending_writebacks": self._writer.pending,
             "evict_policy": self.evict_policy,
+            "wb_threshold": self.wb_threshold,
         })
         return d

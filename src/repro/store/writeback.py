@@ -15,6 +15,30 @@ import threading
 import time
 from typing import Callable, Optional
 
+import numpy as np
+
+
+def delta_gate(emb_new, emb_old, init_new, init_old,
+               threshold: float) -> np.ndarray:
+    """FreshGNN write-back admission: which evicted rows are WORTH writing
+    back to the host tier.
+
+    Returns a (n,) bool mask over the leading row axis: True where the
+    row's embedding moved by at least ``threshold`` (max-abs over the
+    row's elements) since it last left the host tier, or where any
+    initialized flag flipped (a first write or an invalidation must never
+    be dropped, whatever its magnitude).  Rows gated out keep their stale
+    host copy — the same staleness the GST paper already models with SED,
+    now bounded by the threshold instead of one refresh period.
+    """
+    emb_new = np.asarray(emb_new)
+    delta = np.max(np.abs(emb_new - np.asarray(emb_old)),
+                   axis=tuple(range(1, emb_new.ndim)))
+    init_new = np.asarray(init_new)
+    flipped = np.any(init_new != np.asarray(init_old),
+                     axis=tuple(range(1, init_new.ndim)))
+    return (delta >= threshold) | flipped
+
 
 class AsyncHostWriter:
     """FIFO thunk executor on a daemon thread.

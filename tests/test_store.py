@@ -529,6 +529,89 @@ def test_update_evict_rows_empty_noop():
     assert tbl.evict_rows(table, empty) is table
 
 
+# ---------------------------------------------------------------------------
+# delta-gated write-back (ISSUE 6): evictions of rows that barely moved
+# skip the device->host emb copy; ages/init always land
+# ---------------------------------------------------------------------------
+
+
+def test_delta_gate_admission_rules():
+    from repro.store import delta_gate
+    old = np.zeros((4, 1, 3), np.float32)
+    new = old.copy()
+    new[0] += 0.5            # moved past the threshold
+    new[1] += 0.09           # moved, but under it
+    init_old = np.ones((4, 1), bool)
+    init_new = init_old.copy()
+    init_new[2, 0] = False   # bookkeeping flip on an otherwise static row
+    admit = delta_gate(new, old, init_new, init_old, 0.1)
+    # movement >= threshold admits (inclusive); an init flip forces
+    # admission regardless of movement; static rows are skipped
+    assert admit.tolist() == [True, False, True, False]
+    new[1] += 0.01           # exactly at the threshold now
+    assert delta_gate(new, old, init_new, init_old, 0.1).tolist() == \
+        [True, True, True, False]
+
+
+def test_tiered_delta_gate_skips_static_rows():
+    store = TieredStore(4, 1, 4, device_rows=1, wb_threshold=0.5)
+    table = store.init_device_table()
+    v = np.full((1, 1, 4), 2.0, np.float32)
+
+    def write(table, slots, val, t):
+        return tbl.update_sampled(table, jnp.asarray(slots),
+                                  jnp.zeros((1, 1), jnp.int32),
+                                  jnp.asarray(val), t)
+
+    # first residency: the init flip (False -> True) forces admission even
+    # though the gate is on — first writes always reach the host tier
+    table, slots = store.prepare(table, np.asarray([0]))
+    table = write(table, slots, v, 0)
+    table, _ = store.prepare(table, np.asarray([1]))     # evicts row 0
+    store.flush_writebacks()
+    assert store.counters.wb_skipped_rows == 0
+    assert np.array_equal(store._host.emb[0], v[0])
+
+    # second residency: a sub-threshold nudge — the eviction skips the
+    # host emb write (stale by < wb_threshold) but still lands the age.
+    # (Refetching row 0 evicts the never-written row 1, whose delta is 0
+    # and init unchanged — also skipped, hence the count of 2.)
+    table, slots = store.prepare(table, np.asarray([0]))
+    table = write(table, slots, v + 0.1, 7)
+    table, _ = store.prepare(table, np.asarray([1]))     # evicts row 0
+    store.flush_writebacks()
+    assert store.counters.wb_skipped_rows == 2
+    assert store.counters.wb_skipped_bytes == 2 * 1 * 4 * 4
+    assert np.array_equal(store._host.emb[0], v[0])      # stale, bounded
+    assert store._host.age[0, 0] == 7                    # bookkeeping exact
+
+    # third residency: movement past the threshold is admitted (the
+    # static row 1 eviction in between is skipped again)
+    table, slots = store.prepare(table, np.asarray([0]))
+    table = write(table, slots, v + 3.0, 9)
+    table, _ = store.prepare(table, np.asarray([1]))
+    store.flush_writebacks()
+    assert store.counters.wb_skipped_rows == 3
+    assert np.array_equal(store._host.emb[0], v[0] + 3.0)
+    assert store.stats()["wb_threshold"] == 0.5
+    store.close()
+
+
+def test_tiered_gate_off_by_default_and_counts_zero():
+    store = TieredStore(4, 1, 4, device_rows=1)
+    assert store.wb_threshold == 0.0
+    table = store.init_device_table()
+    for t, row in enumerate([0, 1, 0, 1]):               # churn the tier
+        table, slots = store.prepare(table, np.asarray([row]))
+    store.flush_writebacks()
+    # gate off: every eviction writes through, nothing is ever skipped
+    assert store.counters.evictions >= 2
+    assert store.counters.wb_skipped_rows == 0
+    assert store.counters.wb_skipped_bytes == 0
+    assert store.stats()["wb_skipped_rows"] == 0
+    store.close()
+
+
 def test_cache_gather_empty_returns_empty():
     store = TieredStore(8, 1, HID, device_rows=3)
     cache = SegmentCache(8, HID, store=store)
