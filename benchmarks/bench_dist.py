@@ -52,6 +52,7 @@ from repro.dist import pipeline as DP
 from repro.dist import table as dtbl
 from repro.graphs import data as D
 from repro.graphs.gnn import GNNConfig, gnn_init, make_encode_fn
+from repro.obs import summarize
 from repro.optim import make_optimizer
 
 DEVICE_COUNTS = (1, 2, 8)
@@ -144,8 +145,10 @@ def bench_device_count(ds, n_dev: int, *, batch_size: int, hidden: int,
             ex = EXC.make_exchange(name, axis_name=DT.AXIS,
                                    num_shards=n_dev, rows=ctx.table_rows,
                                    cap=ctx.exchange_cap, payload_dtype=dt)
+            t = summarize(times)
             per_strategy[name][dt] = {
-                "train_ms": round(float(np.median(times)), 3),
+                "train_ms": round(t["p50"], 3),
+                "train_ms_p99": round(t["p99"], 3),
                 "bytes_per_step_per_device": ex.train_step_bytes(
                     b_local, ds.j_max, NUM_SAMPLED, hidden, use_table=True),
             }

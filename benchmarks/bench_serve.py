@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import gst as G
 from repro.graphs.gnn import encode_segments
+from repro.obs import MetricsRegistry, set_registry
 from repro.serve import ServeConfig, ServeEngine, TrafficConfig, make_request_stream
 from repro.serve.engine import SEG_KEYS, graph_to_chunks
 
@@ -45,15 +46,26 @@ def run_trace(stream, *, backbone, use_pallas, cache_enabled, window,
     stats reset); int -> replay only that many requests (cold-ish)."""
     cfg = ServeConfig(backbone=backbone, use_pallas=use_pallas,
                       cache_enabled=cache_enabled, cache_capacity=cache_capacity)
-    engine = ServeEngine(cfg, seed=seed)
-    warm = stream if warmup is None else stream[:warmup]
-    if warm:
-        engine.process(warm, window=window)
-        engine.reset_stats()
-        if engine.cache is not None:
-            engine.cache.flush()  # cold contents, warm compile caches
-    engine.process(stream, window=window)
-    return engine, engine.stats.summary()
+    # one registry per leg so serve.prediction_staleness / serve.* counters
+    # land in the BENCH entry without the legs bleeding into each other
+    reg = MetricsRegistry()
+    prev = set_registry(reg)
+    try:
+        engine = ServeEngine(cfg, seed=seed)
+        warm = stream if warmup is None else stream[:warmup]
+        if warm:
+            engine.process(warm, window=window)
+            engine.reset_stats()
+            if engine.cache is not None:
+                engine.cache.flush()  # cold contents, warm compile caches
+        reg.reset()  # warmup encodes must not count in the leg's obs summary
+        engine.process(stream, window=window)
+        summary = engine.stats.summary()
+        summary["obs"] = {k: v for k, v in reg.summary().items()
+                          if k.startswith("serve.")}
+    finally:
+        set_registry(prev)
+    return engine, summary
 
 
 def streaming_parity(engine, graph) -> float:
@@ -114,8 +126,12 @@ def main():
     print(f"streaming parity: max diff {parity:.2e}")
 
     on, off = rows["cache_on"], rows["cache_off"]
+    pred_stale = (on.get("obs") or {}).get("serve.prediction_staleness") or {}
     cache_effect = {
         "hit_rate": on["cache"]["hit_rate"],
+        # age (cache steps) of the rows served predictions actually read —
+        # nonzero count iff the cache really served stale rows
+        "prediction_staleness": pred_stale,
         "encode_launches_on": on["encode_launches"],
         "encode_launches_off": off["encode_launches"],
         "encoded_segments_on": on["encoded_segments"],
@@ -159,6 +175,9 @@ def main():
     assert cache_effect["hit_rate"] > 0, "duplicate-heavy trace must hit the cache"
     assert cache_effect["encode_launches_on"] < cache_effect["encode_launches_off"], \
         "cache must save encode launches on a duplicate-heavy trace"
+    assert pred_stale.get("count", 0) > 0, \
+        "cached leg must serve predictions from previously-cached rows " \
+        "(serve.prediction_staleness never observed)"
 
     payload["runs"][run_key] = entry
     with open(args.out, "w") as f:

@@ -40,6 +40,7 @@ from repro.graphs import batching as Bt
 from repro.graphs import data as D
 from repro.graphs.gnn import GNNConfig, gnn_init, make_encode_fn
 from repro.kernels.ops import count_pallas_calls
+from repro.obs import summarize
 from repro.optim import make_optimizer
 
 VARIANTS = ("gst", "gst_efd", "full")
@@ -53,7 +54,7 @@ def _median_ms(fn, n_iters: int) -> float:
         out = fn()
         jax.block_until_ready(out)
         times.append((time.perf_counter() - t0) * 1e3)
-    return float(np.median(times))
+    return summarize(times)["p50"]
 
 
 def bench_cell(ds, variant: str, backbone: str, use_pallas: bool, *,

@@ -46,6 +46,7 @@ from repro.core import gst as G
 from repro.dist import pipeline as DP
 from repro.graphs import data as D
 from repro.graphs.gnn import GNNConfig, gnn_init, make_encode_fn
+from repro.obs import MetricsRegistry, StalenessProbe, summarize, wb_skip_rate
 from repro.optim import make_optimizer
 from repro.store import DeviceStore, TieredStore
 
@@ -113,14 +114,26 @@ def bench_store(ds, *, hidden: int, batch_size: int, n_iters: int,
         times.append((time.perf_counter() - t0) * 1e3)
     store.flush_writebacks()
     stats = store.stats()
+    # staleness of the final table, through the same probe the launchers
+    # publish from (a throwaway registry keeps the benchmark side-effect
+    # free for the process-wide one)
+    probe = StalenessProbe(keep_prob=0.5, num_sampled=1,
+                           seg_valid=ds.seg_valid,
+                           registry=MetricsRegistry())
+    stale = probe.observe(store, state_holder["s"].table,
+                          int(jax.device_get(state_holder["s"].step)))
+    t = summarize(times)
     row = {
         "fraction": fraction if fraction is not None else "dense",
         "device_rows": stats["device_rows"],
         "n_rows": ds.n,
-        "step_ms": round(float(np.median(times)), 3),
+        "step_ms": round(t["p50"], 3),
+        "step_ms_p99": round(t["p99"], 3),
         "migration_bytes_per_step":
             stats["migration_bytes"] // max(n_iters, 1),
         "tier_hit_rate": round(stats["hit_rate"], 4),
+        "wb_skip_rate": round(wb_skip_rate(stats), 4),
+        "staleness": stale,
         "store": stats,
     }
     store.close()

@@ -43,6 +43,8 @@ import numpy as np
 
 from repro.core import gst as G
 from repro.graphs import batching as Bt
+from repro.obs.metrics import get_registry
+from repro.obs.trace import span
 from repro.serve.buckets import BucketSpec, choose_bucket, default_ladder
 
 
@@ -99,6 +101,17 @@ class FeederStats:
     def host_blocked_ms_per_batch(self) -> float:
         return self.host_blocked_ms / max(self.batches, 1)
 
+    def record_batch(self, blocked_ms: float) -> None:
+        """One delivered batch: local stats + the registry mirror (the
+        local lists/floats stay for bench_dist and tests)."""
+        self.batches += 1
+        self.host_blocked_ms += blocked_ms
+        self.blocked_per_batch.append(blocked_ms)
+        reg = get_registry()
+        if reg.enabled:
+            reg.inc("feeder.batches")
+            reg.inc("feeder.host_blocked_ms", blocked_ms, unit="ms")
+
 
 def _assemble(ds: Bt.SegmentedDataset, ids: np.ndarray) -> G.GSTBatch:
     """Host-side batch assembly (the numpy gather) as a GSTBatch of numpy
@@ -130,15 +143,15 @@ class SyncSegmentFeeder:
     def __iter__(self) -> Iterator[G.GSTBatch]:
         for ids in self._sched:
             t0 = time.perf_counter()
-            host = _assemble(self._ds, ids)
+            with span("feeder.assemble", batch=len(ids)):
+                host = _assemble(self._ds, ids)
             t1 = time.perf_counter()
-            dev = self._put(host)
+            with span("feeder.put"):
+                dev = self._put(host)
             t2 = time.perf_counter()
             blocked = (t2 - t0) * 1e3
-            self.stats.batches += 1
-            self.stats.host_blocked_ms += blocked
             self.stats.put_ms += (t2 - t1) * 1e3
-            self.stats.blocked_per_batch.append(blocked)
+            self.stats.record_batch(blocked)
             yield dev
 
 
@@ -184,7 +197,10 @@ class AsyncSegmentFeeder:
                 if self._stop.is_set():
                     return
                 t1 = time.perf_counter()
-                dev = self._put(_assemble(self._ds, ids))
+                with span("feeder.assemble", batch=len(ids)):
+                    host = _assemble(self._ds, ids)
+                with span("feeder.put"):
+                    dev = self._put(host)
                 self.stats.put_ms += (time.perf_counter() - t1) * 1e3
                 if not self._put_q(dev):
                     return
@@ -217,16 +233,15 @@ class AsyncSegmentFeeder:
         try:
             while True:
                 t0 = time.perf_counter()
-                item = self._q.get()
+                with span("feeder.wait"):
+                    item = self._q.get()
                 blocked = (time.perf_counter() - t0) * 1e3
                 if item is self._DONE:
                     self._thread.join()
                     if self._exc is not None:
                         raise self._exc
                     return
-                self.stats.batches += 1
-                self.stats.host_blocked_ms += blocked
-                self.stats.blocked_per_batch.append(blocked)
+                self.stats.record_batch(blocked)
                 yield item
         finally:  # abandoned mid-epoch (break / step raised) -> shut down
             self.close()

@@ -19,6 +19,7 @@ from repro.core import gst as G
 from repro.graphs import batching as Bt
 from repro.graphs import data as D
 from repro.graphs.gnn import GNNConfig, gnn_init, make_encode_fn
+from repro.obs import StalenessProbe, get_registry, span
 from repro.optim import make_optimizer
 from repro.store import DeviceStore, TieredStore
 
@@ -64,6 +65,8 @@ def run_experiment(
     use_pallas: bool = False,
     table_device_rows: Optional[int] = None,
     wb_threshold: float = 0.0,
+    obs=None,                         # optional repro.obs.Obs bundle: gets a
+                                      # per-epoch tick + staleness probe
 ) -> ExperimentResult:
     var = G.VARIANTS[variant]
     if dataset == "malnet":
@@ -145,6 +148,8 @@ def run_experiment(
         iter_times = []
         brng = np.random.default_rng(seed + 3)
         last_train = 0.0
+        probe = StalenessProbe(keep_prob=keep_prob, num_sampled=num_sampled,
+                               seg_valid=ds.seg_valid)
         for epoch in range(epochs):
             ep_metrics = []
             for tup in Bt.batch_iterator(ds, batch_size, rng=brng):
@@ -153,12 +158,21 @@ def run_experiment(
                 # the step cost of a capped-capacity table (bench_store.py)
                 t0 = time.perf_counter()
                 slots = route(tup)   # replaces state.table before step sees it
-                state, m = step(state, batch._replace(graph_ids=slots),
-                                jax.random.key(epoch))
-                jax.block_until_ready(m["loss"])
+                with span("train.step", epoch=epoch):
+                    state, m = step(state, batch._replace(graph_ids=slots),
+                                    jax.random.key(epoch))
+                    jax.block_until_ready(m["loss"])
                 iter_times.append(time.perf_counter() - t0)
                 ep_metrics.append(float(m["metric"]))
             last_train = float(np.mean(ep_metrics))
+            stale = None
+            if get_registry().enabled:
+                store.publish_counters()
+                stale = probe.observe(store, state.table,
+                                      int(jax.device_get(state.step)))
+            if obs is not None:
+                obs.tick(step=int(jax.device_get(state.step)), epoch=epoch,
+                         train=last_train, staleness=stale)
             if record_curve:
                 curve.append({"epoch": epoch, "train": last_train,
                               "test": evaluate(ds_test, state)})

@@ -100,6 +100,8 @@ def main(argv=None):
     ap.add_argument("--check-parity", action="store_true")
     ap.add_argument("--parity-atol", type=float, default=1e-5)
     ap.add_argument("--min-hit-rate", type=float, default=None)
+    from repro.obs import Obs, add_obs_args
+    add_obs_args(ap)
     args = ap.parse_args(argv)
 
     from repro.serve import TrafficConfig, make_request_stream
@@ -108,24 +110,38 @@ def main(argv=None):
     tc = TrafficConfig(n_unique=args.unique, n_requests=args.requests,
                        duplicate_rate=args.duplicate_rate, seed=args.seed)
     stream = make_request_stream(tc)
+    obs = Obs.from_args(args, run="serve_graphs",
+                        backbone=args.backbone, requests=args.requests,
+                        window=args.window)
 
     try:
-        return _run(args, engine, stream)
+        return _run(args, engine, stream, obs)
     finally:
         # the tiered store owns a write-back thread — release it even when
         # the parity / hit-rate gates raise SystemExit
         engine.close()
+        obs.close()
 
 
-def _run(args, engine, stream):
+def _run(args, engine, stream, obs):
     if args.warmup:
         engine.process(stream[:args.warmup], window=args.window)
         engine.reset_stats()
+        # warmup compiles/misses must not count against the SLO gates
+        obs.registry.reset()
         if args.cold_cache and engine.cache is not None:
             engine.cache.flush()  # cold contents, warm compile caches
 
-    engine.process(stream, window=args.window)
+    # replay window-by-window (behaviorally identical to one process()
+    # call, which windows internally) so the JSONL stream gets one
+    # per-window delta tick
+    for wi, w0 in enumerate(range(0, len(stream), args.window)):
+        engine.process(stream[w0:w0 + args.window], window=args.window)
+        if obs.should_tick(wi):
+            obs.tick(step=wi,
+                     requests_done=min(w0 + args.window, len(stream)))
     s = engine.stats.summary()
+    obs.close(serve=s)
 
     print(f"[serve_graphs] backend={jax.default_backend()} "
           f"backbone={args.backbone} pallas={args.use_pallas} "

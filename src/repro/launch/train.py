@@ -27,11 +27,13 @@ from repro.configs import get_config, reduced as reduce_cfg
 from repro.core import gst as G
 from repro.data.tokens import doc_batch_iterator, make_lm_stream, make_property_docs
 from repro.models import build_model
+from repro.obs import Obs, StalenessProbe, add_obs_args
+from repro.obs.trace import span
 from repro.optim import cosine_schedule, make_optimizer
 from repro.store import DeviceStore, TieredStore
 
 
-def train_graph(args):
+def train_graph(args, obs):
     from repro.graphs.experiment import run_experiment
     r = run_experiment(
         dataset=args.dataset, backbone=args.backbone, variant=args.variant,
@@ -39,7 +41,7 @@ def train_graph(args):
         finetune_epochs=args.finetune_epochs, keep_prob=args.keep_prob,
         seed=args.seed, use_pallas=args.use_pallas,
         table_device_rows=args.table_device_rows,
-        wb_threshold=args.wb_threshold)
+        wb_threshold=args.wb_threshold, obs=obs)
     print(f"[graph/{args.dataset}] {args.backbone} {args.variant}"
           f"{' [pallas]' if args.use_pallas else ''}: "
           f"train={r.train_metric:.3f} test={r.test_metric:.3f} "
@@ -54,7 +56,7 @@ def train_graph(args):
     return r
 
 
-def train_seq(args):
+def train_seq(args, obs):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
@@ -89,6 +91,7 @@ def train_seq(args):
         use_pallas=args.use_pallas), donate_argnums=(0,))
     try:
         rng = np.random.default_rng(args.seed)
+        probe = StalenessProbe(keep_prob=args.keep_prob, num_sampled=1)
         it = 0
         t0 = time.time()
         while it < args.steps:
@@ -98,12 +101,18 @@ def train_seq(args):
                 batch = G.GSTBatch({"tokens": jnp.asarray(tup[0]["tokens"])},
                                    jnp.asarray(tup[1]), jnp.asarray(slots),
                                    jnp.asarray(tup[3]))
-                state, m = step(state, batch, jax.random.key(it))
+                with span("train.step", step=it):
+                    state, m = step(state, batch, jax.random.key(it))
                 it += 1
                 if it % args.log_every == 0:
                     print(f"step {it}: loss={float(m['loss']):.4f} "
                           f"acc={float(m['metric']):.3f} "
                           f"({(time.time()-t0)/it*1e3:.0f} ms/step)", flush=True)
+                    if obs.enabled:
+                        store.publish_counters()
+                        stale = probe.observe(store, state.table, it)
+                        obs.tick(step=it, loss=float(m["loss"]),
+                                 staleness=stale)
                 if it >= args.steps:
                     break
         # surface any failed async write-back BEFORE reporting success
@@ -195,13 +204,19 @@ def main():
     ap.add_argument("--n-docs", type=int, default=64)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default=None)
+    add_obs_args(ap)
     args = ap.parse_args()
-    if args.track == "graph":
-        train_graph(args)
-    elif args.track == "seq":
-        train_seq(args)
-    else:
-        train_lm(args)
+    obs = Obs.from_args(args, run="train", track=args.track,
+                        variant=args.variant)
+    try:
+        if args.track == "graph":
+            train_graph(args, obs)
+        elif args.track == "seq":
+            train_seq(args, obs)
+        else:
+            train_lm(args)
+    finally:
+        obs.close()
 
 
 if __name__ == "__main__":

@@ -98,6 +98,11 @@ def main(argv=None):
                          "less than this (max-abs) while resident "
                          "(store/writeback.delta_gate).  0 = gate off, "
                          "bit-exact store")
+    # repro.obs is jax-free, so this is safe before _force_device_count
+    from repro.obs import (Obs, StalenessProbe, add_obs_args,
+                           record_exchange_bytes)
+    from repro.obs.trace import span
+    add_obs_args(ap)
     args = ap.parse_args(argv)
 
     if args.devices:
@@ -212,6 +217,14 @@ def main(argv=None):
           f"{xbytes / 1024:.1f} KiB/step/device"
           + (f", cap={cap}" if exchange == "bucketed" else "") + ")")
 
+    obs = Obs.from_args(args, run="train_dist", variant=args.variant,
+                        devices=ctx.num_shards, exchange=exchange,
+                        payload_dtype=ex_model.payload_dtype,
+                        epochs=args.epochs, batch_size=args.batch_size)
+    probe = StalenessProbe(keep_prob=args.keep_prob,
+                           num_sampled=args.num_sampled,
+                           seg_valid=ds.seg_valid)
+
     try:
         # monotone per-begin counter, same clock the jitted steps write
         # ages with — the stale-first refresh hint for rows a train/
@@ -255,14 +268,34 @@ def main(argv=None):
                                     depth=args.depth)
             losses = []
             for prep, batch in feeder:
-                state = state._replace(table=store.commit(state.table, prep))
-                state, m = step(state, batch, jax.random.PRNGKey(epoch))
+                with span("train.commit"):
+                    state = state._replace(
+                        table=store.commit(state.table, prep))
+                with span("train.step", epoch=epoch):
+                    state, m = step(state, batch, jax.random.PRNGKey(epoch))
+                record_exchange_bytes(exchange, ex_model.payload_dtype,
+                                      xbytes)
                 losses.append(m["loss"])
             jax.block_until_ready(losses[-1])
             last_stats = feeder.stats
             print(f"epoch {epoch}: loss={float(losses[-1]):.4f} "
                   f"host_blocked={last_stats.host_blocked_ms_per_batch:.2f} "
                   f"ms/batch", flush=True)
+            if obs.enabled:
+                # per-epoch observability: staleness probe over the merged
+                # table view + registry delta() — PER-EPOCH rates, not the
+                # cumulative counters the old store line reported
+                store.publish_counters()
+                stale = probe.observe(store, state.table, step_counter["t"])
+                d = (obs.tick(step=step_counter["t"], epoch=epoch,
+                              loss=float(losses[-1]),
+                              staleness=stale) or {}).get("delta") \
+                    or obs.registry.delta()
+                print(f"  obs epoch {epoch}: faults {d.get('store.faults', 0):.0f} "
+                      f"evictions {d.get('store.evictions', 0):.0f} "
+                      f"exch KiB {sum(v for k, v in d.items() if k.startswith('exchange.bytes.')) / 1024:.1f} "
+                      f"row-age p99 {stale['row_age_steps']['p99']:.0f} steps "
+                      f"sed-drop {stale['sed_drop_rate']:.3f}", flush=True)
         print_store_line()
 
         if var.finetune_head:
@@ -299,8 +332,13 @@ def main(argv=None):
               f"{last_stats.host_blocked_ms_per_batch:.2f} ms/batch "
               f"({args.feeder})")
         print_store_line()
+        if obs.enabled:
+            store.publish_counters()
+            probe.observe_store_counters(store.counters.as_dict())
+        obs.close(wall_s=wall, train_metric=float(np.mean(metrics)))
     finally:
         store.close()   # stop the write-back thread even on error
+        obs.close()
 
 
 if __name__ == "__main__":

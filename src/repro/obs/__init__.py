@@ -1,0 +1,36 @@
+"""repro.obs — the telemetry spine: metrics registry, span tracing,
+staleness observability, JSONL/trace export.
+
+Import surface kept flat so instrumented code needs only::
+
+    from repro.obs import get_registry, span
+
+and CLIs only::
+
+    from repro.obs import Obs, add_obs_args
+"""
+from repro.obs.metrics import (AGE_BUCKETS_STEPS, BYTES_BUCKETS, Counter,
+                               Gauge, Histogram, LATENCY_BUCKETS_MS,
+                               MetricsRegistry, NullRegistry, dict_delta,
+                               enable_metrics, exponential_buckets,
+                               get_registry, null_registry, set_registry,
+                               summarize)
+from repro.obs.trace import (NullTracer, Tracer, get_tracer, instant,
+                             null_tracer, set_tracer, span,
+                             validate_chrome_trace)
+from repro.obs.staleness import (StalenessProbe, record_exchange_bytes,
+                                 sed_age_bound, sed_drop_stats, wb_skip_rate)
+from repro.obs.export import JsonlExporter, Obs, add_obs_args
+
+__all__ = [
+    "AGE_BUCKETS_STEPS", "BYTES_BUCKETS", "LATENCY_BUCKETS_MS",
+    "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "NullRegistry",
+    "dict_delta", "enable_metrics", "exponential_buckets",
+    "get_registry", "null_registry", "set_registry", "summarize",
+    "NullTracer", "Tracer", "get_tracer", "instant", "null_tracer",
+    "set_tracer", "span", "validate_chrome_trace",
+    "StalenessProbe", "record_exchange_bytes", "sed_age_bound",
+    "sed_drop_stats", "wb_skip_rate",
+    "JsonlExporter", "Obs", "add_obs_args",
+]

@@ -34,6 +34,7 @@ import numpy as np
 from repro.core import embedding_table as tbl
 from repro.kernels.ops import (next_pow2, pad_rows_pow2,  # noqa: F401
                                prev_pow2)
+from repro.obs.metrics import get_registry
 from repro.store import DeviceStore, EmbeddingStore, SlotMap, StoreCounters
 
 
@@ -60,6 +61,7 @@ class SegmentCache:
         self.evictions = 0
         self.skipped_inserts = 0
         self.step = 0  # monotonically increasing insertion step (age base)
+        self._published: Dict[str, int] = {}  # registry mirror baselines
         # jitted table ops: each (B,) shape compiles once (pow2 padding keeps
         # the shape set O(log capacity)); step rides along as a traced scalar
         self._update = jax.jit(tbl.update_rows)
@@ -83,6 +85,25 @@ class SegmentCache:
         self.hits = self.misses = self.evictions = self.skipped_inserts = 0
         self.store.counters = StoreCounters()
         self.step = 0
+
+    def publish_counters(self) -> None:
+        """Mirror keying-layer counter movement into the metrics registry
+        (``serve.cache.*``; no-op when metrics are disabled).  The local
+        ints stay the mutation surface — callers reset them freely
+        (reset_stats/flush) and the diff re-baselines instead of
+        rewinding the cumulative registry counters."""
+        reg = get_registry()
+        if not reg.enabled:
+            return
+        for name, cur in (("serve.cache.hits", self.hits),
+                          ("serve.cache.misses", self.misses),
+                          ("serve.cache.evictions", self.evictions),
+                          ("serve.cache.skipped_inserts",
+                           self.skipped_inserts)):
+            moved = cur - self._published.get(name, 0)
+            if moved > 0:
+                reg.inc(name, moved)
+            self._published[name] = cur
 
     def get(self, key: bytes) -> Optional[int]:
         """Logical row of a cached segment (refreshes LRU position), or

@@ -37,6 +37,9 @@ from repro.graphs.data import SyntheticGraph
 from repro.graphs.gnn import GNNConfig, encode_segments, gnn_init
 from repro.graphs.partition import partition_graph
 from repro.kernels.ops import count_pallas_calls
+from repro.obs.metrics import (AGE_BUCKETS_STEPS, LATENCY_BUCKETS_MS,
+                               Histogram, get_registry, summarize)
+from repro.obs.trace import span
 from repro.serve.buckets import (
     BucketSpec,
     batch_bucket,
@@ -179,6 +182,10 @@ class RequestResult:
     n_cache_hits: int
 
 
+def _latency_hist() -> Histogram:
+    return Histogram("latency_ms", buckets=LATENCY_BUCKETS_MS, unit="ms")
+
+
 @dataclass
 class ServeStats:
     n_requests: int = 0
@@ -187,17 +194,20 @@ class ServeStats:
     encoded_segments: int = 0          # segments that actually ran the GNN
     pallas_launches: int = 0           # encode kernel launches (pallas path)
     wall_s: float = 0.0
-    latencies_ms: List[float] = field(default_factory=list)
+    # fixed-bucket histogram, not a per-request list: a replay of any
+    # length summarizes in O(buckets) memory (obs.metrics)
+    latency: Histogram = field(default_factory=_latency_hist)
     cache: Dict = field(default_factory=dict)
 
     def summary(self) -> Dict:
-        lat = np.asarray(self.latencies_ms) if self.latencies_ms else np.zeros(1)
+        lat = summarize(self.latency)
         return {
             "n_requests": self.n_requests,
             "n_segments": self.n_segments,
             "throughput_req_s": self.n_requests / self.wall_s if self.wall_s else 0.0,
-            "latency_p50_ms": float(np.percentile(lat, 50)),
-            "latency_p99_ms": float(np.percentile(lat, 99)),
+            "latency_p50_ms": lat["p50"],
+            "latency_p99_ms": lat["p99"],
+            "latency_mean_ms": lat["mean"],
             "encode_launches": self.encode_launches,
             "encoded_segments": self.encoded_segments,
             "pallas_launches": self.pallas_launches,
@@ -262,8 +272,9 @@ class ServeEngine:
             dev_inputs = {k: jnp.asarray(v) for k, v in seg_inputs.items()}
             self._pallas_per_launch[bi] = count_pallas_calls(
                 lambda p: encode_segments(p, gc, dev_inputs), self.params)
-        emb = self._encode_jit[bi](self.params,
-                                   {k: jnp.asarray(v) for k, v in seg_inputs.items()})
+        with span("serve.encode", bucket=bi):
+            emb = self._encode_jit[bi](self.params,
+                                       {k: jnp.asarray(v) for k, v in seg_inputs.items()})
         self.stats.encode_launches += 1
         self.stats.pallas_launches += self._pallas_per_launch[bi]
         return emb
@@ -289,12 +300,16 @@ class ServeEngine:
         share device batches)."""
         results: List[RequestResult] = []
         for w0 in range(0, len(graphs), window):
-            results.extend(self._process_window(graphs[w0:w0 + window]))
+            chunk = graphs[w0:w0 + window]
+            with span("serve.window", requests=len(chunk)):
+                results.extend(self._process_window(chunk))
         return results
 
     def _process_window(self, graphs: Sequence[SyntheticGraph]) -> List[RequestResult]:
         t0 = time.perf_counter()
-        requests = [self._segment_request(g) for g in graphs]
+        launches0 = self.stats.encode_launches
+        with span("serve.partition", requests=len(graphs)):
+            requests = [self._segment_request(g) for g in graphs]
 
         # cache probe (per segment occurrence) + miss dedup (per content key)
         key_slot: Dict[bytes, int] = {}
@@ -335,18 +350,23 @@ class ServeEngine:
         # fits): the next window (or request) hits these.  This window's hit
         # keys are pinned — their slots are gathered below.
         if self.cache is not None and fresh:
-            keys = list(fresh)
-            slots = self.cache.put(keys, jnp.stack([fresh[k] for k in keys]),
-                                   pinned=key_slot.keys())
-            for k, s in zip(keys, slots):
-                if s is not None:
-                    key_slot[k] = s
+            with span("serve.insert", segments=len(fresh)):
+                keys = list(fresh)
+                slots = self.cache.put(keys,
+                                       jnp.stack([fresh[k] for k in keys]),
+                                       pinned=key_slot.keys())
+                for k, s in zip(keys, slots):
+                    if s is not None:
+                        key_slot[k] = s
 
         # per-request aggregate + head: J is padded to the next power of two
         # with a validity mask so the jitted head compiles O(log J) shapes.
         # This window's misses aggregate from ``fresh`` (bit-identical to
         # what was just inserted); hits gather from the cache table.
         out: List[RequestResult] = []
+        reg = get_registry()
+        hit_rows: List[int] = []       # cache rows this window's hits read
+        n_fresh_reads = 0              # fresh-embedding reads (staleness 0)
         for ri, (graph, items) in enumerate(zip(graphs, requests)):
             J = len(items)
             Jp = next_pow2(J)
@@ -360,31 +380,67 @@ class ServeEngine:
                 cmask = np.zeros((cp,), np.float32)
                 cmask[:len(cached_pos)] = 1.0
                 cslots = [key_slot[items[j][0]] for j in cached_pos]
+                hit_rows.extend(cslots)
                 cslots += [cslots[0]] * (cp - len(cslots))
-                cemb = self.cache.gather(cslots, valid=cmask)    # (cp, d)
+                with span("serve.gather", rows=len(cached_pos)):
+                    cemb = self.cache.gather(cslots, valid=cmask)  # (cp, d)
             rows, ci = [], 0
             for key, _, _ in items:
                 if key in fresh:
                     rows.append(fresh[key])
+                    n_fresh_reads += 1
                 else:
                     rows.append(cemb[ci])
                     ci += 1
             h = jnp.stack(rows + [rows[0]] * (Jp - J))           # (Jp, d)
-            pred = self._head_fn(self.head, h, jnp.asarray(mask))
-            pred_np = np.asarray(jax.block_until_ready(pred))
+            with span("serve.head", segments=J):
+                pred = self._head_fn(self.head, h, jnp.asarray(mask))
+                pred_np = np.asarray(jax.block_until_ready(pred))
             latency_ms = (time.perf_counter() - t0) * 1e3
             out.append(RequestResult(
                 request_id=self._request_counter, pred=pred_np,
                 latency_ms=latency_ms, n_segments=len(items),
                 n_cache_hits=hits_per_req[ri]))
             self._request_counter += 1
-            self.stats.latencies_ms.append(latency_ms)
+            self.stats.latency.observe(latency_ms)
+            reg.observe("serve.latency_ms", latency_ms,
+                        buckets=LATENCY_BUCKETS_MS, unit="ms")
             self.stats.n_segments += len(items)
         self.stats.n_requests += len(graphs)
         self.stats.wall_s += time.perf_counter() - t0
+        if reg.enabled:
+            self._publish_window(reg, n_requests=len(graphs),
+                                 n_launches=self.stats.encode_launches
+                                 - launches0, hit_rows=hit_rows,
+                                 n_fresh_reads=n_fresh_reads)
         if self.cache is not None:
             self.stats.cache = self.cache.stats()
         return out
+
+    def _publish_window(self, reg, *, n_requests: int, n_launches: int,
+                        hit_rows: List[int], n_fresh_reads: int) -> None:
+        """Registry mirror of one window (only on the --metrics path).
+
+        ``serve.prediction_staleness``: the age, in cache insertion steps,
+        of every table row the window's served predictions actually read —
+        hits gather rows stamped ``cache.step`` at insert time, fresh
+        encodes read age-0 embeddings.  The ROADMAP's train-while-serve
+        staleness metric, landed first in the offline engine."""
+        reg.inc("serve.windows")
+        reg.inc("serve.requests", n_requests)
+        reg.inc("serve.encode_launches", n_launches)
+        if self.cache is not None:
+            self.cache.publish_counters()
+            hist = reg.histogram("serve.prediction_staleness",
+                                 buckets=AGE_BUCKETS_STEPS, unit="steps")
+            if hit_rows:
+                # stats-grade ages_init (no write-back flush on the hot
+                # path); slot 0 is the segment slot the cache addresses
+                age, _ = self.cache.store.ages_init(self.cache.table)
+                hist.observe_many(self.cache.step
+                                  - age[np.asarray(hit_rows, np.int64), 0])
+            if n_fresh_reads:
+                hist.observe_many(np.zeros(n_fresh_reads))
 
     def _head_impl(self, head, h: jnp.ndarray, mask: jnp.ndarray):
         """η=1 aggregate + head over one request's segment embeddings

@@ -29,6 +29,7 @@ synchronous drivers.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
 from typing import NamedTuple, Optional, Tuple
 
@@ -38,6 +39,7 @@ import numpy as np
 
 from repro.core import embedding_table as tbl
 from repro.kernels.ops import pad_leading, pad_rows_pow2
+from repro.obs.metrics import get_registry
 
 
 # -- block row partition (canonical home; dist/table.py re-exports) ---------
@@ -96,6 +98,21 @@ class StoreCounters:
         }
 
 
+# registry mirror of StoreCounters: (field, published metric name, unit).
+# ``misses`` surfaces as ``store.faults`` — the residency fault count.
+_COUNTER_METRICS = (
+    ("lookups", "store.lookups", "rows"),
+    ("hits", "store.hits", "rows"),
+    ("misses", "store.faults", "rows"),
+    ("evictions", "store.evictions", "rows"),
+    ("bytes_h2d", "store.bytes_h2d", "bytes"),
+    ("bytes_d2h", "store.bytes_d2h", "bytes"),
+    ("writeback_wait_ms", "store.writeback_wait_ms", "ms"),
+    ("wb_skipped_rows", "store.wb_skipped_rows", "rows"),
+    ("wb_skipped_bytes", "store.wb_skipped_bytes", "bytes"),
+)
+
+
 class PreparedMigration(NamedTuple):
     """Output of ``begin``: the batch's device rows plus the staged data
     movement ``commit`` will apply.  Device staging buffers live here so
@@ -133,6 +150,39 @@ class EmbeddingStore:
         self.padded_rows = padded_rows(n_rows, self.num_shards)
         self.counters = StoreCounters()
         self._evict_jit = jax.jit(tbl.evict_rows)
+
+    # ``store.counters`` stays the mutation surface (callers reset it by
+    # assigning a fresh StoreCounters); the registry carries a cumulative
+    # mirror published by diffing, so resets of the view never rewind the
+    # process-wide counters.
+    @property
+    def counters(self) -> StoreCounters:
+        return self._counters
+
+    @counters.setter
+    def counters(self, c: StoreCounters) -> None:
+        if not hasattr(self, "_publish_mu"):   # first call is from __init__
+            self._publish_mu = threading.Lock()
+        with self._publish_mu:
+            self._counters = c
+            self._published = {f: getattr(c, f)
+                               for f, _, _ in _COUNTER_METRICS}
+
+    def publish_counters(self) -> None:
+        """Mirror counter movement since the last publish into the metrics
+        registry (host-side; no-op when metrics are disabled).  Callable
+        from any thread — begin runs on the feeder, commit on the
+        consumer, delta-gate settlement on the writer."""
+        reg = get_registry()
+        if not reg.enabled:
+            return
+        with self._publish_mu:
+            for field, name, unit in _COUNTER_METRICS:
+                cur = getattr(self._counters, field)
+                moved = cur - self._published[field]
+                if moved:
+                    reg.inc(name, moved, unit=unit)
+                    self._published[field] = cur
 
     # bytes of one (emb, age, init) row triple — the migration-unit size
     @property
@@ -212,6 +262,7 @@ class EmbeddingStore:
         pass
 
     def stats(self) -> dict:
+        self.publish_counters()
         d = self.counters.as_dict()
         d.update({
             "backend": type(self).__name__,
@@ -240,6 +291,7 @@ class DeviceStore(EmbeddingStore):
         uniq = len(set(slots.tolist()))
         self.counters.lookups += uniq
         self.counters.hits += uniq
+        self.publish_counters()
         return PreparedMigration(slots=slots, ticket=0)
 
     def commit(self, table, prep):

@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core import embedding_table as tbl
 from repro.kernels.ops import pad_rows_pow2, pad_leading
+from repro.obs.trace import span
 from repro.store.base import (EmbeddingStore, PreparedMigration,
                               device_rows_per_shard)
 from repro.store.slots import SlotMap
@@ -144,6 +145,13 @@ class TieredStore(EmbeddingStore):
         row keeps the age it carried in from the host tier, so a
         long-resident hot row would score as stale as its last eviction
         left it."""
+        with span("store.begin"):
+            prep = self._begin_impl(row_ids, fetch=fetch, step=step)
+        self.publish_counters()
+        return prep
+
+    def _begin_impl(self, row_ids, *, fetch: bool,
+                    step: Optional[int]) -> PreparedMigration:
         ids = np.asarray(row_ids).ravel()
         R, C = self.rows_per_shard, self._C
         with self._begin_mu:
@@ -229,6 +237,13 @@ class TieredStore(EmbeddingStore):
                prep: PreparedMigration) -> tbl.EmbeddingTable:
         """Device half: apply the staged migration to the live table (in
         begin order) and hand evicted content to the write-back thread."""
+        with span("store.commit", n_up=prep.n_up, n_ev=prep.n_ev):
+            table = self._commit_impl(table, prep)
+        self.publish_counters()
+        return table
+
+    def _commit_impl(self, table: tbl.EmbeddingTable,
+                     prep: PreparedMigration) -> tbl.EmbeddingTable:
         if prep.ticket != self._commit_next:
             raise RuntimeError(
                 f"commit order violated: expected ticket {self._commit_next}, "
@@ -253,49 +268,54 @@ class TieredStore(EmbeddingStore):
 
     def _writeback_thunk(self, ev, rows, n, ticket):
         def write():
-            try:
-                emb, age, init = (np.asarray(x)[:n] for x in ev)
-                if self.wb_threshold > 0.0:
-                    # the host copy is the row's content when it faulted in
-                    # (stale while resident), so this measures exactly how
-                    # far the row moved during its device residency
-                    admit = delta_gate(emb, self._host.emb[rows],
-                                       init, self._host.initialized[rows],
-                                       self.wb_threshold)
-                    nskip = int(n - admit.sum())
-                    if nskip:
-                        # emb bytes of the skipped rows never cross to the
-                        # host tier: settle the eager bytes_d2h from commit
-                        # and surface the saving (ages/init still land, so
-                        # staleness bookkeeping stays exact even gated)
-                        emb_bytes = self.j_max * self.d_h * emb.dtype.itemsize
-                        with self._mu:
-                            self.counters.wb_skipped_rows += nskip
-                            self.counters.wb_skipped_bytes += \
-                                nskip * emb_bytes
-                            self.counters.bytes_d2h -= nskip * emb_bytes
-                        self._host.emb[rows[admit]] = emb[admit]
-                    else:
-                        self._host.emb[rows] = emb
+            with span("store.writeback", rows=int(n)):
+                self._writeback_body(ev, rows, n, ticket)
+            self.publish_counters()
+        return write
+
+    def _writeback_body(self, ev, rows, n, ticket):
+        try:
+            emb, age, init = (np.asarray(x)[:n] for x in ev)
+            if self.wb_threshold > 0.0:
+                # the host copy is the row's content when it faulted in
+                # (stale while resident), so this measures exactly how
+                # far the row moved during its device residency
+                admit = delta_gate(emb, self._host.emb[rows],
+                                   init, self._host.initialized[rows],
+                                   self.wb_threshold)
+                nskip = int(n - admit.sum())
+                if nskip:
+                    # emb bytes of the skipped rows never cross to the
+                    # host tier: settle the eager bytes_d2h from commit
+                    # and surface the saving (ages/init still land, so
+                    # staleness bookkeeping stays exact even gated)
+                    emb_bytes = self.j_max * self.d_h * emb.dtype.itemsize
+                    with self._mu:
+                        self.counters.wb_skipped_rows += nskip
+                        self.counters.wb_skipped_bytes += \
+                            nskip * emb_bytes
+                        self.counters.bytes_d2h -= nskip * emb_bytes
+                    self._host.emb[rows[admit]] = emb[admit]
                 else:
                     self._host.emb[rows] = emb
-                self._host.age[rows] = age
-                self._host.initialized[rows] = init
-            except BaseException as e:
-                with self._mu:
-                    if self._wb_exc is None:
-                        self._wb_exc = e
-                raise   # AsyncHostWriter also records it for flush()
-            finally:
-                # ALWAYS advance the ticket (failure included) so a waiter
-                # raises the stored exception instead of spinning forever
-                with self._mu:
-                    self._done_ticket = ticket
-                    for r in rows:
-                        if self._pending.get(int(r)) == ticket:
-                            del self._pending[int(r)]
-                    self._mu.notify_all()
-        return write
+            else:
+                self._host.emb[rows] = emb
+            self._host.age[rows] = age
+            self._host.initialized[rows] = init
+        except BaseException as e:
+            with self._mu:
+                if self._wb_exc is None:
+                    self._wb_exc = e
+            raise   # AsyncHostWriter also records it for flush()
+        finally:
+            # ALWAYS advance the ticket (failure included) so a waiter
+            # raises the stored exception instead of spinning forever
+            with self._mu:
+                self._done_ticket = ticket
+                for r in rows:
+                    if self._pending.get(int(r)) == ticket:
+                        del self._pending[int(r)]
+                self._mu.notify_all()
 
     def _raise_wb_exc_locked(self):
         if self._wb_exc is not None:
