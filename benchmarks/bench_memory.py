@@ -1,0 +1,275 @@
+"""Tracked memory benchmark — measures GST's constant-memory claim.
+
+The paper's headline promise is that segment training predicts properties
+of arbitrarily large graphs with a CONSTANT device-memory footprint: only
+the S sampled segments get activations/backprop, stale segments come from
+the historical table, and at serve time the lax.scan streaming encoder
+holds one chunk's activations regardless of graph size.
+
+This benchmark measures that from the compiled artifacts
+(``compiled.memory_analysis()`` via the shared roofline extraction
+helpers), holding the segment budget fixed while growing the graph size
+(``comm_range`` communities per graph -> more segments J per graph):
+
+* ``full_step``   — full-graph training step (variant "full": every
+                    segment gets activations + backprop).  Peak grows
+                    roughly linearly with J: the anti-claim control.
+* ``gst_step``    — GST training step (variant "gst_efd", the paper's
+                    complete method).  Peak must stay ~flat.
+* ``streaming``   — serve-side lax.scan streaming encoder across the SAME
+                    size sweep (chunk count grows with the graph).  Temp
+                    must be chunk-count-independent and at least the
+                    jaxpr-walk ``max_intermediate_bytes`` lower bound.
+* ``ladder``      — per-bucket compiled peak of every serve-ladder encode
+                    shape + their total (the serve device budget).
+
+Usage:
+    PYTHONPATH=src python benchmarks/bench_memory.py            # full sweep
+    PYTHONPATH=src python benchmarks/bench_memory.py --quick    # CI-sized
+    PYTHONPATH=src python benchmarks/bench_memory.py --out custom.json
+
+Writes ``BENCH_gst_memory.json`` (repo root by default), merge-keyed by
+(config, backend, jax version, device count) exactly like bench_step.py.
+``python -m repro.obs.gate --memory-json BENCH_gst_memory.json`` asserts
+the flatness claims against the written numbers (CI: obs-smoke).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if os.path.isdir(os.path.join(_REPO, "src")) and \
+        os.path.join(_REPO, "src") not in sys.path:
+    sys.path.insert(0, os.path.join(_REPO, "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gst as G
+from repro.core.embedding_table import init_table
+from repro.graphs import batching as Bt
+from repro.graphs import data as D
+from repro.graphs.gnn import GNNConfig, gnn_init, make_encode_fn
+from repro.kernels.ops import max_intermediate_bytes
+from repro.optim import make_optimizer
+from repro.roofline.analysis import (compiled_memory_stats,
+                                     device_peak_bytes)
+from repro.serve.buckets import batch_bucket, default_ladder, pad_to_bucket
+from repro.serve.engine import graph_to_chunks, make_stream_encoder
+
+# the size sweep: communities per graph (nodes grow ~linearly with this
+# while max_seg_nodes stays fixed, so segments-per-graph J is what grows)
+SWEEP_COMMS = (2, 4, 8, 16)
+SWEEP_COMMS_QUICK = (2, 4, 8)
+
+
+def _measure(jitted, *args) -> dict:
+    """AOT lower->compile, return the compiled memory stats (peak model:
+    argument + output + temp - alias, matching obs.memory)."""
+    compiled = jitted.lower(*args).compile()
+    mem = compiled_memory_stats(compiled)
+    if mem is None:  # backend without memory_analysis: accounting only
+        return {"mode": "accounting"}
+    return {"mode": "compiled",
+            "peak_bytes": device_peak_bytes(mem),
+            "temp_bytes": mem.get("temp_size_in_bytes", 0),
+            "arg_bytes": mem.get("argument_size_in_bytes", 0),
+            "alias_bytes": mem.get("alias_size_in_bytes", 0)}
+
+
+def _make_point(comm: int, *, n_graphs: int, max_seg_nodes: int,
+                hidden: int, batch_size: int, backbone: str):
+    """One size point: dataset + shared model pieces for both step legs."""
+    graphs = D.make_malnet_like(n_graphs=n_graphs, seed=0,
+                                comm_range=(comm, comm + 1))
+    ds = Bt.segment_dataset(graphs, max_seg_nodes, method="bfs", seed=0)
+    tup = next(Bt.batch_iterator(ds, batch_size,
+                                 rng=np.random.default_rng(0), shuffle=False))
+    batch = G.GSTBatch({k: jnp.asarray(v) for k, v in tup[0].items()},
+                       jnp.asarray(tup[1]), jnp.asarray(tup[2]),
+                       jnp.asarray(tup[3]))
+    cfg = GNNConfig(backbone=backbone, n_feat=graphs[0].x.shape[1],
+                    hidden=hidden)
+    enc = make_encode_fn(cfg)
+    key = jax.random.key(0)
+    bb = gnn_init(key, cfg)
+    head = G.head_init(jax.random.fold_in(key, 1), hidden, 5, "mlp")
+    opt = make_optimizer("adam", lr=1e-3)
+    state = G.TrainState(bb, head, opt.init((bb, head)),
+                         init_table(ds.n, ds.j_max, hidden),
+                         jnp.zeros((), jnp.int32))
+    meta = {"comm": comm, "j_max": int(ds.j_max),
+            "nodes_mean": round(float(np.mean([len(g.x) for g in graphs])), 1)}
+    return graphs, ds, batch, cfg, enc, opt, state, head, meta
+
+
+def bench_steps(comm: int, **kw) -> dict:
+    """gst_efd vs full train-step compiled memory at one graph size."""
+    _, _, batch, _, enc, opt, state, _, meta = _make_point(comm, **kw)
+    out = dict(meta)
+    for leg, variant in (("gst", "gst_efd"), ("full", "full")):
+        step = jax.jit(G.make_train_step(enc, opt, G.VARIANTS[variant],
+                                         keep_prob=0.5),
+                       donate_argnums=(0,))
+        out[leg] = _measure(step, state, batch, jax.random.key(0))
+    return out
+
+
+def bench_streaming(comm: int, *, chunk: int, **kw) -> dict:
+    """Streaming-encoder compiled memory at one graph size: the chunk
+    count C grows with the graph, temp must not."""
+    graphs, _, _, cfg, _, _, _, head, meta = _make_point(comm, **kw)
+    g = max(graphs, key=lambda gr: len(gr.x))
+    spec = default_ladder(kw["max_seg_nodes"])[-1]
+    chunks = graph_to_chunks(g, spec, chunk,
+                             partition_max_nodes=kw["max_seg_nodes"])
+    dev = {k: jnp.asarray(v) for k, v in chunks.items()}
+    stream = make_stream_encoder(cfg)
+    bb = gnn_init(jax.random.key(0), cfg)
+    rec = _measure(stream, bb, head, dev)
+    rec.update(meta, n_chunks=int(chunks["seg_valid"].shape[0]),
+               accounting_bound_bytes=int(
+                   max_intermediate_bytes(stream, bb, head, dev)))
+    return rec
+
+
+def bench_ladder(*, max_seg_nodes: int, hidden: int, backbone: str,
+                 n_feat: int = 8) -> dict:
+    """Per-bucket compiled peak of every serve-ladder encode shape."""
+    from repro.graphs.gnn import encode_segments
+    from repro.graphs.partition import partition_graph
+
+    cfg = GNNConfig(backbone=backbone, n_feat=n_feat, hidden=hidden)
+    bb = gnn_init(jax.random.key(0), cfg)
+    g = D.make_malnet_like(n_graphs=1, seed=0)[0]
+    buckets = []
+    for spec in default_ladder(max_seg_nodes):
+        segs = partition_graph(len(g.x), g.edges, spec.m_max, "bfs", 0)
+        padded = [pad_to_bucket(g, s, spec) for s in segs[:spec.batch]]
+        seg_inputs, _ = batch_bucket(padded, spec)
+        dev = {k: jnp.asarray(v) for k, v in seg_inputs.items()}
+        ejit = jax.jit(lambda p, si: encode_segments(p, cfg, si))
+        rec = _measure(ejit, bb, dev)
+        rec["key"] = spec.key
+        buckets.append(rec)
+    total = sum(b.get("peak_bytes", 0) for b in buckets)
+    return {"buckets": buckets, "total_peak_bytes": int(total)}
+
+
+def _ratio(points, leg, field="peak_bytes"):
+    vals = [p[leg][field] for p in points if field in p.get(leg, {})]
+    if not vals or min(vals) <= 0:
+        return None
+    return round(max(vals) / min(vals), 4)
+
+
+def load_runs(path: str) -> dict:
+    """Reader half of the merge-keyed format (used by tests + obs.gate)."""
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("benchmark") != "gst_memory":
+        raise ValueError(f"{path} is not a gst_memory benchmark file")
+    return payload.get("runs", {})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized sweep")
+    ap.add_argument("--out",
+                    default=os.path.join(_REPO, "BENCH_gst_memory.json"))
+    ap.add_argument("--n-graphs", type=int, default=4)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--max-seg-nodes", type=int, default=32)
+    ap.add_argument("--backbone", default="sage")
+    ap.add_argument("--stream-chunk", type=int, default=4)
+    args = ap.parse_args()
+    comms = SWEEP_COMMS_QUICK if args.quick else SWEEP_COMMS
+    kw = dict(n_graphs=args.n_graphs, max_seg_nodes=args.max_seg_nodes,
+              hidden=args.hidden, batch_size=args.batch_size,
+              backbone=args.backbone)
+
+    print(f"{'comm':>5s} {'J':>4s} {'nodes':>7s} {'gst temp':>10s} "
+          f"{'full temp':>10s} {'stream temp':>11s} {'chunks':>6s}")
+    points, streaming = [], []
+    for comm in comms:
+        pt = bench_steps(comm, **kw)
+        st = bench_streaming(comm, chunk=args.stream_chunk, **kw)
+        points.append(pt)
+        streaming.append(st)
+        print(f"{comm:5d} {pt['j_max']:4d} {pt['nodes_mean']:7.1f} "
+              f"{pt['gst'].get('temp_bytes', 0):10d} "
+              f"{pt['full'].get('temp_bytes', 0):10d} "
+              f"{st.get('temp_bytes', 0):11d} {st['n_chunks']:6d}",
+              flush=True)
+    ladder = bench_ladder(max_seg_nodes=args.max_seg_nodes,
+                          hidden=args.hidden, backbone=args.backbone)
+
+    summary = {
+        # the gated claims; gate thresholds live in repro.obs.gate.  The
+        # flatness claim is on TEMP (XLA activation/workspace) bytes: GST's
+        # peak still carries one copy of the (n, J, d) historical table as
+        # an argument, and that table is exactly what the tiered store caps
+        # on device — the activations are what must not grow.
+        "gst_temp_ratio_max_over_min": _ratio(points, "gst", "temp_bytes"),
+        "full_temp_ratio_max_over_min": _ratio(points, "full", "temp_bytes"),
+        "gst_peak_ratio_max_over_min": _ratio(points, "gst"),
+        "full_peak_ratio_max_over_min": _ratio(points, "full"),
+        "streaming_temp_ratio_max_over_min": (
+            round(max(s["temp_bytes"] for s in streaming)
+                  / max(min(s["temp_bytes"] for s in streaming), 1), 4)
+            if all("temp_bytes" in s for s in streaming) else None),
+        "streaming_bound_ok": all(
+            s.get("temp_bytes", 0) >= s["accounting_bound_bytes"]
+            for s in streaming),
+        "ladder_total_peak_bytes": ladder["total_peak_bytes"],
+    }
+    print("summary:", json.dumps(summary))
+
+    config = {
+        "sweep_comms": list(comms), "n_graphs": args.n_graphs,
+        "batch_size": args.batch_size, "hidden": args.hidden,
+        "max_seg_nodes": args.max_seg_nodes, "backbone": args.backbone,
+        "stream_chunk": args.stream_chunk, "quick": args.quick,
+    }
+    env = {
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "device_count": jax.device_count(),
+    }
+    entry = {"summary": summary, "config": config, "env": env,
+             "gst_step": [{**{k: p[k] for k in ("comm", "j_max",
+                                                "nodes_mean")}, **p["gst"]}
+                          for p in points],
+             "full_step": [{**{k: p[k] for k in ("comm", "j_max",
+                                                 "nodes_mean")}, **p["full"]}
+                           for p in points],
+             "streaming": streaming,
+             "ladder": ladder}
+    # merge keyed like bench_step.py so configs accumulate, not clobber
+    run_key = ",".join(f"{k}={v}" for k, v in sorted(config.items())) + \
+        f",backend={env['backend']},jax={env['jax']}" + \
+        f",device_count={env['device_count']}"
+    payload = {"benchmark": "gst_memory", "unit": "bytes", "runs": {}}
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                prev = json.load(f)
+            if prev.get("benchmark") == "gst_memory" and \
+                    isinstance(prev.get("runs"), dict):
+                payload = prev
+        except (json.JSONDecodeError, OSError):
+            pass
+    payload["runs"][run_key] = entry
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(payload['runs'])} tracked run configs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core import gst as G
 from repro.graphs import batching as Bt
+from repro.obs.memory import get_probe, tree_nbytes
 from repro.obs.metrics import get_registry
 from repro.obs.trace import span
 from repro.serve.buckets import BucketSpec, choose_bucket, default_ladder
@@ -145,6 +146,9 @@ class SyncSegmentFeeder:
             t0 = time.perf_counter()
             with span("feeder.assemble", batch=len(ids)):
                 host = _assemble(self._ds, ids)
+            p = get_probe()
+            if p.enabled:
+                p.observe_host("feeder.staging", tree_nbytes(host))
             t1 = time.perf_counter()
             with span("feeder.put"):
                 dev = self._put(host)
@@ -199,6 +203,9 @@ class AsyncSegmentFeeder:
                 t1 = time.perf_counter()
                 with span("feeder.assemble", batch=len(ids)):
                     host = _assemble(self._ds, ids)
+                p = get_probe()
+                if p.enabled:
+                    p.observe_host("feeder.staging", tree_nbytes(host))
                 with span("feeder.put"):
                     dev = self._put(host)
                 self.stats.put_ms += (time.perf_counter() - t1) * 1e3

@@ -37,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import embedding_table as tbl
 from repro.core import gst as G
 from repro.dist import table as dtbl
+from repro.obs import probe_jit
 from repro.dist.exchange import EXCHANGES, PAYLOAD_DTYPES, make_exchange
 from repro.store import DeviceStore, EmbeddingStore, TieredStore
 from repro.store import base as store_base
@@ -247,7 +248,8 @@ def make_dist_train_step(encode_fn, optimizer, variant: G.GSTVariant, *,
                         in_specs=(_state_spec(), _batch_spec(), P()),
                         out_specs=(_state_spec(), P()),
                         check_rep=False)
-    return jax.jit(smapped, donate_argnums=(0,) if donate else ())
+    return probe_jit("dist.train_step",
+                     jax.jit(smapped, donate_argnums=(0,) if donate else ()))
 
 
 def make_dist_eval_step(encode_fn, *, ctx: DistContext, **kwargs):
@@ -255,7 +257,7 @@ def make_dist_eval_step(encode_fn, *, ctx: DistContext, **kwargs):
     smapped = shard_map(inner, mesh=ctx.mesh,
                         in_specs=(_state_spec(), _batch_spec()),
                         out_specs=P(), check_rep=False)
-    return jax.jit(smapped)
+    return probe_jit("dist.eval_step", jax.jit(smapped))
 
 
 def make_dist_refresh_step(encode_fn, *, ctx: DistContext,
@@ -265,7 +267,8 @@ def make_dist_refresh_step(encode_fn, *, ctx: DistContext,
     smapped = shard_map(inner, mesh=ctx.mesh,
                         in_specs=(_state_spec(), _batch_spec()),
                         out_specs=_state_spec(), check_rep=False)
-    return jax.jit(smapped, donate_argnums=(0,) if donate else ())
+    return probe_jit("dist.refresh_step",
+                     jax.jit(smapped, donate_argnums=(0,) if donate else ()))
 
 
 def make_dist_finetune_step(optimizer, *, ctx: DistContext,
@@ -276,4 +279,5 @@ def make_dist_finetune_step(optimizer, *, ctx: DistContext,
     smapped = shard_map(inner, mesh=ctx.mesh,
                         in_specs=(_state_spec(), _batch_spec()),
                         out_specs=(_state_spec(), P()), check_rep=False)
-    return jax.jit(smapped, donate_argnums=(0,) if donate else ())
+    return probe_jit("dist.finetune_step",
+                     jax.jit(smapped, donate_argnums=(0,) if donate else ()))

@@ -19,7 +19,7 @@ from repro.core import gst as G
 from repro.graphs import batching as Bt
 from repro.graphs import data as D
 from repro.graphs.gnn import GNNConfig, gnn_init, make_encode_fn
-from repro.obs import StalenessProbe, get_registry, span
+from repro.obs import StalenessProbe, get_registry, probe_jit, span
 from repro.optim import make_optimizer
 from repro.store import DeviceStore, TieredStore
 
@@ -112,14 +112,18 @@ def run_experiment(
 
     # TrainState is donated through the hot steps so the (n, J, d) embedding
     # table scatters in-place instead of copying the largest array each iter.
-    step = jax.jit(G.make_train_step(
+    # probe_jit hooks each jit entry point into the obs.memory probe
+    # (--mem-probe): compiled memory/cost stats per (site, shape signature),
+    # a no-op branch when probing is off
+    step = probe_jit("train.step", jax.jit(G.make_train_step(
         enc, opt, var, num_sampled=num_sampled, keep_prob=keep_prob,
         head_mode=head_mode, loss_kind=loss_kind, agg=agg,
-        use_pallas=use_pallas), donate_argnums=(0,))
-    eval_step = jax.jit(G.make_eval_step(enc, head_mode=head_mode,
-                                         loss_kind=loss_kind, agg=agg,
-                                         use_pallas=use_pallas))
-    refresh = jax.jit(G.make_refresh_step(enc), donate_argnums=(0,))
+        use_pallas=use_pallas), donate_argnums=(0,)))
+    eval_step = probe_jit("train.eval", jax.jit(
+        G.make_eval_step(enc, head_mode=head_mode, loss_kind=loss_kind,
+                         agg=agg, use_pallas=use_pallas)))
+    refresh = probe_jit("train.refresh", jax.jit(
+        G.make_refresh_step(enc), donate_argnums=(0,)))
 
     def evaluate(ds_, st):
         ms, ws = [], []
@@ -187,9 +191,9 @@ def run_experiment(
                 state = refresh(state, batch)
             ft_opt = make_optimizer("adam", lr=lr * 0.5)
             state = state._replace(opt_state=ft_opt.init(state.head))
-            ft_step = jax.jit(G.make_finetune_step(
+            ft_step = probe_jit("train.finetune", jax.jit(G.make_finetune_step(
                 ft_opt, head_mode=head_mode, loss_kind=loss_kind, agg=agg,
-                use_pallas=use_pallas), donate_argnums=(0,))
+                use_pallas=use_pallas), donate_argnums=(0,)))
             for fe in range(finetune_epochs):
                 for tup in Bt.batch_iterator(ds, batch_size, rng=brng):
                     batch = routed(tup)

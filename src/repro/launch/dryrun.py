@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_step_spec, decode_plan, gst_geometry
-from repro.roofline.analysis import analyze_compiled, param_counts
+from repro.roofline.analysis import (analyze_compiled, compiled_memory_stats,
+                                     param_counts)
 
 
 def run_one(arch_id: str, shape_name: str, multi_pod: bool, *,
@@ -108,7 +109,10 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool, *,
         rep["decode_plan"] = {"cache_len": plan.cache_len, "window": plan.window,
                               "ring": plan.ring, "seq_shard": plan.seq_shard}
     if verbose:
-        ma = rep.get("memory_analysis", {})
+        # one extraction path for everyone (roofline.analysis helper) —
+        # rep["memory_analysis"] already came through it; re-derive here
+        # only to keep the print honest when extraction degraded
+        ma = compiled_memory_stats(compiled) or {}
         print(f"[{rep['mesh']}] {arch_id} x {shape_name}: OK "
               f"(lower {t_lower:.0f}s compile {t_compile:.0f}s) "
               f"dominant={rep['dominant']} "

@@ -15,9 +15,12 @@ from repro.obs.metrics import (AGE_BUCKETS_STEPS, BYTES_BUCKETS, Counter,
                                enable_metrics, exponential_buckets,
                                get_registry, null_registry, set_registry,
                                summarize)
-from repro.obs.trace import (NullTracer, Tracer, get_tracer, instant,
-                             null_tracer, set_tracer, span,
+from repro.obs.trace import (NullTracer, Tracer, counter, get_tracer,
+                             instant, null_tracer, set_tracer, span,
                              validate_chrome_trace)
+from repro.obs.memory import (MemoryProbe, NullProbe, get_probe, null_probe,
+                              probe_jit, process_rss_bytes, set_probe,
+                              shape_signature, tree_nbytes)
 from repro.obs.staleness import (StalenessProbe, record_exchange_bytes,
                                  sed_age_bound, sed_drop_stats, wb_skip_rate)
 from repro.obs.export import JsonlExporter, Obs, add_obs_args
@@ -28,8 +31,10 @@ __all__ = [
     "MetricsRegistry", "NullRegistry",
     "dict_delta", "enable_metrics", "exponential_buckets",
     "get_registry", "null_registry", "set_registry", "summarize",
-    "NullTracer", "Tracer", "get_tracer", "instant", "null_tracer",
-    "set_tracer", "span", "validate_chrome_trace",
+    "NullTracer", "Tracer", "counter", "get_tracer", "instant",
+    "null_tracer", "set_tracer", "span", "validate_chrome_trace",
+    "MemoryProbe", "NullProbe", "get_probe", "null_probe", "probe_jit",
+    "process_rss_bytes", "set_probe", "shape_signature", "tree_nbytes",
     "StalenessProbe", "record_exchange_bytes", "sed_age_bound",
     "sed_drop_stats", "wb_skip_rate",
     "JsonlExporter", "Obs", "add_obs_args",

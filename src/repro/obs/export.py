@@ -33,6 +33,7 @@ import sys
 import time
 from typing import Dict, Optional
 
+from repro.obs.memory import MemoryProbe, null_probe, set_probe
 from repro.obs.metrics import (MetricsRegistry, NullRegistry, get_registry,
                                null_registry, set_registry)
 from repro.obs.trace import NullTracer, Tracer, null_tracer, set_tracer
@@ -60,6 +61,14 @@ def add_obs_args(ap) -> None:
                    help="also enter jax.profiler.TraceAnnotation for each "
                         "span so span names line up inside a captured "
                         "device profile")
+    g.add_argument("--mem-probe", action="store_true",
+                   help="capture compiled.memory_analysis() / "
+                        "cost_analysis() at every probed jit entry point "
+                        "(train/refresh/finetune steps, serve bucket "
+                        "encodes, store migrations), keyed by (site, "
+                        "shape signature), publishing mem.device.* / "
+                        "mem.host.* gauges; costs one extra AOT compile "
+                        "per compiled shape while on.  Implies --metrics")
 
 
 class JsonlExporter:
@@ -140,17 +149,22 @@ class Obs:
                  trace_out: Optional[str] = None,
                  metrics_interval: int = 1,
                  jax_annotations: bool = False,
+                 mem_probe: bool = False,
                  install: bool = True):
-        self.enabled = bool(metrics or metrics_out)
+        # --mem-probe implies a live registry: the probe's gauges need
+        # somewhere to land even without --metrics
+        self.enabled = bool(metrics or metrics_out or mem_probe)
         self.trace_out = trace_out
         self.interval = max(int(metrics_interval), 1)
         self.registry = MetricsRegistry() if self.enabled else null_registry()
         self.tracer = (Tracer(jax_annotations=jax_annotations)
                        if trace_out else null_tracer())
+        self.probe = MemoryProbe() if mem_probe else null_probe()
         self.exporter = (JsonlExporter(metrics_out, self.registry)
                          if metrics_out else None)
         self._prev_registry = None
         self._prev_tracer = None
+        self._prev_probe = None
         self._installed = False
         self._closed = False
         if install:
@@ -163,7 +177,8 @@ class Obs:
                   trace_out=getattr(args, "trace_out", None),
                   metrics_interval=getattr(args, "metrics_interval", 1),
                   jax_annotations=getattr(args, "jax_trace_annotations",
-                                          False))
+                                          False),
+                  mem_probe=getattr(args, "mem_probe", False))
         if obs.exporter is not None:
             obs.exporter.meta(**run_meta)
         return obs
@@ -174,6 +189,7 @@ class Obs:
         if not self._installed:
             self._prev_registry = set_registry(self.registry)
             self._prev_tracer = set_tracer(self.tracer)
+            self._prev_probe = set_probe(self.probe)
             self._installed = True
         return self
 
@@ -181,6 +197,7 @@ class Obs:
         if self._installed:
             set_registry(self._prev_registry or null_registry())
             set_tracer(self._prev_tracer or null_tracer())
+            set_probe(self._prev_probe or null_probe())
             self._installed = False
 
     def __enter__(self) -> "Obs":
@@ -219,6 +236,11 @@ class Obs:
         self._closed = True
         rec = None
         if self.exporter is not None:
+            if self.probe.enabled:
+                # per-(site, signature) compiled memory records, ahead of
+                # the summary so gate/bench readers still see the summary
+                # as the final record
+                self.exporter.event("memory", **self.probe.snapshot())
             rec = self.exporter.summary(**summary_extra)
             self.exporter.close()
         elif self.enabled:

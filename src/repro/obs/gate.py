@@ -19,7 +19,17 @@ Checks:
     ``serve.encode_launches`` <= --max-encode-launches;
   * train: ``staleness.row_age`` p99 <= the SED-implied bound
     (:func:`repro.obs.staleness.sed_age_bound` over the run geometry);
-  * every trace passes :func:`repro.obs.trace.validate_chrome_trace`.
+  * every trace passes :func:`repro.obs.trace.validate_chrome_trace`;
+  * memory (``--memory-json BENCH_gst_memory.json``, the bench_memory.py
+    sweep): the GST train-step temp (activation) bytes stay flat while
+    graph size grows (max/min ratio <= 1 + --mem-epsilon), the full-graph
+    control actually grows (>= --mem-growth-floor, proving the sweep has
+    teeth), the streaming-encoder temp is chunk-count-independent
+    (ratio <= 1 + --stream-epsilon) and >= its jaxpr-walk accounting
+    bound, and the serve bucket-ladder total peak fits
+    --ladder-budget-bytes when given.  ``--expect-mem`` additionally
+    requires the ``mem.`` gauge family in the train stream (the
+    --mem-probe wiring canary).
 """
 from __future__ import annotations
 
@@ -37,6 +47,7 @@ from repro.obs.trace import validate_chrome_trace
 # exchange.* metric present) or when --expect-dist pins them explicitly.
 TRAIN_FAMILIES = ("staleness.row_age", "staleness.sed_drop_rate")
 DIST_FAMILIES = ("store.wb_skip_rate", "exchange.bytes.")
+MEM_FAMILIES = ("mem.device.peak_bytes.", "mem.device.temp_bytes.")
 SERVE_FAMILIES = ("serve.latency_ms", "serve.prediction_staleness",
                   "serve.windows")
 
@@ -98,6 +109,67 @@ def metric_value(summary: Dict, name: str, field: Optional[str],
     return float(val)
 
 
+def check_memory_json(path: str, *, mem_epsilon: float,
+                      stream_epsilon: float, growth_floor: float,
+                      ladder_budget: Optional[float]) -> List[str]:
+    """Assert the constant-memory claims against one bench_memory.py file
+    (every tracked run config in it must pass)."""
+    with open(path) as f:
+        payload = json.load(f)
+    if payload.get("benchmark") != "gst_memory":
+        raise GateFailure(f"{path}: not a gst_memory benchmark file "
+                          f"(benchmark={payload.get('benchmark')!r})")
+    runs = payload.get("runs") or {}
+    if not runs:
+        raise GateFailure(f"{path}: no tracked runs")
+    lines = []
+    for run_key, entry in sorted(runs.items()):
+        s = entry.get("summary", {})
+        where = f"{path} [{run_key}]"
+
+        def summary_ratio(name: str) -> float:
+            v = s.get(name)
+            if v is None:
+                raise GateFailure(f"{where}: summary missing {name!r}")
+            return float(v)
+
+        gst = summary_ratio("gst_temp_ratio_max_over_min")
+        if gst > 1.0 + mem_epsilon:
+            raise GateFailure(
+                f"{where}: GST train-step temp bytes grew {gst:.3f}x across "
+                f"the graph-size sweep (budget {1 + mem_epsilon:.3f}x) — "
+                "the constant-memory claim regressed (activations now "
+                "scale with graph size)")
+        full = summary_ratio("full_temp_ratio_max_over_min")
+        if full < growth_floor:
+            raise GateFailure(
+                f"{where}: full-graph control temp grew only {full:.3f}x "
+                f"(floor {growth_floor:.3f}x) — the sweep no longer "
+                "exercises graph-size scaling, so the flat-GST gate above "
+                "is vacuous")
+        stream = summary_ratio("streaming_temp_ratio_max_over_min")
+        if stream > 1.0 + stream_epsilon:
+            raise GateFailure(
+                f"{where}: streaming-encoder temp varies {stream:.4f}x "
+                f"with the chunk count (budget {1 + stream_epsilon:.4f}x) "
+                "— the lax.scan no longer holds one chunk's activations")
+        if not s.get("streaming_bound_ok", False):
+            raise GateFailure(
+                f"{where}: streaming temp fell below the jaxpr-walk "
+                "max_intermediate_bytes bound — the compiled stats and "
+                "the accounting model disagree")
+        if ladder_budget is not None:
+            total = float(s.get("ladder_total_peak_bytes") or 0)
+            if total > ladder_budget:
+                raise GateFailure(
+                    f"{where}: serve bucket-ladder total peak "
+                    f"{total:.0f}B exceeds the device budget "
+                    f"{ladder_budget:.0f}B")
+        lines.append(f"memory {run_key[:60]}...: gst x{gst:.3f} flat, "
+                     f"full x{full:.2f} grows, stream x{stream:.3f}")
+    return lines
+
+
 def check_trace(path: str) -> int:
     with open(path) as f:
         payload = json.load(f)
@@ -129,6 +201,23 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--num-sampled", type=int, default=None)
     ap.add_argument("--steps-per-epoch", type=int, default=None)
     ap.add_argument("--age-safety", type=float, default=2.0)
+    ap.add_argument("--memory-json", action="append", default=[],
+                    help="bench_memory.py BENCH_gst_memory.json to gate "
+                         "the constant-memory claims against (repeatable)")
+    ap.add_argument("--mem-epsilon", type=float, default=0.25,
+                    help="allowed fractional growth of GST train-step temp "
+                         "bytes across the graph-size sweep")
+    ap.add_argument("--stream-epsilon", type=float, default=0.01,
+                    help="allowed fractional variation of streaming-"
+                         "encoder temp bytes across chunk counts")
+    ap.add_argument("--mem-growth-floor", type=float, default=2.0,
+                    help="minimum growth of the full-graph control — "
+                         "proves the sweep actually scales graph size")
+    ap.add_argument("--ladder-budget-bytes", type=float, default=None,
+                    help="serve bucket-ladder total compiled peak budget")
+    ap.add_argument("--expect-mem", action="store_true",
+                    help="require the mem. gauge family in the train "
+                         "stream (--mem-probe wiring canary)")
     ap.add_argument("--expect-dist", action="store_true",
                     help="require the dist-run metric families "
                          "(store.wb_skip_rate, exchange.bytes.*) in the "
@@ -148,6 +237,8 @@ def main(argv: Optional[List[str]] = None) -> int:
                 for name in summary.get("metrics", {}))
             if is_dist:
                 families = families + DIST_FAMILIES
+            if args.expect_mem:
+                families = families + MEM_FAMILIES
             names = require_families(summary, families, args.train_jsonl)
             checks.append(f"train stream ok: {len(records)} records, "
                           f"{len(names)} metrics")
@@ -192,6 +283,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                         "padding/batching regressed")
                 checks.append(f"encode launches {launches:.0f} <= "
                               f"{args.max_encode_launches:.0f}")
+
+        for mem_path in args.memory_json:
+            checks.extend(check_memory_json(
+                mem_path, mem_epsilon=args.mem_epsilon,
+                stream_epsilon=args.stream_epsilon,
+                growth_floor=args.mem_growth_floor,
+                ladder_budget=args.ladder_budget_bytes))
 
         for trace_path in args.trace:
             n = check_trace(trace_path)

@@ -106,6 +106,20 @@ class Tracer:
         self._append({"name": name, "ph": "i", "s": "t", "ts": ts,
                       **self._ids(), **({"args": args} if args else {})})
 
+    def counter(self, name: str, **values) -> None:
+        """Chrome "C" counter event: each kwarg is one numeric series under
+        ``name``, rendered by the viewers as a timeline counter track —
+        live bytes (the obs.memory probe), queue depths, occupancy.  Only
+        numeric values are recorded; at least one is required."""
+        series = {k: float(v) for k, v in values.items()
+                  if isinstance(v, (int, float)) and not isinstance(v, bool)}
+        if not series:
+            raise ValueError(f"counter {name!r} needs at least one numeric "
+                             f"series (got {sorted(values)})")
+        ts = (time.perf_counter_ns() - self._epoch_ns) // 1000
+        self._append({"name": name, "ph": "C", "ts": ts, **self._ids(),
+                      "args": series})
+
     def _record(self, name: str, t0_ns: int, t1_ns: int,
                 args: Optional[Dict]) -> None:
         ev = {"name": name, "ph": "X",
@@ -138,12 +152,23 @@ class Tracer:
         with self._lock:
             return len(self._events)
 
+    # export order at equal ts: spans before counters before instants, and
+    # longer spans (parents) before shorter ones — spans are appended at
+    # EXIT while counters are appended live, so raw append order from
+    # multiple threads interleaves them nondeterministically
+    _PH_ORDER = {"X": 0, "C": 1, "i": 2, "I": 2}
+
     def export(self, path: str) -> str:
         """Write ``{"traceEvents": [...]}`` Chrome/Perfetto JSON: the
         recorded spans plus one thread-name metadata event per thread
-        seen, sorted by ts so viewers stream it without reordering."""
+        seen, sorted on a total deterministic key (ts, phase, -dur, tid)
+        so the stream is ts-monotonic — and stable across reruns — even
+        when counter and span events interleave from multiple threads."""
         with self._lock:
-            events = sorted(self._events, key=lambda e: e["ts"])
+            events = sorted(
+                self._events,
+                key=lambda e: (e["ts"], self._PH_ORDER.get(e["ph"], 3),
+                               -e.get("dur", 0), e.get("tid", 0)))
             names = dict(self._thread_names)
         meta = [{"name": "thread_name", "ph": "M", "pid": self._pid,
                  "tid": tid, "args": {"name": tname}}
@@ -164,6 +189,9 @@ class NullTracer:
         return _NULL_SPAN
 
     def instant(self, name: str, **args) -> None:
+        pass
+
+    def counter(self, name: str, **values) -> None:
         pass
 
     def events(self) -> List[Dict]:
@@ -207,6 +235,12 @@ def instant(name: str, **args) -> None:
     _tracer.instant(name, **args)
 
 
+def counter(name: str, **values) -> None:
+    """``counter("mem.device_bytes", train_step=4.2e5)`` against the
+    current process-wide tracer (no-op on the NullTracer)."""
+    _tracer.counter(name, **values)
+
+
 def validate_chrome_trace(payload: Dict) -> List[str]:
     """Structural checks a Chrome-trace consumer relies on; returns a list
     of problems (empty = valid).  Used by tests and the CI obs gate."""
@@ -229,6 +263,15 @@ def validate_chrome_trace(payload: Dict) -> List[str]:
         if ph == "X":
             if not isinstance(ev.get("dur"), int) or ev["dur"] < 0:
                 problems.append(f"event {i}: X event with bad dur")
+        elif ph == "C":
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args:
+                problems.append(f"event {i}: C event without args series")
+            elif not all(isinstance(v, (int, float))
+                         and not isinstance(v, bool)
+                         for v in args.values()):
+                problems.append(f"event {i}: C event with non-numeric "
+                                "series values")
         elif ph == "B":
             begins.setdefault((ev.get("pid"), ev.get("tid")), []).append(ev)
         elif ph == "E":
@@ -237,7 +280,7 @@ def validate_chrome_trace(payload: Dict) -> List[str]:
                 problems.append(f"event {i}: E without matching B")
             else:
                 stack.pop()
-        elif ph not in ("i", "I", "C"):
+        elif ph not in ("i", "I"):
             problems.append(f"event {i}: unsupported phase {ph!r}")
         if ph != "M" and ("pid" not in ev or "tid" not in ev):
             problems.append(f"event {i}: missing pid/tid")

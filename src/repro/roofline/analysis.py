@@ -45,6 +45,58 @@ _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+# the CompiledMemoryStats fields every consumer reads (roofline report,
+# dryrun print, obs.memory probe) — one list so they can never drift
+MEMORY_STAT_FIELDS = (
+    "argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes",
+    "generated_code_size_in_bytes", "alias_size_in_bytes",
+    "host_argument_size_in_bytes", "host_output_size_in_bytes",
+    "host_temp_size_in_bytes",
+)
+
+
+def compiled_memory_stats(compiled) -> Optional[Dict[str, int]]:
+    """THE memory_analysis() extraction path (roofline, dryrun, and the
+    obs.memory probe all go through here).  Returns the available
+    :data:`MEMORY_STAT_FIELDS` as ints, or ``None`` on backends / jax
+    versions where ``memory_analysis`` is unavailable or empty — callers
+    degrade to accounting-only (kernels.ops.max_intermediate_bytes)."""
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    out = {k: int(getattr(ma, k)) for k in MEMORY_STAT_FIELDS
+           if hasattr(ma, k)}
+    return out or None
+
+
+def compiled_cost_stats(compiled) -> Optional[Dict[str, float]]:
+    """The matching cost_analysis() extraction: ``{"flops", "bytes_accessed"}``
+    per device, or ``None`` when the backend doesn't report costs."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return None
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    if ca is None:
+        return None
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+
+
+def device_peak_bytes(mem_stats: Dict[str, int]) -> int:
+    """Peak device-memory model from the extracted stats: live arguments +
+    outputs + XLA temp buffers, minus donation-aliased bytes (an aliased
+    output reuses its donated argument's buffer, so it must not count
+    twice).  This is the number the constant-memory gates track."""
+    return (mem_stats.get("argument_size_in_bytes", 0)
+            + mem_stats.get("output_size_in_bytes", 0)
+            + mem_stats.get("temp_size_in_bytes", 0)
+            - mem_stats.get("alias_size_in_bytes", 0))
+
 
 def _shape_bytes(dtype: str, dims: str) -> int:
     if dtype not in _DTYPE_BYTES:
@@ -121,11 +173,9 @@ def analyze_compiled(compiled, *, chips: int, hw: HW = HW(),
                      tokens: Optional[float] = None,
                      kind: str = "train") -> Dict[str, Any]:
     """Derive the three roofline terms + diagnostics from a compiled module."""
-    ca = compiled.cost_analysis()
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0]
-    flops_dev = float(ca.get("flops", 0.0))
-    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    cs = compiled_cost_stats(compiled) or {}
+    flops_dev = cs.get("flops", 0.0)
+    bytes_dev = cs.get("bytes_accessed", 0.0)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     counts = count_collective_ops(hlo)
@@ -139,16 +189,9 @@ def analyze_compiled(compiled, *, chips: int, hw: HW = HW(),
              "collective": t_collective}
     dominant = max(terms, key=terms.get)
 
-    mem_stats = {}
-    try:
-        ma = compiled.memory_analysis()
-        for k in ("argument_size_in_bytes", "output_size_in_bytes",
-                  "temp_size_in_bytes", "generated_code_size_in_bytes",
-                  "alias_size_in_bytes"):
-            if hasattr(ma, k):
-                mem_stats[k] = int(getattr(ma, k))
-    except Exception as e:  # CPU backend may not implement it
-        mem_stats["error"] = str(e)
+    mem_stats = compiled_memory_stats(compiled)
+    if mem_stats is None:  # CPU backend / old jax may not implement it
+        mem_stats = {"error": "memory_analysis unavailable on this backend"}
 
     result = {
         "chips": chips,

@@ -39,6 +39,7 @@ from repro.graphs.partition import partition_graph
 from repro.kernels.ops import count_pallas_calls
 from repro.obs.metrics import (AGE_BUCKETS_STEPS, LATENCY_BUCKETS_MS,
                                Histogram, get_registry, summarize)
+from repro.obs.memory import probe_jit
 from repro.obs.trace import span
 from repro.serve.buckets import (
     BucketSpec,
@@ -244,7 +245,7 @@ class ServeEngine:
         self.stats = ServeStats()
         self._encode_jit: Dict[int, Any] = {}
         self._pallas_per_launch: Dict[int, int] = {}
-        self._head_fn = jax.jit(self._head_impl)
+        self._head_fn = probe_jit("serve.head", jax.jit(self._head_impl))
         self._request_counter = 0
 
     def close(self):
@@ -267,8 +268,9 @@ class ServeEngine:
     def _encode_bucket(self, bi: int, seg_inputs: Dict[str, np.ndarray]) -> jnp.ndarray:
         if bi not in self._encode_jit:
             gc = self.gnn_cfg
-            self._encode_jit[bi] = jax.jit(
-                lambda p, si: encode_segments(p, gc, si))
+            self._encode_jit[bi] = probe_jit(
+                f"serve.encode.{self.ladder[bi].key}",
+                jax.jit(lambda p, si: encode_segments(p, gc, si)))
             dev_inputs = {k: jnp.asarray(v) for k, v in seg_inputs.items()}
             self._pallas_per_launch[bi] = count_pallas_calls(
                 lambda p: encode_segments(p, gc, dev_inputs), self.params)
@@ -466,8 +468,8 @@ class ServeEngine:
                                  seed=self.cfg.partition_seed,
                                  partition_max_nodes=self.cfg.max_seg_nodes)
         if not hasattr(self, "_stream"):
-            self._stream = make_stream_encoder(
-                self.gnn_cfg, head_mode=self.cfg.head_mode, agg=self.cfg.agg)
+            self._stream = probe_jit("serve.stream", make_stream_encoder(
+                self.gnn_cfg, head_mode=self.cfg.head_mode, agg=self.cfg.agg))
         pred, _ = self._stream(self.params, self.head,
                                {k: jnp.asarray(v) for k, v in chunks.items()})
         return np.asarray(pred)

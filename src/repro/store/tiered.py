@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core import embedding_table as tbl
 from repro.kernels.ops import pad_rows_pow2, pad_leading
+from repro.obs.memory import get_probe, probe_jit
 from repro.obs.trace import span
 from repro.store.base import (EmbeddingStore, PreparedMigration,
                               device_rows_per_shard)
@@ -84,9 +85,11 @@ class TieredStore(EmbeddingStore):
         self._done_ticket = 0
         self._wb_exc: Optional[BaseException] = None  # failed write-back
         donate_args = (0,) if donate else ()
-        self._migrate = jax.jit(self._migrate_impl, donate_argnums=donate_args)
-        self._upload = jax.jit(self._upload_impl, donate_argnums=donate_args)
-        self._gather_ev = jax.jit(self._gather_impl)
+        self._migrate = probe_jit("store.migrate", jax.jit(
+            self._migrate_impl, donate_argnums=donate_args))
+        self._upload = probe_jit("store.upload", jax.jit(
+            self._upload_impl, donate_argnums=donate_args))
+        self._gather_ev = probe_jit("store.gather", jax.jit(self._gather_impl))
 
     # -- geometry ----------------------------------------------------------
 
@@ -347,6 +350,18 @@ class TieredStore(EmbeddingStore):
 
     def flush_writebacks(self) -> None:
         self._writer.flush()
+
+    def host_tier_bytes(self) -> int:
+        """Bytes of the host-tier numpy arrays over the LOGICAL n_rows —
+        matches ``snapshot()``'s nbytes exactly (the pow2 row padding is an
+        allocation detail, not table state)."""
+        return sum(int(x[:self.n_rows].nbytes) for x in self._host)
+
+    def publish_counters(self) -> None:
+        super().publish_counters()
+        p = get_probe()
+        if p.enabled:
+            p.observe_host("store.host_tier", self.host_tier_bytes())
 
     def snapshot(self, table: tbl.EmbeddingTable) -> tbl.EmbeddingTable:
         """Dense (n_rows, J, d) host view: host tier overlaid with every
