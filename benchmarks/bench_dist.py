@@ -19,9 +19,17 @@ Usage:
     PYTHONPATH=src python benchmarks/bench_dist.py --quick    # CI-sized
     PYTHONPATH=src python benchmarks/bench_dist.py --exchange bucketed
 
+Each cell is also timed through the lookahead prefetch lane
+(``--prefetch-lookups``: next batch's lookup dispatched while the step
+runs, write-back restored by the fused patch) and the summary gates
+that prefetch-on step ms and host-blocked ms/batch are no worse than
+inline (``--strict`` enforces, with --prefetch-tolerance slack for CPU
+noise).
+
 Forces an 8-device CPU host via XLA_FLAGS when run without one (set the
 flag yourself to override).  Writes ``BENCH_gst_dist.json`` merge-keyed
-by config+backend+jax version, like BENCH_gst_step.json.
+by config+backend+device_kind+jax version, like BENCH_gst_step.json
+(pre-device_kind keys are migrated as ``device_kind=cpu``).
 """
 from __future__ import annotations
 
@@ -93,9 +101,87 @@ def _make_step(ds, ctx, *, hidden: int):
     return one, step, holder
 
 
+def _make_prefetch_parts(ds, ctx, *, hidden: int):
+    """Prefetch-mode twin of ``_make_step``: the prefetched train step,
+    the lane's lookup collective, and a fresh state holder."""
+    enc, opt, state = _fresh_state(ds, hidden)
+    pstep = DT.make_dist_train_step(enc, opt, G.VARIANTS[VARIANT], ctx=ctx,
+                                    keep_prob=0.5, num_sampled=NUM_SAMPLED)
+    pf = DT.make_prefetch_lookup(ctx)
+    state = DT.device_state(ctx, state)
+    return pstep, pf, {"state": state, "i": 0}
+
+
+def _time_prefetch_cell(ds, ctx, ids, *, hidden: int, n_iters: int,
+                        warmup: int):
+    """Steady-state prefetch step time on one repeated batch: each timed
+    iteration dispatches the NEXT lookup then runs the step that consumes
+    the previous one — the launcher's per-step host work.  Repeating one
+    batch makes every row its own next-batch consumer (all-overlap), the
+    adversarial maximum for the fused patch."""
+    pstep, pf, holder = _make_prefetch_parts(ds, ctx, hidden=hidden)
+    batch = DT.shard_batch(ctx, DP._assemble(ds, ids))
+    bsh = DT.batch_sharding(ctx)
+    ids_np = np.asarray(ids)
+    dest = EXC.consumer_shards(ids_np, ids_np, num_shards=ctx.num_shards,
+                               rows=ctx.table_rows)
+    dest_dev = jax.device_put(np.asarray(dest, np.int32), bsh)
+    ids_dev = batch.graph_ids
+    pref = pf(holder["state"].table, ids_dev)
+    times = []
+    for it in range(warmup + n_iters):
+        t0 = time.perf_counter()
+        nxt = pf(holder["state"].table, ids_dev)
+        holder["state"], m, pref = pstep(
+            holder["state"], batch, jax.random.PRNGKey(holder["i"]),
+            pref, nxt, ids_dev, dest_dev)
+        holder["i"] += 1
+        jax.block_until_ready(m["loss"])
+        if it >= warmup:
+            times.append((time.perf_counter() - t0) * 1e3)
+    return summarize(times)
+
+
+def _prefetch_feeder_ms(ds, sched, ctx, *, hidden: int):
+    """Host-blocked ms/batch of the async feeder driven through the
+    prefetch lane + prefetched step over the whole epoch trace — the
+    prefetch-on twin of the sync/async feeder comparison."""
+    pstep, pf, holder = _make_prefetch_parts(ds, ctx, hidden=hidden)
+    bsh = DT.batch_sharding(ctx)
+    sentinel = ctx.num_shards * ctx.table_rows
+    put = lambda b: (np.asarray(b.graph_ids), DT.shard_batch(ctx, b))
+    feeder = DP.make_feeder("async", ds, sched, put, depth=2)
+    lane = DP.PrefetchLane(
+        feeder, lambda item: pf(holder["state"].table, item[1].graph_ids))
+    pref, m = None, None
+    for (ids, batch), cur_h, nxt, nxt_h in lane:
+        if pref is None:
+            pref = cur_h
+        if nxt is not None:
+            next_ids, next_pair = nxt[1].graph_ids, nxt_h
+            dest = EXC.consumer_shards(ids, nxt[0],
+                                       num_shards=ctx.num_shards,
+                                       rows=ctx.table_rows)
+        else:
+            B = ids.shape[0]
+            next_ids = jax.device_put(np.full((B,), sentinel, np.int32), bsh)
+            next_pair = (
+                jax.device_put(np.zeros((B, ds.j_max, hidden), np.float32),
+                               bsh),
+                jax.device_put(np.zeros((B, ds.j_max), bool), bsh))
+            dest = np.full((B,), ctx.num_shards, np.int32)
+        dest_dev = jax.device_put(np.asarray(dest, np.int32), bsh)
+        holder["state"], m, pref = pstep(
+            holder["state"], batch, jax.random.PRNGKey(holder["i"]),
+            pref, next_pair, next_ids, dest_dev)
+        holder["i"] += 1
+    jax.block_until_ready(m["loss"])
+    return round(feeder.stats.host_blocked_ms_per_batch, 3)
+
+
 def bench_device_count(ds, n_dev: int, *, batch_size: int, hidden: int,
                        n_iters: int, warmup: int = 2, exchange="all",
-                       payload="all"):
+                       payload="all", prefetch=True):
     mesh = DT.make_dist_mesh(n_dev)
     # deterministic shuffled trace: unshuffled contiguous batches are the
     # all-rows-on-one-owner adversarial case, which would pin the bucketed
@@ -142,25 +228,52 @@ def bench_device_count(ds, n_dev: int, *, batch_size: int, hidden: int,
                 t0 = time.perf_counter()
                 jax.block_until_ready(one(batch))
                 times.append((time.perf_counter() - t0) * 1e3)
+            t = summarize(times)
+            cell = {
+                "train_ms": round(t["p50"], 3),
+                "train_ms_p99": round(t["p99"], 3),
+            }
+            if prefetch:
+                # the same cell through the lookahead lane: repeated
+                # batch => all-overlap, so the patch hop is maximal
+                pcap = EXC.required_patch_capacity(
+                    sched[0], sched[0], num_shards=n_dev,
+                    rows=rows_per_shard) if name == "bucketed" else None
+                pctx = DT.make_context(mesh, ds.n, exchange=name,
+                                       exchange_cap=cap
+                                       if name == "bucketed" else None,
+                                       payload_dtype=dt, prefetch=True,
+                                       patch_cap=pcap)
+                pt = _time_prefetch_cell(ds, pctx, sched[0], hidden=hidden,
+                                         n_iters=n_iters, warmup=warmup)
+                pex = EXC.make_exchange(name, axis_name=DT.AXIS,
+                                        num_shards=n_dev,
+                                        rows=pctx.table_rows,
+                                        cap=pctx.exchange_cap,
+                                        payload_dtype=dt, patch_cap=pcap)
+                cell["prefetch"] = {
+                    "train_ms": round(pt["p50"], 3),
+                    "train_ms_p99": round(pt["p99"], 3),
+                    "bytes_per_step_per_device":
+                        pex.prefetch_train_step_bytes(
+                            b_local, ds.j_max, NUM_SAMPLED, hidden,
+                            use_table=True),
+                }
             ex = EXC.make_exchange(name, axis_name=DT.AXIS,
                                    num_shards=n_dev, rows=ctx.table_rows,
                                    cap=ctx.exchange_cap, payload_dtype=dt)
-            t = summarize(times)
-            per_strategy[name][dt] = {
-                "train_ms": round(t["p50"], 3),
-                "train_ms_p99": round(t["p99"], 3),
-                "bytes_per_step_per_device": ex.train_step_bytes(
-                    b_local, ds.j_max, NUM_SAMPLED, hidden, use_table=True),
-            }
+            cell["bytes_per_step_per_device"] = ex.train_step_bytes(
+                b_local, ds.j_max, NUM_SAMPLED, hidden, use_table=True)
+            per_strategy[name][dt] = cell
             if feeder_parts is None or (name == "ring" and dt == "f32"):
-                feeder_parts = (ctx, one, holder, put)
+                feeder_parts = (ctx, one, holder, put, name)
 
     # feeder comparison on the SAME trace (async must beat sync on
     # host-blocked ms — CI enforces it via --strict), through the ring
     # step when timed, else the first timed strategy (feeder timing is
     # about host work, not the exchange)
     feeder_rows = {}
-    ctx, one, holder, put = feeder_parts
+    ctx, one, holder, put, feeder_strategy = feeder_parts
     for kind in ("sync", "async"):
         feeder = DP.make_feeder(kind, ds, sched, put, depth=2)
         m = None
@@ -168,6 +281,18 @@ def bench_device_count(ds, n_dev: int, *, batch_size: int, hidden: int,
             m = one(b)
         jax.block_until_ready(m)
         feeder_rows[kind] = round(feeder.stats.host_blocked_ms_per_batch, 3)
+    if prefetch:
+        # prefetch-on leg of the same trace through the same strategy
+        pcap = EXC.plan_patch_capacity(sched, num_shards=n_dev,
+                                       rows=rows_per_shard) \
+            if feeder_strategy == "bucketed" else None
+        pctx = DT.make_context(mesh, ds.n, exchange=feeder_strategy,
+                               exchange_cap=cap
+                               if feeder_strategy == "bucketed" else None,
+                               payload_dtype=ctx.payload_dtype,
+                               prefetch=True, patch_cap=pcap)
+        feeder_rows["prefetch"] = _prefetch_feeder_ms(ds, sched, pctx,
+                                                      hidden=hidden)
 
     flat_name = "ring" if "ring" in per_strategy else \
         next(iter(per_strategy))
@@ -190,7 +315,44 @@ def bench_device_count(ds, n_dev: int, *, batch_size: int, hidden: int,
             per_strategy[flat_name][flat_dt]["bytes_per_step_per_device"],
         "host_blocked_ms_sync": feeder_rows["sync"],
         "host_blocked_ms_async": feeder_rows["async"],
+        "host_blocked_ms_prefetch": feeder_rows.get("prefetch"),
     }
+
+
+def _prefetch_step_totals(results):
+    """(inline_total_ms, prefetch_total_ms) over the timed prefetch
+    cells; (None, None) if none timed.  The strict gate compares TOTALS
+    — same reasoning as async_beats_sync_total: individual quick cells
+    on a shared CPU host bounce tens of percent either way, the sum
+    across strategies x dtypes x device counts is the stable signal."""
+    inline, pref = 0.0, 0.0
+    n = 0
+    for r in results:
+        for by_dt in r["exchange"].values():
+            for cell in by_dt.values():
+                p = cell.get("prefetch")
+                if p:
+                    inline += cell["train_ms"]
+                    pref += p["train_ms"]
+                    n += 1
+    return (inline, pref) if n else (None, None)
+
+
+def _prefetch_step_no_worse_per_cell(results, *, tol_frac, tol_abs_ms):
+    """True iff every timed prefetch cell's p50 step ms is no worse than
+    its inline twin (within CPU-noise tolerance); None if none timed.
+    Informative (WARNING) only — per-cell quick timings are too noisy to
+    gate on, the strict gate uses the totals."""
+    checks = []
+    for r in results:
+        for by_dt in r["exchange"].values():
+            for cell in by_dt.values():
+                p = cell.get("prefetch")
+                if p:
+                    checks.append(
+                        p["train_ms"] <= cell["train_ms"] * (1 + tol_frac)
+                        + tol_abs_ms)
+    return all(checks) if checks else None
 
 
 def _auto_is_min_bytes(results):
@@ -235,6 +397,13 @@ def main():
                     choices=["all", "f32", "bf16", "int8"],
                     help="which wire payload dtypes to sweep per strategy "
                          "(multi-device rows only; one shard is always f32)")
+    ap.add_argument("--prefetch", default="on", choices=["on", "off"],
+                    help="also time every cell through the lookahead "
+                         "prefetch lane (--prefetch-lookups) and record "
+                         "the prefetch-vs-inline step/host-blocked gate")
+    ap.add_argument("--prefetch-tolerance", type=float, default=0.25,
+                    help="fractional slack for the prefetch-no-worse "
+                         "gates (CPU timing noise; 0.25 = within 25%%)")
     ap.add_argument("--out", default=os.path.join(_REPO, "BENCH_gst_dist.json"))
     ap.add_argument("--n-graphs", type=int, default=None)
     ap.add_argument("--iters", type=int, default=None)
@@ -252,21 +421,24 @@ def main():
               if c <= jax.device_count() and args.batch_size % c == 0]
     results = []
     print(f"{'devices':>7s} {'strategy':>9s} {'payload':>7s} "
-          f"{'train ms':>9s} {'xchg KiB':>9s} {'sync ms':>8s} "
-          f"{'async ms':>9s}")
+          f"{'train ms':>9s} {'pref ms':>8s} {'xchg KiB':>9s} "
+          f"{'sync ms':>8s} {'async ms':>9s}")
     for n_dev in counts:
         row = bench_device_count(ds, n_dev, batch_size=args.batch_size,
                                  hidden=args.hidden, n_iters=n_iters,
                                  exchange=args.exchange,
-                                 payload=args.payload_dtype)
+                                 payload=args.payload_dtype,
+                                 prefetch=args.prefetch == "on")
         results.append(row)
         for name, by_dt in row["exchange"].items():
             for dt, r in by_dt.items():
                 mark = (" <- auto"
                         if name == row["auto_exchange_by_dtype"].get(dt)
                         else "")
+                pref_ms = (f"{r['prefetch']['train_ms']:8.2f}"
+                           if "prefetch" in r else f"{'-':>8s}")
                 print(f"{row['device_count']:7d} {name:>9s} {dt:>7s} "
-                      f"{r['train_ms']:9.2f} "
+                      f"{r['train_ms']:9.2f} {pref_ms} "
                       f"{r['bytes_per_step_per_device'] / 1024:9.1f} "
                       f"{row['host_blocked_ms_sync']:8.2f} "
                       f"{row['host_blocked_ms_async']:9.2f}{mark}",
@@ -297,24 +469,56 @@ def main():
         # dtypes were swept there)
         "int8_over_f32_bytes": _compression_ratios(results),
     }
+    pref_hb = [r for r in results
+               if r.get("host_blocked_ms_prefetch") is not None]
+    tol = args.prefetch_tolerance
+    step_inline_total, step_pref_total = _prefetch_step_totals(results)
+    hb_pref_total = round(
+        sum(r["host_blocked_ms_prefetch"] for r in pref_hb), 3) \
+        if pref_hb else None
+    hb_async_total = round(
+        sum(r["host_blocked_ms_async"] for r in pref_hb), 3) \
+        if pref_hb else None
+    summary.update({
+        # prefetch acceptance: the lookahead lane must be no worse than
+        # inline on TOTAL step ms across timed cells and TOTAL
+        # host-blocked ms/batch (vs the async feeder on the same trace);
+        # None when not timed.  Per-cell step comparisons stay in the
+        # summary as a WARNING-only signal (quick cells are noisy).
+        "prefetch_step_no_worse": (
+            None if step_pref_total is None else
+            step_pref_total <= step_inline_total * (1 + tol) + 0.25),
+        "prefetch_step_ms_inline_total": (
+            None if step_inline_total is None
+            else round(step_inline_total, 3)),
+        "prefetch_step_ms_total": (
+            None if step_pref_total is None else round(step_pref_total, 3)),
+        "prefetch_step_no_worse_per_cell": _prefetch_step_no_worse_per_cell(
+            results, tol_frac=tol, tol_abs_ms=0.25),
+        "prefetch_host_blocked_no_worse": (
+            None if hb_pref_total is None else
+            hb_pref_total <= hb_async_total * (1 + tol) + 0.25),
+        "host_blocked_ms_prefetch_total": hb_pref_total,
+    })
     config = {
         "n_graphs": n_graphs, "batch_size": args.batch_size,
         "hidden": args.hidden, "max_seg_nodes": args.max_seg_nodes,
         "bucket": spec.key, "j_max": ds.j_max, "e_max": ds.e_max,
         "iters": n_iters, "quick": args.quick, "exchange": args.exchange,
-        "payload": args.payload_dtype,
+        "payload": args.payload_dtype, "prefetch": args.prefetch,
     }
     env = {
         "backend": jax.default_backend(),
         "jax": jax.__version__,
         "device_count": jax.device_count(),
+        "device_kind": jax.devices()[0].device_kind,
         "pallas_interpret": jax.default_backend() != "tpu",
     }
     entry = {"summary": summary, "config": config, "env": env,
              "results": results}
     run_key = ",".join(f"{k}={v}" for k, v in sorted(config.items())) + \
-        f",backend={env['backend']},jax={env['jax']}," \
-        f"device_count={env['device_count']}"
+        f",backend={env['backend']},device_kind={env['device_kind']}," \
+        f"jax={env['jax']},device_count={env['device_count']}"
     payload = {"benchmark": "gst_dist", "unit": "ms_per_iter", "runs": {}}
     if os.path.exists(args.out):
         try:
@@ -322,6 +526,13 @@ def main():
                 prev = json.load(f)
             if prev.get("benchmark") == "gst_dist" and \
                     isinstance(prev.get("runs"), dict):
+                # pre-device_kind keys were all CPU-host runs: re-key them
+                # under device_kind=cpu so the same config timed on a real
+                # accelerator tracks as its own row instead of clobbering
+                prev["runs"] = {
+                    (k if "device_kind=" in k
+                     else k.replace(",jax=", ",device_kind=cpu,jax=", 1)): v
+                    for k, v in prev["runs"].items()}
                 payload = prev
         except (json.JSONDecodeError, OSError):
             pass
@@ -333,9 +544,23 @@ def main():
     if not summary["async_beats_sync"]:
         print("WARNING: async pipeline did not beat the synchronous feeder "
               "on host-blocked ms for every device count", file=sys.stderr)
+    if summary["prefetch_step_no_worse_per_cell"] is False:
+        print("WARNING: prefetch-on step ms exceeded the inline step "
+              "beyond tolerance on at least one timed cell (totals gate "
+              "below is the authoritative check)", file=sys.stderr)
     if args.strict and not summary["async_beats_sync_total"]:
         print(f"STRICT: async total host-blocked ms ({async_total:.2f}) did "
               f"not beat sync ({sync_total:.2f})", file=sys.stderr)
+        sys.exit(2)
+    if args.strict and (summary["prefetch_step_no_worse"] is False or
+                        summary["prefetch_host_blocked_no_worse"] is False):
+        print("STRICT: the prefetch lane was worse than the inline "
+              "exchange (total step ms "
+              f"{summary['prefetch_step_ms_total']} vs inline "
+              f"{summary['prefetch_step_ms_inline_total']}, or total "
+              f"host-blocked ms {summary['host_blocked_ms_prefetch_total']} "
+              f"vs async, beyond {args.prefetch_tolerance:.0%} tolerance)",
+              file=sys.stderr)
         sys.exit(2)
 
 

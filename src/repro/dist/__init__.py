@@ -8,29 +8,34 @@ Force a multi-device host for CPU development/CI with
 initializes; ``python -m repro.launch.train_dist`` does it for you).
 """
 from repro.dist.exchange import (EXCHANGES, PAYLOAD_DTYPES, Exchange,
-                                 PayloadCodec, make_exchange,
-                                 measured_exchange_bytes, pad_ragged,
-                                 plan_capacity, required_capacity,
-                                 select_exchange)
-from repro.dist.pipeline import (AsyncSegmentFeeder, SyncSegmentFeeder,
-                                 epoch_ids, make_feeder,
+                                 PayloadCodec, consumer_shards,
+                                 make_exchange, measured_exchange_bytes,
+                                 pad_ragged, plan_capacity,
+                                 plan_patch_capacity, required_capacity,
+                                 required_patch_capacity, select_exchange)
+from repro.dist.pipeline import (AsyncSegmentFeeder, PrefetchLane,
+                                 SyncSegmentFeeder, epoch_ids, make_feeder,
                                  segment_dataset_shared, shared_bucket)
 from repro.dist.train import (AXIS, DistContext, batch_sharding, device_state,
                               device_table, host_table, make_context,
                               make_dist_eval_step, make_dist_finetune_step,
                               make_dist_mesh, make_dist_refresh_step,
                               make_dist_store, make_dist_train_step,
-                              replicate, shard_batch)
+                              make_prefetch_lookup, replicate, shard_batch)
 
 __all__ = [
     "AXIS", "AsyncSegmentFeeder", "DistContext", "EXCHANGES",
-    "Exchange", "PAYLOAD_DTYPES", "PayloadCodec", "SyncSegmentFeeder",
-    "batch_sharding", "device_state", "device_table", "epoch_ids",
-    "host_table",
+    "Exchange", "PAYLOAD_DTYPES", "PayloadCodec", "PrefetchLane",
+    "SyncSegmentFeeder",
+    "batch_sharding", "consumer_shards", "device_state", "device_table",
+    "epoch_ids", "host_table",
     "make_context", "make_dist_eval_step", "make_dist_finetune_step",
     "make_dist_mesh", "make_dist_refresh_step", "make_dist_store",
     "make_dist_train_step", "make_exchange", "make_feeder",
-    "measured_exchange_bytes", "pad_ragged", "plan_capacity", "replicate",
-    "required_capacity", "segment_dataset_shared", "select_exchange",
+    "make_prefetch_lookup",
+    "measured_exchange_bytes", "pad_ragged", "plan_capacity",
+    "plan_patch_capacity", "replicate",
+    "required_capacity", "required_patch_capacity",
+    "segment_dataset_shared", "select_exchange",
     "shard_batch", "shared_bucket",
 ]

@@ -61,6 +61,25 @@ seg_valid / initialized stay exact, f32 is the identity codec (the
 bit-exactness contract above keeps its teeth), and the bytes models —
 still asserted against ``measured_exchange_bytes`` — shrink accordingly,
 moving the ``select_exchange`` crossover points per (shard count, dtype).
+
+Prefetched lookups (``--prefetch-lookups``): the lookup for batch k+1 can
+be dispatched as its OWN jitted collective while step k's device work is
+in flight (``prefetch_lookup`` — same collectives as ``lookup``, so it
+moves the same bytes, just earlier).  The buffer it returns is stale by
+exactly the <= B_local*S rows step k itself writes back, so every
+strategy grows ``update_sampled_patch``: the fused write-back that ALSO
+patches the prefetched (B_local, J, d) buffer with the rows it is about
+to write.  For ``ring`` and ``alltoall`` the write payload already
+visits every shard, so the patch rides the existing hops and adds ZERO
+wire bytes (``patch_bytes`` == 0, asserted vs the jaxpr).  ``bucketed``
+writes travel owner-direct, so its patch is a genuinely tiny extra hop:
+each wb row whose id reappears in the next batch travels once to the
+shard that prefetched it (routing planned host-side — ``consumer_shards``
+/ ``plan_patch_capacity`` — like the write buckets), costing
+``(D-1) * patch_cap`` wb rows per device.  At f32 the patched buffer is
+BIT-exact vs an inline lookup of the post-write table; under bf16/int8
+the patch delivers the table's stored (write-rounded) value without the
+read-side re-rounding — inside the existing bounded-error contract.
 """
 from __future__ import annotations
 
@@ -193,16 +212,24 @@ class Exchange:
     (``PayloadCodec``).  Forced to the f32 identity at num_shards == 1,
     where nothing crosses a wire — single-shard runs stay bit-exact no
     matter the setting.
+
+    ``patch_cap`` (bucketed only): per-(device, consumer) bucket capacity
+    of the prefetch patch hop (``update_sampled_patch``).  Same contract
+    as ``cap``: None falls back to the trace-time B_local, a host-planned
+    value (``plan_patch_capacity``) makes it tiny, and exceeding it means
+    silent truncation — validate with ``required_patch_capacity``.
     """
 
     name = "?"
 
     def __init__(self, *, axis_name: str, num_shards: int, rows: int,
-                 cap: Optional[int] = None, payload_dtype: str = "f32"):
+                 cap: Optional[int] = None, payload_dtype: str = "f32",
+                 patch_cap: Optional[int] = None):
         self.axis_name = axis_name
         self.num_shards = num_shards
         self.rows = rows
         self.cap = cap
+        self.patch_cap = patch_cap
         self.payload_dtype = "f32" if num_shards <= 1 else payload_dtype
         self.codec = PayloadCodec(self.payload_dtype, axis_name=axis_name)
 
@@ -226,6 +253,75 @@ class Exchange:
                    seg_valid, step) -> tbl.EmbeddingTable:
         raise NotImplementedError
 
+    # -- prefetch lane (lookahead lookup + fused write-back patch) ---------
+
+    def prefetch_lookup(self, table: tbl.EmbeddingTable, graph_ids
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """The lookup for the NEXT batch, dispatched as its own jitted
+        collective while the current step is in flight.  Identical
+        collectives (and bytes) to ``lookup`` — prefetch moves the same
+        traffic EARLIER, it adds none.  The result is stale by exactly
+        the rows the in-flight step writes back; ``update_sampled_patch``
+        repairs those."""
+        return self.lookup(table, graph_ids)
+
+    def update_sampled_patch(self, table: tbl.EmbeddingTable, graph_ids,
+                             seg_idx, h_new, step, pref, next_ids,
+                             next_dest=None):
+        """Fused ``update_sampled`` + prefetched-buffer patch.
+
+        Applies the sampled write-back to the table exactly like
+        ``update_sampled`` AND patches ``pref`` — the next batch's
+        prefetched ``(emb (B, J, d), initialized (B, J))`` pair, looked
+        up from the PRE-write table — with the rows this write is about
+        to make stale.  ``next_ids`` is this device's (B,) slice of the
+        next batch's global ids (sentinel-padded when ragged; sentinel
+        slots are never patched).  ``next_dest`` is only consumed by the
+        bucketed strategy: the host-planned (B_local,) consumer shard of
+        each write row (``consumer_shards``; ``num_shards`` = no
+        consumer).
+
+        Returns ``(new_table, (patched_emb, patched_init))``.  At f32 the
+        patched pair is bit-exact vs ``lookup(new_table, next_ids)``; at
+        bf16/int8 it holds the table's stored (write-rounded) values —
+        i.e. it SKIPS the read-side re-rounding an inline lookup would
+        add, staying inside the bounded-error contract.
+        """
+        raise NotImplementedError
+
+    def _local_update_patch(self, table, graph_ids, seg_idx, h_new, step,
+                            pref, next_ids):
+        """num_shards == 1 fused path: local scatter + local patch."""
+        local_row = self._local_write_rows(graph_ids)
+        table = tbl.update_sampled(table, local_row, seg_idx, h_new, step,
+                                   mode="drop")
+        emb, init = self._apply_patch(pref[0], pref[1], next_ids,
+                                      graph_ids, seg_idx, h_new)
+        return table, (emb, init)
+
+    def _apply_patch(self, pref_emb, pref_init, next_ids, g_ids, g_sidx,
+                     g_h):
+        """Scatter decoded write rows ``(g_ids (G,), g_sidx (G, S),
+        g_h (G, S, d))`` onto the prefetched ``(B, J, d)`` buffer wherever
+        their id appears in ``next_ids`` (B,).  Purely local — no
+        collectives.  Sentinel ids on either side never match (write-side
+        sentinels are masked, a sentinel in ``next_ids`` exceeds every
+        real id), so ragged padding no-ops.  Ids are unique within a
+        batch, so each next-batch row has at most one matching write row
+        and ``argmax`` over the match matrix is exact."""
+        B, J = pref_init.shape[:2]
+        match = ((g_ids[:, None] == next_ids[None, :])
+                 & (g_ids[:, None] < self.sentinel))        # (G, B)
+        has = match.any(axis=0)
+        g_of = jnp.argmax(match, axis=0)                    # (B,)
+        idx_j = jnp.where(has[:, None], g_sidx[g_of], J)    # J => dropped
+        b_idx = jnp.arange(B)[:, None]
+        emb = pref_emb.at[b_idx, idx_j].set(
+            g_h[g_of].astype(pref_emb.dtype), mode="drop")
+        init = pref_init.at[b_idx, idx_j].set(
+            jnp.ones((), pref_init.dtype), mode="drop")
+        return emb, init
+
     # -- analytic per-device bytes (match measured_exchange_bytes) ---------
 
     def lookup_bytes(self, b_local: int, j_max: int, d_h: int) -> int:
@@ -246,6 +342,37 @@ class Exchange:
             return 0
         return (self.lookup_bytes(b_local, j_max, d_h)
                 + self.update_sampled_bytes(b_local, s, d_h))
+
+    def prefetch_lookup_bytes(self, b_local: int, j_max: int,
+                              d_h: int) -> int:
+        """Same collectives as ``lookup`` — prefetch moves bytes earlier,
+        it adds none."""
+        return self.lookup_bytes(b_local, j_max, d_h)
+
+    def patch_bytes(self, b_local: int, s: int, d_h: int) -> int:
+        """EXTRA wire bytes ``update_sampled_patch`` moves beyond
+        ``update_sampled``.  0 for ring/alltoall: their write payload
+        already visits every shard, so the patch rides the existing hops.
+        Only bucketed (owner-direct writes never reach the consumers)
+        pays a real — tiny, patch_cap-sized — extra hop."""
+        return 0
+
+    def update_sampled_patch_bytes(self, b_local: int, s: int,
+                                   d_h: int) -> int:
+        return (self.update_sampled_bytes(b_local, s, d_h)
+                + self.patch_bytes(b_local, s, d_h))
+
+    def prefetch_train_step_bytes(self, b_local: int, j_max: int, s: int,
+                                  d_h: int, *, use_table: bool) -> int:
+        """Per-device exchange traffic of one PREFETCHED dist train step:
+        the next batch's prefetch lookup (same bytes as inline, just
+        earlier) + the fused write-back-and-patch.  Net extra over
+        ``train_step_bytes`` is exactly ``patch_bytes`` — 0 except
+        bucketed."""
+        if not use_table:
+            return 0
+        return (self.prefetch_lookup_bytes(b_local, j_max, d_h)
+                + self.update_sampled_patch_bytes(b_local, s, d_h))
 
     # -- shared local fallbacks (num_shards == 1: no collectives) ----------
 
@@ -334,6 +461,30 @@ class RingExchange(Exchange):
                 ids, sidx, *parts = _hop(self.axis_name, num_shards,
                                          ids, sidx, *parts)
         return table
+
+    def update_sampled_patch(self, table, graph_ids, seg_idx, h_new, step,
+                             pref, next_ids, next_dest=None):
+        """Fused write-back + patch on the SAME D-1 ring hops: the write
+        buffer already visits every shard, so each shard patches its
+        prefetched buffer with the passing rows as it applies the ones it
+        owns — zero added wire bytes (asserted vs the jaxpr)."""
+        emb, init = pref
+        ids, sidx = graph_ids, seg_idx
+        parts = self.codec.encode_write(h_new, step)
+        me = jax.lax.axis_index(self.axis_name)
+        rows, num_shards = self.rows, self.num_shards
+        for t in range(num_shards):
+            mine = (ids // rows) == me
+            local_row = jnp.where(mine, ids - me * rows, rows)  # => dropped
+            h_dec = self.codec.decode(parts)
+            table = tbl.update_sampled(table, local_row, sidx, h_dec, step,
+                                       mode="drop")
+            emb, init = self._apply_patch(emb, init, next_ids,
+                                          ids, sidx, h_dec)
+            if t < num_shards - 1:
+                ids, sidx, *parts = _hop(self.axis_name, num_shards,
+                                         ids, sidx, *parts)
+        return table, (emb, init)
 
     def update_all(self, table, graph_ids, h_all, seg_valid, step):
         """Distributed ``tbl.update_all`` (refresh phase) over the ring."""
@@ -425,6 +576,8 @@ class AllToAllExchange(Exchange):
                 i_back[owner, r])
 
     def _gathered_writes(self, graph_ids, *payloads):
+        """all_gather the global write buffers; returns the RAW gathered
+        ids too (the fused patch reuses them — no second gather)."""
         ax = self.axis_name
         ids = jax.lax.all_gather(graph_ids, ax).reshape(-1)
         flat = [jax.lax.all_gather(p, ax).reshape((-1,) + p.shape[1:])
@@ -432,7 +585,7 @@ class AllToAllExchange(Exchange):
         me = jax.lax.axis_index(ax)
         mine = (ids // self.rows) == me
         local_row = jnp.where(mine, ids - me * self.rows, self.rows)
-        return (local_row, *flat)
+        return (ids, local_row, *flat)
 
     def update_sampled(self, table, graph_ids, seg_idx, h_new, step):
         if self.num_shards == 1:
@@ -440,11 +593,31 @@ class AllToAllExchange(Exchange):
             return tbl.update_sampled(table, local_row, seg_idx, h_new,
                                       step, mode="drop")
         parts = self.codec.encode_write(h_new, step)
-        local_row, sidx, *eparts = self._gathered_writes(
+        _, local_row, sidx, *eparts = self._gathered_writes(
             graph_ids, seg_idx, *parts)
         return tbl.update_sampled(table, local_row, sidx,
                                   self.codec.decode(eparts), step,
                                   mode="drop")
+
+    def update_sampled_patch(self, table, graph_ids, seg_idx, h_new, step,
+                             pref, next_ids, next_dest=None):
+        """Fused write-back + patch on the SAME all_gathers: every shard
+        already receives the full global write buffer, so the patch is a
+        local scatter over it — zero added wire bytes (asserted vs the
+        jaxpr)."""
+        emb, init = pref
+        if self.num_shards == 1:
+            return self._local_update_patch(table, graph_ids, seg_idx,
+                                            h_new, step, pref, next_ids)
+        parts = self.codec.encode_write(h_new, step)
+        ids, local_row, sidx, *eparts = self._gathered_writes(
+            graph_ids, seg_idx, *parts)
+        h_dec = self.codec.decode(eparts)
+        table = tbl.update_sampled(table, local_row, sidx, h_dec, step,
+                                   mode="drop")
+        emb, init = self._apply_patch(emb, init, next_ids, ids, sidx,
+                                      h_dec)
+        return table, (emb, init)
 
     def update_all(self, table, graph_ids, h_all, seg_valid, step):
         if self.num_shards == 1:
@@ -452,7 +625,7 @@ class AllToAllExchange(Exchange):
             return tbl.update_all(table, local_row, h_all, seg_valid, step,
                                   mode="drop")
         parts = self.codec.encode_write(h_all, step)
-        local_row, sv, *eparts = self._gathered_writes(
+        _, local_row, sv, *eparts = self._gathered_writes(
             graph_ids, seg_valid, *parts)
         return tbl.update_all(table, local_row, self.codec.decode(eparts),
                               sv, step, mode="drop")
@@ -504,14 +677,20 @@ class BucketedExchange(Exchange):
 
     name = "bucketed"
 
+    def _plan_by(self, key):
+        """(order, sorted_key, rank-within-key) for a (B,) routing key.
+        Keys may exceed num_shards - 1 (the patch's "no consumer" mark);
+        the bucket scatter's mode="drop" discards those rows."""
+        order = jnp.argsort(key, stable=True)
+        sk = key[order]
+        pos = jnp.arange(key.shape[0]) - jnp.searchsorted(sk, sk,
+                                                          side="left")
+        return order, sk, pos
+
     def _plan(self, graph_ids):
         """(order, sorted_owner, rank-within-owner) for the local batch."""
         owner = jnp.clip(graph_ids // self.rows, 0, self.num_shards - 1)
-        order = jnp.argsort(owner, stable=True)
-        so = owner[order]
-        pos = jnp.arange(graph_ids.shape[0]) - jnp.searchsorted(
-            so, so, side="left")
-        return order, so, pos
+        return self._plan_by(owner)
 
     def _bucket(self, cap, so, pos, x_sorted, fill):
         b = jnp.full((self.num_shards, cap) + x_sorted.shape[1:], fill,
@@ -570,6 +749,48 @@ class BucketedExchange(Exchange):
                                   self.codec.decode(eparts), step,
                                   mode="drop")
 
+    def update_sampled_patch(self, table, graph_ids, seg_idx, h_new, step,
+                             pref, next_ids, next_dest=None):
+        """Fused write-back + patch.  Owner-direct writes never reach the
+        shards that prefetched the rows, so — alone among the strategies
+        — bucketed pays a real (tiny) patch hop: each write row whose id
+        reappears in the next batch is bucketed by its CONSUMER shard
+        (``next_dest``, planned host-side like the write buckets — zero
+        wire cost for the routing itself) and one all_to_all of
+        ``patch_cap``-sized buckets delivers it for the local scatter.
+        Rows with no consumer (next_dest == num_shards) are dropped by
+        the bucket scatter and never travel."""
+        emb, init = pref
+        if self.num_shards == 1:
+            return self._local_update_patch(table, graph_ids, seg_idx,
+                                            h_new, step, pref, next_ids)
+        if next_dest is None:
+            raise ValueError(
+                "bucketed update_sampled_patch needs next_dest — the "
+                "host-planned consumer shard of each write row "
+                "(consumer_shards)")
+        ax = self.axis_name
+        parts = self.codec.encode_write(h_new, step)
+        local_row, sidx, *eparts = self._bucketed_writes(
+            graph_ids, seg_idx, *parts)
+        table = tbl.update_sampled(table, local_row, sidx,
+                                   self.codec.decode(eparts), step,
+                                   mode="drop")
+        cap = self.patch_cap or graph_ids.shape[0]
+        order, sd, pos = self._plan_by(next_dest)
+        idb = self._bucket(cap, sd, pos, graph_ids[order],
+                           jnp.int32(self.sentinel))
+        sxb = self._bucket(cap, sd, pos, seg_idx[order], jnp.int32(0))
+        pbufs = [self._bucket(cap, sd, pos, p[order], p.dtype.type(0))
+                 for p in parts]
+        q_ids = _a2a(idb, ax).reshape(-1)
+        q_sidx = _a2a(sxb, ax).reshape((-1,) + seg_idx.shape[1:])
+        q_parts = [_a2a(b, ax).reshape((-1,) + b.shape[2:])
+                   for b in pbufs]
+        emb, init = self._apply_patch(emb, init, next_ids, q_ids, q_sidx,
+                                      self.codec.decode(q_parts))
+        return table, (emb, init)
+
     def update_all(self, table, graph_ids, h_all, seg_valid, step):
         if self.num_shards == 1:
             local_row = self._local_write_rows(graph_ids)
@@ -606,6 +827,16 @@ class BucketedExchange(Exchange):
         return (self.num_shards - 1) * c * (
             4 + self.codec.row_bytes(j_max * d_h) + j_max * 4)
 
+    def patch_bytes(self, b_local, s, d_h):
+        # one consumer-direct all_to_all of (ids, seg_idx, payload)
+        # patch_cap-sized buckets — the only strategy with a nonzero
+        # prefetch surcharge
+        if self.num_shards <= 1:
+            return 0
+        c = self.patch_cap if self.patch_cap is not None else b_local
+        return (self.num_shards - 1) * c * (
+            4 + s * 4 + self.codec.row_bytes(s * d_h))
+
 
 # ---------------------------------------------------------------------------
 # construction / auto selection
@@ -617,7 +848,8 @@ _STRATEGIES = {cls.name: cls
 
 def make_exchange(name: str, *, axis_name: str, num_shards: int, rows: int,
                   cap: Optional[int] = None,
-                  payload_dtype: str = "f32") -> Exchange:
+                  payload_dtype: str = "f32",
+                  patch_cap: Optional[int] = None) -> Exchange:
     """Strategy by name.  "auto" is a DRIVER-side policy — resolve it with
     ``select_exchange`` (it needs the batch geometry) before building."""
     if name == "auto":
@@ -629,7 +861,8 @@ def make_exchange(name: str, *, axis_name: str, num_shards: int, rows: int,
         raise ValueError(f"unknown exchange strategy {name!r} — expected "
                          f"one of {EXCHANGES} or 'auto'")
     return _STRATEGIES[name](axis_name=axis_name, num_shards=num_shards,
-                             rows=rows, cap=cap, payload_dtype=payload_dtype)
+                             rows=rows, cap=cap, payload_dtype=payload_dtype,
+                             patch_cap=patch_cap)
 
 
 def select_exchange(num_shards: int, b_local: int, j_max: int, s: int,
@@ -716,6 +949,58 @@ def plan_capacity(id_batches: Iterable, *, num_shards: int,
     for ids in id_batches:
         cap = max(cap, required_capacity(ids, num_shards=num_shards,
                                          rows=rows))
+    return cap
+
+
+def consumer_shards(cur_ids, next_ids, *, num_shards: int,
+                    rows: int) -> np.ndarray:
+    """For each row of the CURRENT global batch, the shard whose slice of
+    the NEXT global batch contains the same id — the bucketed patch's
+    host-planned routing (``next_dest``), computed under the contiguous
+    batch split.  ``num_shards`` marks rows with no next-batch consumer
+    (they never travel); sentinel pad rows on either side never match.
+    Ragged batches are sentinel-padded first, like the device path."""
+    sent = num_shards * rows
+    cur = np.asarray(cur_ids).ravel()
+    if cur.size % num_shards:
+        cur = pad_ragged(num_shards, rows, cur)[0]
+    nxt = np.asarray(next_ids).ravel()
+    if nxt.size % num_shards:
+        nxt = pad_ragged(num_shards, rows, nxt)[0]
+    b_next = nxt.size // num_shards
+    shard_of = {int(r): i // b_next for i, r in enumerate(nxt)
+                if int(r) != sent}
+    return np.asarray([shard_of.get(int(r), num_shards) for r in cur],
+                      np.int32)
+
+
+def required_patch_capacity(cur_ids, next_ids, *, num_shards: int,
+                            rows: int) -> int:
+    """Smallest per-(device, consumer) patch bucket capacity for ONE
+    (batch k, batch k+1) pair — how many of one device's write rows
+    reappear in one consumer shard's next-batch slice."""
+    dest = consumer_shards(cur_ids, next_ids, num_shards=num_shards,
+                           rows=rows)
+    cap = 1
+    for per_dev in dest.reshape(num_shards, -1):
+        real = per_dev[per_dev < num_shards]
+        if real.size:
+            cap = max(cap, int(np.bincount(real).max()))
+    return cap
+
+
+def plan_patch_capacity(id_batches: Iterable, *, num_shards: int,
+                        rows: int) -> int:
+    """Patch bucket capacity covering every CONSECUTIVE pair of an id
+    schedule — the prefetch lane patches step k's writes onto batch
+    k+1's buffer, so only adjacent batches matter.  Near-disjoint
+    shuffled schedules plan to ~1; an all-overlap schedule degenerates
+    to ``required_capacity``-sized buckets."""
+    cap = 1
+    batches = [np.asarray(b) for b in id_batches]
+    for a, b in zip(batches, batches[1:]):
+        cap = max(cap, required_patch_capacity(
+            a, b, num_shards=num_shards, rows=rows))
     return cap
 
 

@@ -263,3 +263,84 @@ def make_feeder(kind: str, ds: Bt.SegmentedDataset,
     if kind == "sync":
         return SyncSegmentFeeder(ds, id_schedule, put_fn)
     raise ValueError(f"unknown feeder kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# prefetch lane (lookahead exchange dispatch, ISSUE 9)
+# ---------------------------------------------------------------------------
+
+
+class PrefetchLane:
+    """One-item lookahead over a feeder that dispatches the NEXT batch's
+    exchange lookup before the CURRENT step launches.
+
+    Wraps any feeder (sync or async) and calls ``dispatch_fn(item)``
+    exactly once per delivered item, at pull time — i.e. for batch k+1
+    this runs right BEFORE the driver launches step k, so the prefetch
+    collective it issues (dist/train.py::make_prefetch_lookup) is
+    enqueued ahead of the table-donating step and its hops overlap step
+    k's compute.  The driver's dispatch closure is also where
+    ``store.commit`` for the next migration belongs (the prefetch must
+    read the post-commit table).
+
+    Yields ``(item, handle, nxt_item, nxt_handle)``: the current item,
+    the value ``dispatch_fn`` returned for it (the driver only consumes
+    this on the FIRST batch — afterwards it carries the step's patched
+    buffer instead), and the looked-ahead next pair (``None``/``None``
+    on the last batch, where the step patches a dummy).
+
+    Error propagation: a ``dispatch_fn`` failure (or an abandoned
+    iteration) closes the wrapped feeder before the exception surfaces,
+    so its producer thread never blocks on a dead consumer.  Counters:
+    ``feeder.prefetch_batches`` / ``feeder.prefetch_dispatch_ms`` mirror
+    to the metrics registry beside the wrapped feeder's own stats."""
+
+    def __init__(self, feeder, dispatch_fn: Callable[[Any], Any]):
+        self._feeder = feeder
+        self._dispatch = dispatch_fn
+        self.prefetch_batches = 0
+        self.dispatch_ms = 0.0
+
+    @property
+    def stats(self) -> FeederStats:
+        return self._feeder.stats
+
+    def _dispatch_timed(self, item):
+        t0 = time.perf_counter()
+        with span("feeder.prefetch_dispatch"):
+            handle = self._dispatch(item)
+        dt = (time.perf_counter() - t0) * 1e3
+        self.prefetch_batches += 1
+        self.dispatch_ms += dt
+        reg = get_registry()
+        if reg.enabled:
+            reg.inc("feeder.prefetch_batches")
+            reg.inc("feeder.prefetch_dispatch_ms", dt, unit="ms")
+        return handle
+
+    def close(self) -> None:
+        close = getattr(self._feeder, "close", None)
+        if close is not None:
+            close()
+
+    def __iter__(self):
+        it = iter(self._feeder)
+        try:
+            try:
+                cur = next(it)
+            except StopIteration:
+                return
+            cur_h = self._dispatch_timed(cur)
+            while True:
+                try:
+                    nxt = next(it)
+                except StopIteration:
+                    nxt, nxt_h = None, None
+                else:
+                    nxt_h = self._dispatch_timed(nxt)
+                yield cur, cur_h, nxt, nxt_h
+                if nxt is None:
+                    return
+                cur, cur_h = nxt, nxt_h
+        finally:
+            self.close()

@@ -31,6 +31,12 @@ from repro.dist.exchange import (  # noqa: F401
     train_step_exchange_bytes, update_all_exchange_bytes,
     update_sampled_exchange_bytes)
 
+# prefetch-lane host planning (ISSUE 9) lives beside the row geometry it
+# depends on: consumer_shards maps write rows to the shard whose slice of
+# the next batch reads them (the contiguous split defined above)
+from repro.dist.exchange import (  # noqa: F401
+    consumer_shards, plan_patch_capacity, required_patch_capacity)
+
 
 def pad_table(table: tbl.EmbeddingTable, num_shards: int) -> tbl.EmbeddingTable:
     """Pad the row axis to a multiple of the shard count (no-op if aligned)."""

@@ -75,6 +75,16 @@ class DistContext:
     # (exchange.PayloadCodec): "f32" (identity, bit-exact), "bf16" or
     # "int8" (per-row scale, stochastic rounding on write-backs)
     payload_dtype: str = "f32"
+    # lookahead prefetch lane (--prefetch-lookups): the train step consumes
+    # a prefetched next-batch lookup buffer (make_prefetch_lookup) instead
+    # of running the exchange inline, and its fused write-back patches the
+    # buffer for batch k+1 (exchange.update_sampled_patch) — bit-exact vs
+    # the inline oracle at f32
+    prefetch: bool = False
+    # bucketed-only: host-planned per-(device, consumer) patch bucket
+    # capacity (exchange.plan_patch_capacity over consecutive batches);
+    # None = B_local, always safe
+    patch_cap: Optional[int] = None
 
     @property
     def axis_name(self) -> str:
@@ -103,12 +113,15 @@ def make_context(mesh: Mesh, n_rows: int,
                  device_rows: Optional[int] = None, *,
                  exchange: str = "ring",
                  exchange_cap: Optional[int] = None,
-                 payload_dtype: str = "f32") -> DistContext:
+                 payload_dtype: str = "f32",
+                 prefetch: bool = False,
+                 patch_cap: Optional[int] = None) -> DistContext:
     """``device_rows``: total device-resident row cap (the
     --table-device-rows knob); None keeps the table fully resident.
     ``exchange``/``exchange_cap``: table-exchange strategy + its planned
     bucket capacity (see DistContext).  ``payload_dtype``: exchange wire
-    format (--payload-dtype) — f32, bf16 or int8."""
+    format (--payload-dtype) — f32, bf16 or int8.  ``prefetch``/
+    ``patch_cap``: the lookahead prefetch lane (see DistContext)."""
     if exchange not in EXCHANGES:
         raise ValueError(
             f"unknown exchange strategy {exchange!r} — expected one of "
@@ -125,7 +138,8 @@ def make_context(mesh: Mesh, n_rows: int,
                        rows_per_shard=dtbl.rows_per_shard(n_rows, d),
                        device_rows_per_shard=per_shard,
                        exchange=exchange, exchange_cap=exchange_cap,
-                       payload_dtype=payload_dtype)
+                       payload_dtype=payload_dtype,
+                       prefetch=prefetch, patch_cap=patch_cap)
 
 
 def make_dist_store(ctx: DistContext, j_max: int, d_h: int,
@@ -222,11 +236,16 @@ def _batch_spec() -> G.GSTBatch:
     return G.GSTBatch(P(AXIS), P(AXIS), P(AXIS), P(AXIS), P(AXIS))
 
 
+def _make_ctx_exchange(ctx: DistContext):
+    return make_exchange(ctx.exchange, axis_name=AXIS,
+                         num_shards=ctx.num_shards, rows=ctx.table_rows,
+                         cap=ctx.exchange_cap,
+                         payload_dtype=ctx.payload_dtype,
+                         patch_cap=ctx.patch_cap)
+
+
 def _table_ops(ctx: DistContext):
-    ex = make_exchange(ctx.exchange, axis_name=AXIS,
-                       num_shards=ctx.num_shards, rows=ctx.table_rows,
-                       cap=ctx.exchange_cap,
-                       payload_dtype=ctx.payload_dtype)
+    ex = _make_ctx_exchange(ctx)
     return ex.lookup, ex.update_sampled, ex.update_all
 
 
@@ -239,17 +258,95 @@ def make_dist_train_step(encode_fn, optimizer, variant: G.GSTVariant, *,
                          ctx: DistContext, donate: bool = True, **kwargs):
     """Data-parallel ``G.make_train_step``: same signature
     ``step(state, batch, rng) -> (state, metrics)``, state placed via
-    ``device_state`` and batches via ``shard_batch``/the async pipeline."""
-    lookup, update, _ = _table_ops(ctx)
-    inner = G.make_train_step(encode_fn, optimizer, variant,
-                              table_lookup=lookup, table_update=update,
-                              axis_name=AXIS, **kwargs)
-    smapped = shard_map(inner, mesh=ctx.mesh,
-                        in_specs=(_state_spec(), _batch_spec(), P()),
-                        out_specs=(_state_spec(), P()),
-                        check_rep=False)
-    return probe_jit("dist.train_step",
-                     jax.jit(smapped, donate_argnums=(0,) if donate else ()))
+    ``device_state`` and batches via ``shard_batch``/the async pipeline.
+
+    With ``ctx.prefetch`` the step is the PREFETCHED variant instead:
+
+      step(state, batch, rng, pref, nxt, next_ids, next_dest)
+        -> (state, metrics, patched)
+
+    where ``pref = (emb, init)`` is THIS batch's prefetched lookup
+    (already patched by the previous step), consumed in place of the
+    inline exchange; ``nxt`` is the NEXT batch's freshly-prefetched pair
+    (``make_prefetch_lookup``, dispatched before this call so the hops
+    overlap the previous step's compute); ``next_ids``/``next_dest``
+    route the fused write-back patch (exchange.update_sampled_patch);
+    and ``patched`` is ``nxt`` with this step's write-back folded in —
+    the ``pref`` of the NEXT call.  The inline path (prefetch=False) is
+    unchanged and serves as the bit-exactness oracle."""
+    if not ctx.prefetch:
+        lookup, update, _ = _table_ops(ctx)
+        inner = G.make_train_step(encode_fn, optimizer, variant,
+                                  table_lookup=lookup, table_update=update,
+                                  axis_name=AXIS, **kwargs)
+        smapped = shard_map(inner, mesh=ctx.mesh,
+                            in_specs=(_state_spec(), _batch_spec(), P()),
+                            out_specs=(_state_spec(), P()),
+                            check_rep=False)
+        return probe_jit(
+            "dist.train_step",
+            jax.jit(smapped, donate_argnums=(0,) if donate else ()))
+
+    ex = _make_ctx_exchange(ctx)
+
+    def inner(state, batch, rng, pref, nxt, next_ids, next_dest):
+        # the injected table ops close over the prefetched buffers: the
+        # lookup answers from ``pref`` without touching the wire, and the
+        # update runs the fused write-back-and-patch, handing the patched
+        # next-batch buffer out through a trace-time side channel (the
+        # core step builder's return signature stays (state, metrics))
+        patched = {}
+
+        def t_lookup(table, graph_ids):
+            return pref
+
+        def t_update(table, graph_ids, seg_idx, h_new, step):
+            table, patched["pref"] = ex.update_sampled_patch(
+                table, graph_ids, seg_idx, h_new, step, nxt, next_ids,
+                next_dest)
+            return table
+
+        step_fn = G.make_train_step(encode_fn, optimizer, variant,
+                                    table_lookup=t_lookup,
+                                    table_update=t_update,
+                                    axis_name=AXIS, **kwargs)
+        new_state, metrics = step_fn(state, batch, rng)
+        # table-free variants never call the update: next buffer unpatched
+        return new_state, metrics, patched.get("pref", nxt)
+
+    pair = (P(AXIS), P(AXIS))
+    smapped = shard_map(
+        inner, mesh=ctx.mesh,
+        in_specs=(_state_spec(), _batch_spec(), P(), pair, pair,
+                  P(AXIS), P(AXIS)),
+        out_specs=(_state_spec(), P(), pair),
+        check_rep=False)
+    # donate the consumed pref pair (3) and the to-be-patched nxt pair (4)
+    # — the patch scatter aliases in place, and the driver only ever keeps
+    # the returned patched pair
+    return probe_jit(
+        "dist.train_step",
+        jax.jit(smapped, donate_argnums=(0, 3, 4) if donate else ()))
+
+
+def make_prefetch_lookup(ctx: DistContext):
+    """The prefetch lane's own jitted collective: ``fn(table, ids) ->
+    (emb, init)`` — exactly the strategy's lookup, NOT donated (the table
+    stays live for the in-flight step), dispatched by the driver while
+    the previous step's device work runs so the exchange hops overlap
+    compute.  ``ids`` is the next GLOBAL batch's (B,) ids, sharded like a
+    batch."""
+    ex = _make_ctx_exchange(ctx)
+
+    def fn(table, graph_ids):
+        return ex.prefetch_lookup(table, graph_ids)
+
+    smapped = shard_map(
+        fn, mesh=ctx.mesh,
+        in_specs=(tbl.EmbeddingTable(P(AXIS), P(AXIS), P(AXIS)), P(AXIS)),
+        out_specs=(P(AXIS), P(AXIS)),
+        check_rep=False)
+    return probe_jit("dist.prefetch_lookup", jax.jit(smapped))
 
 
 def make_dist_eval_step(encode_fn, *, ctx: DistContext, **kwargs):

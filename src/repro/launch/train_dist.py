@@ -15,6 +15,11 @@ table and the async host→device segment pipeline:
     PYTHONPATH=src python -m repro.launch.train_dist \
         --devices 8 --exchange bucketed --epochs 5
 
+    # lookahead prefetch: batch k+1's exchange lookup dispatched while
+    # step k runs, write-back patched (bit-exact at f32 payloads)
+    PYTHONPATH=src python -m repro.launch.train_dist \
+        --devices 8 --prefetch-lookups --epochs 5
+
 ``--devices N`` forces an N-device host via XLA_FLAGS when jax has not
 initialized yet (CPU development / CI; on a real TPU slice leave it unset
 to use the attached devices).
@@ -81,6 +86,22 @@ def main(argv=None):
                          "per-row scale; write-backs use stochastic "
                          "rounding.  --exchange=auto re-picks the min-"
                          "bytes strategy at this dtype")
+    ap.add_argument("--prefetch-lookups", action="store_true",
+                    help="hide the exchange: dispatch batch k+1's table "
+                         "lookup as its own collective while step k's "
+                         "compute runs (dist.make_prefetch_lookup), and "
+                         "restore read-after-write correctness with the "
+                         "fused write-back patch "
+                         "(exchange.update_sampled_patch).  Bit-exact vs "
+                         "the inline exchange at --payload-dtype f32; "
+                         "bounded-error under bf16/int8 like the inline "
+                         "path.  Train loop only — refresh/finetune/eval "
+                         "stay inline")
+    ap.add_argument("--patch-cap", type=int, default=None,
+                    help="bucketed + --prefetch-lookups only: per-(device, "
+                         "consumer) bucket capacity of the patch hop.  "
+                         "Default: planned host-side over the train "
+                         "schedules (exchange.plan_patch_capacity)")
     ap.add_argument("--table-device-rows", type=int, default=None,
                     help="cap on device-resident historical-table rows "
                          "(total, split over shards; clamped up so every "
@@ -100,7 +121,7 @@ def main(argv=None):
                          "bit-exact store")
     # repro.obs is jax-free, so this is safe before _force_device_count
     from repro.obs import (Obs, StalenessProbe, add_obs_args,
-                           record_exchange_bytes)
+                           record_exchange_bytes, record_prefetch_exchange)
     from repro.obs.trace import span
     add_obs_args(ap)
     args = ap.parse_args(argv)
@@ -150,8 +171,15 @@ def main(argv=None):
     mesh = DT.make_dist_mesh(n_dev)
     device_rows = None
     if args.table_device_rows is not None:
-        # every shard must be able to pin one batch's rows at once
-        device_rows = max(args.table_device_rows, n_dev * args.batch_size)
+        # every shard must be able to pin one batch's rows at once; the
+        # prefetch lane keeps lookahead batches pinned (store.begin
+        # pin=True, released after their step), so it needs room for the
+        # in-flight window too: the running step, the prefetched next
+        # batch, and up to --depth feeder batches begun ahead of them
+        window = 1 if not args.prefetch_lookups else (
+            2 if args.feeder == "sync" else args.depth + 2)
+        device_rows = max(args.table_device_rows,
+                          window * n_dev * args.batch_size)
 
     # precompute every id schedule up front (same rng draw order as the
     # former per-epoch draws, so traces are unchanged): the bucketed
@@ -189,11 +217,30 @@ def main(argv=None):
                                        args.num_sampled, args.hidden,
                                        cap=cap,
                                        payload_dtype=args.payload_dtype)
+    patch_cap = None
+    if args.prefetch_lookups and exchange == "bucketed":
+        # the patch hop routes this batch's write-backs to the shards
+        # holding the NEXT batch's prefetched buffer — plan its bucket
+        # capacity over consecutive pairs of each train epoch's schedule
+        # (same graph-id/slot-space equivalence as plan_capacity above)
+        need_patch = max(EXC.plan_patch_capacity(sched, num_shards=n_dev,
+                                                 rows=rows_per_shard)
+                         for sched in train_scheds)
+        patch_cap = args.patch_cap
+        if patch_cap is None:
+            patch_cap = need_patch
+        elif patch_cap < need_patch:
+            ap.error(f"--patch-cap {patch_cap} is below the {need_patch} "
+                     "rows one consumer bucket needs for this run's "
+                     "schedules — the patch hop would silently drop "
+                     "write-back repairs")
     ctx = DT.make_context(mesh, ds.n, device_rows=device_rows,
                           exchange=exchange,
                           exchange_cap=cap if exchange == "bucketed"
                           else None,
-                          payload_dtype=args.payload_dtype)
+                          payload_dtype=args.payload_dtype,
+                          prefetch=args.prefetch_lookups,
+                          patch_cap=patch_cap)
     store = DT.make_dist_store(ctx, ds.j_max, args.hidden,
                                evict_policy=args.evict_policy,
                                wb_threshold=args.wb_threshold)
@@ -207,15 +254,23 @@ def main(argv=None):
     ex_model = EXC.make_exchange(exchange, axis_name=DT.AXIS,
                                  num_shards=ctx.num_shards,
                                  rows=ctx.table_rows, cap=ctx.exchange_cap,
-                                 payload_dtype=ctx.payload_dtype)
+                                 payload_dtype=ctx.payload_dtype,
+                                 patch_cap=ctx.patch_cap)
     xbytes = ex_model.train_step_bytes(b_local, ds.j_max, args.num_sampled,
                                        args.hidden, use_table=var.use_table)
+    pxbytes = ex_model.prefetch_train_step_bytes(
+        b_local, ds.j_max, args.num_sampled, args.hidden,
+        use_table=var.use_table)
     print(f"[dist] devices={ctx.num_shards} rows/shard={ctx.rows_per_shard} "
           f"device-rows/shard={ctx.table_rows} "
           f"bucket={spec.key} feeder={args.feeder} "
           f"exchange={exchange} (payload={ex_model.payload_dtype}, "
           f"{xbytes / 1024:.1f} KiB/step/device"
-          + (f", cap={cap}" if exchange == "bucketed" else "") + ")")
+          + (f", cap={cap}" if exchange == "bucketed" else "")
+          + (f", prefetch {pxbytes / 1024:.1f} KiB"
+             + (f", patch-cap={ctx.patch_cap}"
+                if exchange == "bucketed" else "")
+             if args.prefetch_lookups else "") + ")")
 
     obs = Obs.from_args(args, run="train_dist", variant=args.variant,
                         devices=ctx.num_shards, exchange=exchange,
@@ -232,7 +287,7 @@ def main(argv=None):
         # table, so its put passes no hint)
         step_counter = {"t": 0}
 
-        def _put(b, counting):
+        def _put(b, counting, pin=False):
             # route graph ids -> store device rows on the feeder thread, so the
             # host-tier gather + staging device_put overlap with the running
             # step; the consumer commits the staged migration in order below
@@ -240,11 +295,17 @@ def main(argv=None):
             if counting:
                 hint = step_counter["t"]
                 step_counter["t"] += 1
-            prep = store.begin(np.asarray(b.graph_ids), step=hint)
+            prep = store.begin(np.asarray(b.graph_ids), step=hint, pin=pin)
             return prep, DT.shard_batch(ctx, b._replace(graph_ids=prep.slots))
 
         def put(b):
             return _put(b, True)
+
+        def put_pinned(b):
+            # prefetch train loop: lookahead batches stay pinned on the
+            # device tier (later begins may not evict them) until the
+            # driver releases them after their step is dispatched
+            return _put(b, True, pin=True)
 
         def put_readonly(b):
             return _put(b, False)
@@ -261,11 +322,25 @@ def main(argv=None):
                       f"{s['migration_bytes'] / 1024:.1f} KiB migrated, "
                       f"occupancy {s['occupancy']}{gate}", flush=True)
 
-        t_start = time.perf_counter()
-        last_stats = None
-        for epoch, sched in enumerate(train_scheds):
-            feeder = DP.make_feeder(args.feeder, ds, sched, put,
-                                    depth=args.depth)
+        if args.prefetch_lookups:
+            prefetch_fn = DT.make_prefetch_lookup(ctx)
+            bsh = DT.batch_sharding(ctx)
+            sentinel = ctx.num_shards * ctx.table_rows
+
+            def prefetch_dispatch(item):
+                # runs at lane pull time, BEFORE the previous item's step
+                # is launched: commit the staged migration, then dispatch
+                # the lookup collective so it executes (same stream) ahead
+                # of the donating step that would overwrite the table
+                nonlocal state
+                prep, batch = item
+                with span("train.commit"):
+                    state = state._replace(
+                        table=store.commit(state.table, prep))
+                return prefetch_fn(state.table, batch.graph_ids)
+
+        def run_epoch_inline(epoch, feeder):
+            nonlocal state
             losses = []
             for prep, batch in feeder:
                 with span("train.commit"):
@@ -276,8 +351,61 @@ def main(argv=None):
                 record_exchange_bytes(exchange, ex_model.payload_dtype,
                                       xbytes)
                 losses.append(m["loss"])
+            return losses, feeder.stats
+
+        def run_epoch_prefetch(epoch, feeder):
+            nonlocal state
+            lane = DP.PrefetchLane(feeder, prefetch_dispatch)
+            rng = jax.random.PRNGKey(epoch)
+            losses, pref = [], None
+            for (prep, batch), cur_h, nxt, nxt_h in lane:
+                if pref is None:
+                    pref = cur_h   # first batch: nothing patched it yet
+                if nxt is not None:
+                    nprep, nbatch = nxt
+                    next_ids, next_pair = nbatch.graph_ids, nxt_h
+                    dest = EXC.consumer_shards(
+                        np.asarray(prep.slots), np.asarray(nprep.slots),
+                        num_shards=ctx.num_shards, rows=ctx.table_rows)
+                else:
+                    # epoch tail: sentinel consumers — the patch no-ops
+                    # into a throwaway zero buffer
+                    B = args.batch_size
+                    next_ids = jax.device_put(
+                        np.full((B,), sentinel, np.int32), bsh)
+                    next_pair = (
+                        jax.device_put(np.zeros((B, ds.j_max, args.hidden),
+                                                np.float32), bsh),
+                        jax.device_put(np.zeros((B, ds.j_max), bool), bsh))
+                    dest = np.full((B,), ctx.num_shards, np.int32)
+                patched_rows = int((dest != ctx.num_shards).sum())
+                dest_dev = jax.device_put(np.asarray(dest, np.int32), bsh)
+                with span("train.step", epoch=epoch):
+                    state, m, pref = step(state, batch,
+                                          rng, pref, next_pair,
+                                          next_ids, dest_dev)
+                store.release(prep)
+                # exchange.bytes.* stays the run's total-traffic family
+                # (prefetch moves the same bytes earlier; bucketed adds
+                # its patch hop), exchange.prefetch.* is the lane's own
+                record_exchange_bytes(exchange, ex_model.payload_dtype,
+                                      pxbytes)
+                record_prefetch_exchange(exchange, ex_model.payload_dtype,
+                                         pxbytes, patched_rows)
+                losses.append(m["loss"])
+            return losses, lane.stats
+
+        t_start = time.perf_counter()
+        last_stats = None
+        run_epoch = (run_epoch_prefetch if args.prefetch_lookups
+                     else run_epoch_inline)
+        for epoch, sched in enumerate(train_scheds):
+            feeder = DP.make_feeder(
+                args.feeder, ds, sched,
+                put_pinned if args.prefetch_lookups else put,
+                depth=args.depth)
+            losses, last_stats = run_epoch(epoch, feeder)
             jax.block_until_ready(losses[-1])
-            last_stats = feeder.stats
             print(f"epoch {epoch}: loss={float(losses[-1]):.4f} "
                   f"host_blocked={last_stats.host_blocked_ms_per_batch:.2f} "
                   f"ms/batch", flush=True)

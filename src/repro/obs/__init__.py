@@ -22,7 +22,8 @@ from repro.obs.memory import (MemoryProbe, NullProbe, get_probe, null_probe,
                               probe_jit, process_rss_bytes, set_probe,
                               shape_signature, tree_nbytes)
 from repro.obs.staleness import (StalenessProbe, record_exchange_bytes,
-                                 sed_age_bound, sed_drop_stats, wb_skip_rate)
+                                 record_prefetch_exchange, sed_age_bound,
+                                 sed_drop_stats, wb_skip_rate)
 from repro.obs.export import JsonlExporter, Obs, add_obs_args
 
 __all__ = [
@@ -35,7 +36,7 @@ __all__ = [
     "null_tracer", "set_tracer", "span", "validate_chrome_trace",
     "MemoryProbe", "NullProbe", "get_probe", "null_probe", "probe_jit",
     "process_rss_bytes", "set_probe", "shape_signature", "tree_nbytes",
-    "StalenessProbe", "record_exchange_bytes", "sed_age_bound",
-    "sed_drop_stats", "wb_skip_rate",
+    "StalenessProbe", "record_exchange_bytes", "record_prefetch_exchange",
+    "sed_age_bound", "sed_drop_stats", "wb_skip_rate",
     "JsonlExporter", "Obs", "add_obs_args",
 ]

@@ -47,6 +47,10 @@ from repro.obs.trace import validate_chrome_trace
 # exchange.* metric present) or when --expect-dist pins them explicitly.
 TRAIN_FAMILIES = ("staleness.row_age", "staleness.sed_drop_rate")
 DIST_FAMILIES = ("store.wb_skip_rate", "exchange.bytes.")
+# required when the stream advertises the prefetch lane (any
+# exchange.prefetch.* metric present) or --expect-prefetch pins them
+PREFETCH_FAMILIES = ("exchange.prefetch.bytes.",
+                     "exchange.prefetch.patched_rows")
 MEM_FAMILIES = ("mem.device.peak_bytes.", "mem.device.temp_bytes.")
 SERVE_FAMILIES = ("serve.latency_ms", "serve.prediction_staleness",
                   "serve.windows")
@@ -224,6 +228,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "train stream even if no exchange metric is "
                          "present — CI pins this so a silently-missing "
                          "exchange instrumentation fails the gate")
+    ap.add_argument("--expect-prefetch", action="store_true",
+                    help="require the prefetch-lane metric families "
+                         "(exchange.prefetch.bytes.*, exchange.prefetch."
+                         "patched_rows) in the train stream — CI pins "
+                         "this on the --prefetch-lookups leg")
     args = ap.parse_args(argv)
 
     checks = []
@@ -237,6 +246,14 @@ def main(argv: Optional[List[str]] = None) -> int:
                 for name in summary.get("metrics", {}))
             if is_dist:
                 families = families + DIST_FAMILIES
+            # a stream that advertises the prefetch lane must carry ALL
+            # its families — a half-wired lane (bytes without the
+            # patched-rows histogram, or vice versa) fails the gate
+            has_prefetch = args.expect_prefetch or any(
+                name.startswith("exchange.prefetch.")
+                for name in summary.get("metrics", {}))
+            if has_prefetch:
+                families = families + PREFETCH_FAMILIES
             if args.expect_mem:
                 families = families + MEM_FAMILIES
             names = require_families(summary, families, args.train_jsonl)

@@ -92,6 +92,31 @@ def record_exchange_bytes(strategy: str, payload_dtype: str, nbytes: int,
             unit="bytes")
 
 
+# bucket edges for the patched-rows histogram: patches are tiny by design
+# (0 on disjoint schedules, <= B_local*S when adjacent batches fully
+# overlap), so the resolution lives at the small end
+PATCHED_ROWS_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0,
+                        256.0, 1024.0)
+
+
+def record_prefetch_exchange(strategy: str, payload_dtype: str, nbytes: int,
+                             patched_rows: int,
+                             registry: Optional[MetricsRegistry] = None,
+                             ) -> None:
+    """One prefetched train step's exchange telemetry: the analytic wire
+    bytes of the prefetch path (``exchange.prefetch.bytes.<strategy>.
+    <dtype>`` — same total as inline plus the bucketed patch surcharge)
+    and how many write-back rows the fused patch actually repaired in the
+    next batch's buffer (host-side count of planned consumers — no device
+    readback)."""
+    reg = registry if registry is not None else get_registry()
+    reg.inc(f"exchange.prefetch.bytes.{strategy}.{payload_dtype}", nbytes,
+            unit="bytes")
+    reg.histogram("exchange.prefetch.patched_rows",
+                  buckets=PATCHED_ROWS_BUCKETS,
+                  unit="rows").observe(float(patched_rows))
+
+
 class StalenessProbe:
     """Periodic staleness snapshot over a store-backed training table.
 

@@ -207,7 +207,8 @@ class EmbeddingStore:
     # -- residency ---------------------------------------------------------
 
     def begin(self, row_ids, *, fetch: bool = True,
-              step: Optional[int] = None) -> PreparedMigration:
+              step: Optional[int] = None,
+              pin: bool = False) -> PreparedMigration:
         raise NotImplementedError
 
     def commit(self, table: tbl.EmbeddingTable,
@@ -221,6 +222,12 @@ class EmbeddingStore:
         refresh hint for stale-first eviction (see TieredStore.begin)."""
         prep = self.begin(row_ids, fetch=fetch, step=step)
         return self.commit(table, prep), prep.slots
+
+    def release(self, prep: PreparedMigration) -> None:
+        """Drop the residency pins ``begin(pin=True)`` took for this
+        batch.  Only meaningful under lookahead pinning (the
+        --prefetch-lookups lane, where batch k+1's commit lands while
+        batch k's rows must stay resident); a no-op everywhere else."""
 
     def resident_slot(self, row: int) -> Optional[int]:
         """Device row currently holding ``row`` (no LRU side effects), or
@@ -283,7 +290,8 @@ class DeviceStore(EmbeddingStore):
     scatter semantics of the original core/embedding_table.py path."""
 
     def begin(self, row_ids, *, fetch: bool = True,
-              step: Optional[int] = None) -> PreparedMigration:
+              step: Optional[int] = None,
+              pin: bool = False) -> PreparedMigration:
         slots = np.asarray(row_ids, np.int32)
         # count UNIQUE rows like TieredStore.begin, so the counters the
         # CLIs/bench print are comparable across backends (callers pass

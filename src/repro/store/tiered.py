@@ -80,6 +80,11 @@ class TieredStore(EmbeddingStore):
         self._mu = threading.Condition()
         self._begin_mu = threading.RLock()
         self._pending: Dict[int, int] = {}   # row -> evicting begin ticket
+        # lookahead pinning (--prefetch-lookups): tickets begun with
+        # ``pin=True`` keep their rows displacement-proof until the driver
+        # calls ``release(prep)`` — batch k+1's commit lands while step k
+        # is still reading batch k's slots, so those rows must survive it
+        self._live_pins: Dict[int, set] = {}  # ticket -> pinned rows
         self._begin_ticket = 0
         self._commit_next = 1
         self._done_ticket = 0
@@ -132,7 +137,8 @@ class TieredStore(EmbeddingStore):
     # -- residency ---------------------------------------------------------
 
     def begin(self, row_ids, *, fetch: bool = True,
-              step: Optional[int] = None) -> PreparedMigration:
+              step: Optional[int] = None,
+              pin: bool = False) -> PreparedMigration:
         """Host half of a migration: residency bookkeeping + staging.
 
         Safe to call on the feeder thread while a step runs.  With
@@ -147,14 +153,21 @@ class TieredStore(EmbeddingStore):
         read-only paths like finetune lookups).  Without it a resident
         row keeps the age it carried in from the host tier, so a
         long-resident hot row would score as stale as its last eviction
-        left it."""
+        left it.
+
+        ``pin``: lookahead pinning for the prefetch lane — this batch's
+        rows stay displacement-proof against LATER begins until the
+        driver calls ``release(prep)`` (after its step is dispatched).
+        Without it batch k+1's commit could evict batch k's still-in-use
+        slots.  Every later begin honours existing live pins whether or
+        not it pins itself."""
         with span("store.begin"):
-            prep = self._begin_impl(row_ids, fetch=fetch, step=step)
+            prep = self._begin_impl(row_ids, fetch=fetch, step=step, pin=pin)
         self.publish_counters()
         return prep
 
     def _begin_impl(self, row_ids, *, fetch: bool,
-                    step: Optional[int]) -> PreparedMigration:
+                    step: Optional[int], pin: bool) -> PreparedMigration:
         ids = np.asarray(row_ids).ravel()
         R, C = self.rows_per_shard, self._C
         with self._begin_mu:
@@ -162,6 +175,8 @@ class TieredStore(EmbeddingStore):
             # so a bad batch raises cleanly instead of leaving half-reserved
             # slots and an uncommittable ticket behind
             uniq = list(dict.fromkeys(int(r) for r in ids))
+            live: set = set().union(*self._live_pins.values()) \
+                if self._live_pins else set()
             per_shard: Dict[int, int] = {}
             for rid in uniq:
                 if not 0 <= rid < self.n_rows:
@@ -176,9 +191,27 @@ class TieredStore(EmbeddingStore):
                     f"{C} device rows — raise the device-row cap "
                     "(--table-device-rows) to at least the per-shard batch "
                     "row count")
+            if live:
+                # a live-pinned previous batch shrinks the displaceable
+                # pool: this batch's rows AND the pinned ones must coexist
+                both: Dict[int, int] = {}
+                for rid in set(uniq) | live:
+                    both[rid // R] = both.get(rid // R, 0) + 1
+                worst_b = max(both.values(), default=0)
+                if worst_b > C:
+                    raise RuntimeError(
+                        f"device tier exhausted under lookahead pinning: "
+                        f"shard {max(both, key=both.get)} needs {worst_b} "
+                        f"resident rows (this batch + the pinned in-flight "
+                        f"batch) but has only {C} device rows — "
+                        "--prefetch-lookups needs a device-row cap of "
+                        "about TWICE the per-shard batch row count "
+                        "(--table-device-rows)")
             self._begin_ticket += 1
             ticket = self._begin_ticket
-            pinned = set(uniq)
+            pinned = set(uniq) | live
+            if pin:
+                self._live_pins[ticket] = set(uniq)
             slot_of: Dict[int, int] = {}
             uploads: List[tuple] = []   # (row, device_row)
             evicts: List[tuple] = []    # (row, device_row)
@@ -235,6 +268,14 @@ class TieredStore(EmbeddingStore):
                 with self._mu:
                     self.counters.bytes_h2d += len(uploads) * self.row_bytes
             return PreparedMigration(**prep)
+
+    def release(self, prep: PreparedMigration) -> None:
+        """Drop the lookahead pins ``begin(pin=True)`` took for this
+        batch — call after its step is dispatched (the donated table
+        chain orders the step before any later commit's migration, so
+        the rows are safe to displace from then on)."""
+        with self._begin_mu:
+            self._live_pins.pop(prep.ticket, None)
 
     def commit(self, table: tbl.EmbeddingTable,
                prep: PreparedMigration) -> tbl.EmbeddingTable:
@@ -396,6 +437,8 @@ class TieredStore(EmbeddingStore):
         self._writer.flush()
         for m in self._maps:
             m.clear()
+        with self._begin_mu:
+            self._live_pins.clear()
         with self._mu:
             self._pending.clear()
         self._host = tbl.EmbeddingTable(
