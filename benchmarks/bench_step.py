@@ -58,7 +58,8 @@ def _median_ms(fn, n_iters: int) -> float:
 
 
 def bench_cell(ds, variant: str, backbone: str, use_pallas: bool, *,
-               batch_size: int, hidden: int, n_iters: int, warmup: int = 2):
+               batch_size: int, hidden: int, n_iters: int, warmup: int = 2,
+               sed_decay: float = 0.0):
     tup = next(Bt.batch_iterator(ds, batch_size, rng=np.random.default_rng(0),
                                  shuffle=False))
     batch = G.GSTBatch({k: jnp.asarray(v) for k, v in tup[0].items()},
@@ -76,7 +77,7 @@ def bench_cell(ds, variant: str, backbone: str, use_pallas: bool, *,
                          jnp.zeros((), jnp.int32))
     step = jax.jit(G.make_train_step(
         enc, opt, G.VARIANTS[variant], keep_prob=0.5,
-        use_pallas=use_pallas), donate_argnums=(0,))
+        use_pallas=use_pallas, sed_decay=sed_decay), donate_argnums=(0,))
     eval_step = jax.jit(G.make_eval_step(enc, use_pallas=use_pallas))
 
     seg_flat = {k: v.reshape((-1,) + v.shape[2:])
@@ -102,9 +103,10 @@ def bench_cell(ds, variant: str, backbone: str, use_pallas: bool, *,
     one_eval()
     eval_ms = _median_ms(one_eval, n_iters)
     return {
-        "variant": variant,
+        "variant": variant if sed_decay == 0.0 else f"{variant}+age",
         "backbone": backbone,
         "use_pallas": use_pallas,
+        "sed_decay": sed_decay,
         "device_count": jax.device_count(),
         "train_ms": round(train_ms, 3),
         "eval_ms": round(eval_ms, 3),
@@ -142,6 +144,19 @@ def main():
                       f"{'pallas' if use_pallas else 'reference':9s} "
                       f"{row['train_ms']:9.2f} {row['eval_ms']:8.2f} "
                       f"{row['pallas_calls_encode_fwd']:7d}", flush=True)
+
+    # age-weighted leg: the complete method with the exp(-λ·age) stale-
+    # branch decay threaded through both paths — the Eq.-1 extension's
+    # step-time overhead (an extra age lookup + stale-branch multiply)
+    for use_pallas in (False, True):
+        row = bench_cell(ds, "gst_efd", "sage", use_pallas,
+                         batch_size=args.batch_size, hidden=args.hidden,
+                         n_iters=n_iters, sed_decay=0.1)
+        results.append(row)
+        print(f"{row['variant']:8s} {'sage':8s} "
+              f"{'pallas' if use_pallas else 'reference':9s} "
+              f"{row['train_ms']:9.2f} {row['eval_ms']:8.2f} "
+              f"{row['pallas_calls_encode_fwd']:7d}", flush=True)
 
     by_key = {(r["variant"], r["backbone"], r["use_pallas"]): r
               for r in results}

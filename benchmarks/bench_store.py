@@ -67,21 +67,28 @@ def _fresh(ds, hidden):
 
 def bench_store(ds, *, hidden: int, batch_size: int, n_iters: int,
                 fraction=None, warmup: int = None,
-                wb_threshold: float = 0.0):
+                wb_threshold: float = 0.0, sed_decay: float = 0.0,
+                stale_forecast: bool = False):
     """fraction None -> DeviceStore oracle; else TieredStore with
-    device_rows = max(fraction * n, batch_size)."""
+    device_rows = max(fraction * n, batch_size).  ``sed_decay`` turns on
+    the age-weighted Eq.-1 stale branch; ``stale_forecast`` faults stale
+    host rows in extrapolated by the online velocity predictor — both 0/
+    off by default so the parity legs trace the historical step."""
     enc, opt, bb, head = _fresh(ds, hidden)
+    staleness_on = sed_decay > 0.0 or stale_forecast
     if fraction is None:
         store = DeviceStore(ds.n, ds.j_max, hidden)
     else:
         store = TieredStore(ds.n, ds.j_max, hidden,
                             device_rows=max(int(round(fraction * ds.n)),
                                             batch_size),
-                            wb_threshold=wb_threshold)
+                            wb_threshold=wb_threshold,
+                            stale_forecast=stale_forecast)
     state = G.TrainState(bb, head, opt.init((bb, head)),
                          store.init_device_table(), jnp.zeros((), jnp.int32))
     step = jax.jit(G.make_train_step(enc, opt, G.VARIANTS[VARIANT],
-                                     keep_prob=0.5), donate_argnums=(0,))
+                                     keep_prob=0.5, sed_decay=sed_decay),
+                   donate_argnums=(0,))
     sched = DP.epoch_ids(ds, batch_size, rng=np.random.default_rng(0))
     batches = [(ids, jax.tree_util.tree_map(jnp.asarray,
                                             DP._assemble(ds, ids)))
@@ -89,7 +96,10 @@ def bench_store(ds, *, hidden: int, batch_size: int, n_iters: int,
 
     def one(i, t):
         ids, batch = batches[i % len(batches)]
-        table, slots = store.prepare(state_holder["s"].table, ids)
+        # the staleness legs pass the step hint (true-age bookkeeping +
+        # forecast clock); the parity legs keep the historical call
+        table, slots = store.prepare(state_holder["s"].table, ids,
+                                     step=t if staleness_on else None)
         s = state_holder["s"]._replace(table=table)
         s, m = step(s, batch._replace(graph_ids=jnp.asarray(slots)),
                     jax.random.key(t))
@@ -119,7 +129,8 @@ def bench_store(ds, *, hidden: int, batch_size: int, n_iters: int,
     # free for the process-wide one)
     probe = StalenessProbe(keep_prob=0.5, num_sampled=1,
                            seg_valid=ds.seg_valid,
-                           registry=MetricsRegistry())
+                           registry=MetricsRegistry(),
+                           sed_decay=sed_decay, forecast=stale_forecast)
     stale = probe.observe(store, state_holder["s"].table,
                           int(jax.device_get(state_holder["s"].step)))
     t = summarize(times)
@@ -155,6 +166,12 @@ def main():
                          "skips the host write; embeddings here are O(1) "
                          "encoder outputs, so 0.1 skips the near-static "
                          "tail); 0 disables the leg")
+    ap.add_argument("--sed-age-weighting", type=float, default=0.1,
+                    help="λ for the age-weighted leg (exp(-λ·age) folded "
+                         "into Eq.-1's stale branch on the smallest tier); "
+                         "0 disables the leg")
+    ap.add_argument("--no-forecast-leg", action="store_true",
+                    help="skip the --stale-forecast leg")
     args = ap.parse_args()
     n_graphs = args.n_graphs or (48 if args.quick else 96)
     n_iters = args.iters or (6 if args.quick else 20)
@@ -201,6 +218,46 @@ def main():
               f"{gated['store']['wb_skipped_bytes'] / 1024:.1f} KiB)",
               flush=True)
 
+    # age-weighted leg: the churning tier with the exp(-λ·age) stale-branch
+    # decay — ages read true (step hints), effective age measured by the
+    # same probe the launchers publish from
+    weighted = None
+    if args.sed_age_weighting > 0:
+        weighted, _ = bench_store(ds, hidden=args.hidden,
+                                  batch_size=args.batch_size,
+                                  n_iters=n_iters, fraction=FRACTIONS[-1],
+                                  sed_decay=args.sed_age_weighting)
+        weighted["fraction"] = f"{FRACTIONS[-1]}+age"
+        results.append(weighted)
+        print(f"{weighted['fraction']:>8s} {weighted['device_rows']:8d} "
+              f"{weighted['step_ms']:8.2f} "
+              f"{weighted['migration_bytes_per_step']:11d} "
+              f"{weighted['tier_hit_rate']:5.2f}  "
+              f"(eff-age p99 "
+              f"{weighted['staleness']['effective_age_steps']['p99']:.1f} vs "
+              f"row-age p99 "
+              f"{weighted['staleness']['row_age_steps']['p99']:.1f})",
+              flush=True)
+
+    # forecast leg: stale host rows faulted in extrapolated forward by the
+    # online per-row velocity predictor (store/forecast.py)
+    forecast = None
+    if not args.no_forecast_leg:
+        forecast, _ = bench_store(ds, hidden=args.hidden,
+                                  batch_size=args.batch_size,
+                                  n_iters=n_iters, fraction=FRACTIONS[-1],
+                                  stale_forecast=True)
+        forecast["fraction"] = f"{FRACTIONS[-1]}+forecast"
+        results.append(forecast)
+        fc = forecast["store"].get("forecast", {})
+        print(f"{forecast['fraction']:>8s} {forecast['device_rows']:8d} "
+              f"{forecast['step_ms']:8.2f} "
+              f"{forecast['migration_bytes_per_step']:11d} "
+              f"{forecast['tier_hit_rate']:5.2f}  "
+              f"(observed {fc.get('observed_rows', 0)} rows, "
+              f"forecast {fc.get('forecast_rows', 0)} fault-ins)",
+              flush=True)
+
     # contract gates BEFORE the write (a failing run must not pollute the
     # tracked file): tiering must be invisible to the math (ungated legs
     # only — the delta gate trades bounded staleness for traffic), and a
@@ -220,6 +277,17 @@ def main():
         assert gated["migration_bytes_per_step"] < \
             small["migration_bytes_per_step"], \
             "delta-gated migration traffic must be strictly below ungated"
+    if weighted is not None:
+        eff_p99 = weighted["staleness"]["effective_age_steps"]["p99"]
+        raw_p99 = weighted["staleness"]["row_age_steps"]["p99"]
+        assert eff_p99 < raw_p99, \
+            f"age-weighted effective-age p99 {eff_p99} must be strictly " \
+            f"below row-age p99 {raw_p99} — the decay is not shrinking " \
+            "the staleness the step experiences"
+    if forecast is not None:
+        assert forecast["store"]["forecast"]["observed_rows"] > 0, \
+            "the forecaster never observed an eviction delta — the " \
+            "churning tier should feed it every epoch after the first"
 
     summary = {
         "variant": VARIANT,
@@ -241,12 +309,26 @@ def main():
             "wb_skipped_bytes": gated["store"]["wb_skipped_bytes"],
             "gated_below_ungated": True,
         } if gated is not None else None),
+        "age_weighting": ({
+            "sed_decay": args.sed_age_weighting,
+            "step_ms": weighted["step_ms"],
+            "effective_age_p99":
+                weighted["staleness"]["effective_age_steps"]["p99"],
+            "row_age_p99": weighted["staleness"]["row_age_steps"]["p99"],
+            "effective_below_row": True,
+        } if weighted is not None else None),
+        "stale_forecast": ({
+            "step_ms": forecast["step_ms"],
+            "observed_rows": forecast["store"]["forecast"]["observed_rows"],
+            "forecast_rows": forecast["store"]["forecast"]["forecast_rows"],
+        } if forecast is not None else None),
     }
     config = {
         "n_graphs": n_graphs, "batch_size": args.batch_size,
         "hidden": args.hidden, "max_seg_nodes": args.max_seg_nodes,
         "bucket": spec.key, "j_max": ds.j_max, "iters": n_iters,
         "quick": args.quick, "wb_threshold": args.wb_threshold,
+        "sed_age_weighting": args.sed_age_weighting,
     }
     env = {
         "backend": jax.default_backend(),

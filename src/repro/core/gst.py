@@ -143,18 +143,21 @@ class TrainState(NamedTuple):
 
 
 def _fused_sed_pool(h, seg_valid, fresh_mask, drop_mask, stale_valid, *,
-                    keep_prob: float, num_sampled: int, agg: str):
+                    keep_prob: float, num_sampled: int, agg: str,
+                    ages=None, decay: float = 0.0):
     """Eq. 1 η-weighting + ⊕ pooling in ONE fused kernel pass (sed_pool).
 
     Uninitialized stale slots are folded into the drop mask (η = 0), which is
     exactly what the reference path's ``eta * where(fresh, 1, stale_valid)``
-    correction does.
+    correction does.  ``ages``/``decay`` thread the optional staleness decay
+    into the kernel's stale branch (ref.sed_eta); λ=0 keeps the historical
+    4-operand dispatch bit-exact.
     """
     drop_arg = 1.0 - (1.0 - drop_mask) * stale_valid.astype(jnp.float32)
     return kops.sed_aggregate(
         h, seg_valid.astype(jnp.float32), fresh_mask.astype(jnp.float32),
-        drop_arg, keep_prob=keep_prob, num_sampled=num_sampled, agg=agg,
-        use_pallas=True)
+        drop_arg, ages, keep_prob=keep_prob, num_sampled=num_sampled, agg=agg,
+        decay=decay, use_pallas=True)
 
 
 def _fused_plain_pool(h, seg_valid, *, agg: str):
@@ -199,6 +202,8 @@ def make_train_step(
     use_pallas: bool = False,
     table_lookup: Optional[Callable] = None,
     table_update: Optional[Callable] = None,
+    table_lookup_age: Optional[Callable] = None,
+    sed_decay: float = 0.0,
     axis_name: Optional[str] = None,
 ):
     """Returns ``step(state, batch, rng) -> (state, metrics)`` implementing
@@ -219,6 +224,13 @@ def make_train_step(
     (store.prepare) so nothing inside the jitted step knows the table is
     capped.
 
+    sed_decay / table_lookup_age: λ of the staleness decay exp(-λ·age)
+    folded into the stale branch of Eq. 1 (--sed-age-weighting).  λ=0 (the
+    default) traces the exact historical step — no age lookup, no extra
+    operand, bit-exact.  ``table_lookup_age(table, graph_ids) -> (B, J)``
+    reads the per-segment last-refresh step (dist/train.py injects the
+    exchange's ``lookup_ages``); the default reads ``table.age`` directly.
+
     axis_name: when set the step body is assumed to run inside shard_map /
     pmap over that axis — gradients, loss and metrics are pmean'd across it
     before the (replicated) optimizer update.
@@ -228,6 +240,8 @@ def make_train_step(
     fused_sed = use_pallas and variant.use_sed and not variant.sampled_only
     t_lookup = table_lookup or tbl.lookup
     t_update = table_update or tbl.update_sampled
+    use_age = variant.use_sed and variant.use_table and sed_decay > 0.0
+    t_age = table_lookup_age or (lambda table, ids: table.age[ids])
 
     def step(state: TrainState, batch: GSTBatch, rng):
         B, J = batch.seg_valid.shape
@@ -242,9 +256,14 @@ def make_train_step(
         sampled_inputs = _flatten_bs(gather_segments(batch.seg_inputs, idx))
 
         # ---- stale embeddings (no grad) ---------------------------------
+        age_steps = None
         if variant.use_table:
             h_stale, initialized = t_lookup(state.table, batch.graph_ids)
             stale_valid = batch.seg_valid * initialized.astype(batch.seg_valid.dtype)
+            if use_age:
+                age_steps = jnp.maximum(
+                    state.step - t_age(state.table, batch.graph_ids),
+                    0).astype(jnp.float32)
         elif variant.recompute_stale:
             h_all, _ = encode_fn(state.backbone, _flatten_bs(batch.seg_inputs))
             h_stale = jax.lax.stop_gradient(h_all.reshape(B, J, -1))
@@ -266,6 +285,11 @@ def make_train_step(
             eta = eta * jnp.where(
                 fresh_mask > 0, 1.0,
                 stale_valid.astype(jnp.float32))  # uninitialized stale -> 0
+            if age_steps is not None:
+                # staleness decay on the stale branch only — fresh segments
+                # have age 0 by definition (ref.sed_eta's aged formula)
+                eta = eta * jnp.where(fresh_mask > 0, 1.0,
+                                      jnp.exp(-sed_decay * age_steps))
         elif variant.sampled_only:
             eta = fresh_mask
         elif variant.name == "full":
@@ -294,7 +318,8 @@ def make_train_step(
                 scal = head_apply(head, h_comb, "segment_sum")        # (B, J)
                 pool = (lambda x: _fused_sed_pool(
                     x, batch.seg_valid, fresh_mask, drop_mask, stale_valid,
-                    keep_prob=keep_prob, num_sampled=S, agg=agg)
+                    keep_prob=keep_prob, num_sampled=S, agg=agg,
+                    ages=age_steps, decay=sed_decay)
                 ) if fused_sed else None
                 preds = _scalar_head_preds(scal, batch.seg_valid, eta, agg,
                                            pool)
@@ -308,7 +333,7 @@ def make_train_step(
                     h_graph = _fused_sed_pool(
                         h_comb, batch.seg_valid, fresh_mask, drop_mask,
                         stale_valid, keep_prob=keep_prob, num_sampled=S,
-                        agg=agg)
+                        agg=agg, ages=age_steps, decay=sed_decay)
                 else:
                     h_graph = seg.aggregate(h_comb, eta, batch.seg_valid, agg)
                 out = head_apply(head, h_graph, "mlp")

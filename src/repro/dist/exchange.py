@@ -245,6 +245,18 @@ class Exchange:
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         raise NotImplementedError
 
+    def lookup_ages(self, table: tbl.EmbeddingTable, graph_ids
+                    ) -> jnp.ndarray:
+        """Distributed read of the per-segment last-refresh-step plane
+        (``table.age``, (R, J) int32) for global ``graph_ids`` (B,) —
+        the age-weighted SED (``--sed-age-weighting``) input.  Pure row
+        selection like ``lookup``'s init plane, always exact int32 on
+        the wire (no payload codec), answering 0 for rows this exchange
+        doesn't own (sentinel pads included — their η is masked anyway).
+        Only traced when the decay is on, so the default train step's
+        jaxpr is untouched."""
+        raise NotImplementedError
+
     def update_sampled(self, table: tbl.EmbeddingTable, graph_ids, seg_idx,
                        h_new, step) -> tbl.EmbeddingTable:
         raise NotImplementedError
@@ -383,6 +395,11 @@ class Exchange:
         return (jnp.where(mine[:, None, None], e, 0),
                 jnp.where(mine[:, None], i, False))
 
+    def _local_lookup_ages(self, table, graph_ids):
+        mine = (graph_ids // self.rows) == 0
+        local = jnp.clip(graph_ids, 0, self.rows - 1)
+        return jnp.where(mine[:, None], table.age[local], 0)
+
     def _local_write_rows(self, graph_ids):
         mine = (graph_ids // self.rows) == 0
         return jnp.where(mine, graph_ids, self.rows)  # rows => dropped
@@ -440,6 +457,23 @@ class RingExchange(Exchange):
                 ids, init, *parts = _hop(self.axis_name, num_shards,
                                          ids, init, *parts)
         return self.codec.decode(parts), init
+
+    def lookup_ages(self, table, graph_ids):
+        """Age plane over the same D ring hops as ``lookup``'s init plane:
+        the (ids, ages) pair rides the ring, every owner answers its rows
+        in place, exact int32 end to end."""
+        me = jax.lax.axis_index(self.axis_name)
+        rows, num_shards = self.rows, self.num_shards
+        B = graph_ids.shape[0]
+        ages = jnp.zeros((B,) + table.age.shape[1:], table.age.dtype)
+        ids = graph_ids
+        for _ in range(num_shards):
+            mine = (ids // rows) == me
+            local_row = jnp.clip(ids - me * rows, 0, rows - 1)
+            ages = jnp.where(mine[:, None], table.age[local_row], ages)
+            if num_shards > 1:
+                ids, ages = _hop(self.axis_name, num_shards, ids, ages)
+        return ages
 
     def update_sampled(self, table, graph_ids, seg_idx, h_new, step):
         """Distributed ``tbl.update_sampled``: the (ids, seg_idx, payload)
@@ -574,6 +608,23 @@ class AllToAllExchange(Exchange):
         r = jnp.arange(B)
         return (self.codec.decode(tuple(p[owner, r] for p in parts_back)),
                 i_back[owner, r])
+
+    def lookup_ages(self, table, graph_ids):
+        """Age plane over the same all_gather + all_to_all pair as
+        ``lookup``'s init plane — owner answers, one a2a home, direct
+        [owner, r] selection."""
+        rows, D, ax = self.rows, self.num_shards, self.axis_name
+        B = graph_ids.shape[0]
+        if D == 1:
+            return self._local_lookup_ages(table, graph_ids)
+        me = jax.lax.axis_index(ax)
+        all_ids = jax.lax.all_gather(graph_ids, ax)          # (D, B)
+        local = jnp.clip(all_ids - me * rows, 0, rows - 1).reshape(-1)
+        owned = (all_ids // rows).reshape(-1) == me
+        a = jnp.where(owned[:, None], table.age[local], 0)
+        a_back = _a2a(a.reshape((D, B) + table.age.shape[1:]), ax)
+        owner = jnp.clip(graph_ids // rows, 0, D - 1)
+        return a_back[owner, jnp.arange(B)]
 
     def _gathered_writes(self, graph_ids, *payloads):
         """all_gather the global write buffers; returns the RAW gathered
@@ -721,6 +772,27 @@ class BucketedExchange(Exchange):
         return (self.codec.decode(tuple(p[so, pos][inv]
                                         for p in parts_back)),
                 i_back[so, pos][inv])
+
+    def lookup_ages(self, table, graph_ids):
+        """Age plane owner-direct: the same (D, cap) id buckets as
+        ``lookup``, one all_to_all there, one back, inverse-permuted
+        home."""
+        rows, D, ax = self.rows, self.num_shards, self.axis_name
+        B = graph_ids.shape[0]
+        if D == 1:
+            return self._local_lookup_ages(table, graph_ids)
+        cap = self.cap or B
+        order, so, pos = self._plan(graph_ids)
+        buckets = self._bucket(cap, so, pos, graph_ids[order],
+                               jnp.int32(self.sentinel))
+        q = _a2a(buckets, ax)
+        me = jax.lax.axis_index(ax)
+        local = jnp.clip(q - me * rows, 0, rows - 1).reshape(-1)
+        owned = (q // rows).reshape(-1) == me  # False for sentinel slots
+        a = jnp.where(owned[:, None], table.age[local], 0)
+        a_back = _a2a(a.reshape((D, cap) + table.age.shape[1:]), ax)
+        inv = jnp.argsort(order, stable=True)
+        return a_back[so, pos][inv]
 
     def _bucketed_writes(self, graph_ids, *payloads):
         cap = self.cap or graph_ids.shape[0]

@@ -144,7 +144,8 @@ def make_context(mesh: Mesh, n_rows: int,
 
 def make_dist_store(ctx: DistContext, j_max: int, d_h: int,
                     dtype=jnp.float32, evict_policy: str = "lru",
-                    wb_threshold: float = 0.0) -> EmbeddingStore:
+                    wb_threshold: float = 0.0,
+                    stale_forecast: bool = False) -> EmbeddingStore:
     """The context's embedding store: tiered per-shard slices when the
     context carries a device-row cap, the dense device-resident backend
     otherwise.  Either way the device tier is row-sharded over the mesh
@@ -152,7 +153,10 @@ def make_dist_store(ctx: DistContext, j_max: int, d_h: int,
     ``evict_policy``: the tiered device tier's eviction policy
     (store/slots.py — "lru" or "stale-first").  ``wb_threshold``: the
     delta-gated write-back admission threshold (--wb-threshold; 0 keeps
-    every eviction bit-exact)."""
+    every eviction bit-exact).  ``stale_forecast``: fault stale host rows
+    in EXTRAPOLATED forward by the store's online per-row predictor
+    (--stale-forecast, store/forecast.py) — only meaningful for the
+    tiered store, whose host tier is where rows go stale."""
     sh = batch_sharding(ctx)
     if ctx.device_rows_per_shard is None:
         return DeviceStore(ctx.n_rows, j_max, d_h, num_shards=ctx.num_shards,
@@ -160,7 +164,8 @@ def make_dist_store(ctx: DistContext, j_max: int, d_h: int,
     return TieredStore(ctx.n_rows, j_max, d_h,
                        device_rows=ctx.device_rows_per_shard * ctx.num_shards,
                        num_shards=ctx.num_shards, dtype=dtype, sharding=sh,
-                       evict_policy=evict_policy, wb_threshold=wb_threshold)
+                       evict_policy=evict_policy, wb_threshold=wb_threshold,
+                       stale_forecast=stale_forecast)
 
 
 # ---------------------------------------------------------------------------
@@ -274,6 +279,12 @@ def make_dist_train_step(encode_fn, optimizer, variant: G.GSTVariant, *,
     and ``patched`` is ``nxt`` with this step's write-back folded in —
     the ``pref`` of the NEXT call.  The inline path (prefetch=False) is
     unchanged and serves as the bit-exactness oracle."""
+    # age-weighted SED (--sed-age-weighting): the per-segment age plane
+    # travels its own exchange collective (lookup_ages) — only injected
+    # when the decay is on, so the default step's jaxpr is untouched
+    if kwargs.get("sed_decay", 0.0) > 0.0:
+        kwargs.setdefault("table_lookup_age",
+                          _make_ctx_exchange(ctx).lookup_ages)
     if not ctx.prefetch:
         lookup, update, _ = _table_ops(ctx)
         inner = G.make_train_step(encode_fn, optimizer, variant,

@@ -64,7 +64,12 @@ def run_experiment(
     record_curve: bool = False,
     use_pallas: bool = False,
     table_device_rows: Optional[int] = None,
+    evict_policy: str = "lru",
     wb_threshold: float = 0.0,
+    sed_age_weighting: float = 0.0,   # λ of the stale-branch exp(-λ·age)
+                                      # decay in Eq. 1 (0 = off, bit-exact)
+    stale_forecast: bool = False,     # extrapolate stale host rows forward
+                                      # on fault-in (store/forecast.py)
     obs=None,                         # optional repro.obs.Obs bundle: gets a
                                       # per-epoch tick + staleness probe
 ) -> ExperimentResult:
@@ -104,7 +109,9 @@ def run_experiment(
     # bit-identical either way (tests/test_store.py)
     store = (TieredStore(ds.n, ds.j_max, hidden,
                          device_rows=max(table_device_rows, batch_size),
-                         wb_threshold=wb_threshold)
+                         evict_policy=evict_policy,
+                         wb_threshold=wb_threshold,
+                         stale_forecast=stale_forecast)
              if table_device_rows else DeviceStore(ds.n, ds.j_max, hidden))
     state = G.TrainState(bb, head, opt.init((bb, head)),
                          store.init_device_table(),
@@ -118,7 +125,8 @@ def run_experiment(
     step = probe_jit("train.step", jax.jit(G.make_train_step(
         enc, opt, var, num_sampled=num_sampled, keep_prob=keep_prob,
         head_mode=head_mode, loss_kind=loss_kind, agg=agg,
-        use_pallas=use_pallas), donate_argnums=(0,)))
+        use_pallas=use_pallas, sed_decay=sed_age_weighting),
+        donate_argnums=(0,)))
     eval_step = probe_jit("train.eval", jax.jit(
         G.make_eval_step(enc, head_mode=head_mode, loss_kind=loss_kind,
                          agg=agg, use_pallas=use_pallas)))
@@ -134,16 +142,21 @@ def run_experiment(
             ws.append(tup[1].shape[0])
         return float(np.average(ms, weights=ws)) if ms else float("nan")
 
-    def route(tup):
+    # host-side mirror of state.step: the step hint handed to the store on
+    # write paths (train/refresh), so stale-first scoring and the stale-row
+    # forecaster see the TRUE step without a device sync per batch
+    step_counter = {"t": 0}
+
+    def route(tup, step=None):
         """Map the batch's graph ids onto device rows through the store
         (migrating tiers as needed) — identity under the DeviceStore."""
         nonlocal state
-        table, slots = store.prepare(state.table, tup[2])
+        table, slots = store.prepare(state.table, tup[2], step=step)
         state = state._replace(table=table)
         return jnp.asarray(slots)
 
-    def routed(tup):
-        return _to_batch(*tup)._replace(graph_ids=route(tup))
+    def routed(tup, step=None):
+        return _to_batch(*tup)._replace(graph_ids=route(tup, step=step))
 
     # the store owns a write-back thread when tiered — release it even
     # when training raises (try/finally), keeping repeated runs leak-free
@@ -153,7 +166,9 @@ def run_experiment(
         brng = np.random.default_rng(seed + 3)
         last_train = 0.0
         probe = StalenessProbe(keep_prob=keep_prob, num_sampled=num_sampled,
-                               seg_valid=ds.seg_valid)
+                               seg_valid=ds.seg_valid,
+                               sed_decay=sed_age_weighting,
+                               forecast=stale_forecast)
         for epoch in range(epochs):
             ep_metrics = []
             for tup in Bt.batch_iterator(ds, batch_size, rng=brng):
@@ -161,14 +176,21 @@ def run_experiment(
                 # the timed region includes the tier migration — it IS part of
                 # the step cost of a capped-capacity table (bench_store.py)
                 t0 = time.perf_counter()
-                slots = route(tup)   # replaces state.table before step sees it
+                # replaces state.table before the step sees it; the hint is
+                # the step about to WRITE these rows
+                slots = route(tup, step=step_counter["t"])
                 with span("train.step", epoch=epoch):
                     state, m = step(state, batch._replace(graph_ids=slots),
                                     jax.random.key(epoch))
                     jax.block_until_ready(m["loss"])
+                step_counter["t"] += 1
                 iter_times.append(time.perf_counter() - t0)
                 ep_metrics.append(float(m["metric"]))
             last_train = float(np.mean(ep_metrics))
+            # resident rows refreshed by this epoch's writes re-report their
+            # true device-plane ages to the eviction bookkeeping (no-op
+            # under plain LRU)
+            store.refresh_ages(state.table)
             stale = None
             if get_registry().enabled:
                 store.publish_counters()
@@ -187,7 +209,8 @@ def run_experiment(
         finetuned = False
         if var.finetune_head:
             for tup in Bt.batch_iterator(ds, batch_size, rng=brng, shuffle=False):
-                batch = routed(tup)   # replaces state.table before refresh runs
+                # refresh WRITES every requested row at the current step
+                batch = routed(tup, step=step_counter["t"])
                 state = refresh(state, batch)
             ft_opt = make_optimizer("adam", lr=lr * 0.5)
             state = state._replace(opt_state=ft_opt.init(state.head))

@@ -198,16 +198,23 @@ def neighbor_aggregate(h, src, dst, edge_valid, *, num_nodes: int,
     return s / jnp.maximum(deg, 1.0)[:, None], deg
 
 
-@partial(jax.jit, static_argnames=("keep_prob", "num_sampled", "agg", "use_pallas"))
-def sed_aggregate(h, seg_valid, fresh_mask, drop_mask, *, keep_prob: float,
-                  num_sampled: int, agg: str = "mean", use_pallas: bool = True):
-    """Fused Eq.-1 η-weighting + ⊕ pooling over segments."""
+@partial(jax.jit, static_argnames=("keep_prob", "num_sampled", "agg",
+                                   "decay", "use_pallas"))
+def sed_aggregate(h, seg_valid, fresh_mask, drop_mask, ages=None, *,
+                  keep_prob: float, num_sampled: int, agg: str = "mean",
+                  decay: float = 0.0, use_pallas: bool = True):
+    """Fused Eq.-1 η-weighting + ⊕ pooling over segments.
+
+    ``ages``/``decay``: optional (B, J) age-in-steps + λ for the
+    staleness-decayed stale branch (ref.sed_eta); λ=0 keeps the exact
+    historical 4-operand dispatch."""
     if use_pallas:
         return _sed_pool(h, seg_valid, fresh_mask, drop_mask,
                          keep_prob=keep_prob, num_sampled=num_sampled, agg=agg,
+                         ages=ages, decay=decay,
                          interpret=_default_interpret())
     return ref.sed_pool_ref(h, seg_valid, fresh_mask, drop_mask, keep_prob,
-                            num_sampled, agg)
+                            num_sampled, agg, ages, decay)
 
 
 @partial(jax.jit, static_argnames=("dtype", "use_pallas"))

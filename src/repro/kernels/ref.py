@@ -25,12 +25,20 @@ def segment_spmm_batched_ref(h, src, dst, w):
 
 
 def sed_eta(seg_valid, fresh_mask, drop_mask, keep_prob: float,
-            num_sampled: int):
+            num_sampled: int, ages=None, decay: float = 0.0):
     """The Eq.-1 η weights from the three masks: (eta (B, J), J_i (B, 1)).
 
     Single source of truth shared by the sed_pool oracle AND the kernel's
     custom VJP (sed_pool.py) so forward reference and backward cannot drift;
     the in-kernel computation mirrors this formula in-register.
+
+    ``ages``/``decay``: optional staleness decay (VISAGNN-style).  When a
+    per-segment age-in-steps array (B, J) and λ = decay > 0 are given, the
+    STALE branch of Eq. 1 is continuously down-weighted by exp(-λ·age) on
+    top of the SED drop draw — fresh segments are untouched (their age is
+    0 by definition).  The branch is a static Python ``if`` so λ=0 (the
+    default) traces the exact historical jaxpr, keeping the bit-exactness
+    contract by construction.
     """
     valid = seg_valid.astype(jnp.float32)
     fresh = fresh_mask.astype(jnp.float32)
@@ -38,19 +46,24 @@ def sed_eta(seg_valid, fresh_mask, drop_mask, keep_prob: float,
     J_i = jnp.sum(valid, axis=-1, keepdims=True)
     eta_fresh = keep_prob + (1.0 - keep_prob) * J_i / float(num_sampled)
     stale = valid * (1.0 - fresh)
-    eta = (fresh * eta_fresh + stale * (1.0 - drop)) * valid
+    stale_term = stale * (1.0 - drop)
+    if ages is not None and decay > 0.0:
+        stale_term = stale_term * jnp.exp(-decay * ages.astype(jnp.float32))
+    eta = (fresh * eta_fresh + stale_term) * valid
     return eta, J_i
 
 
 def sed_pool_ref(h, seg_valid, fresh_mask, drop_mask, keep_prob: float,
-                 num_sampled: int, agg: str = "mean"):
+                 num_sampled: int, agg: str = "mean", ages=None,
+                 decay: float = 0.0):
     """Fused SED η-weighting (Eq. 1) + segment aggregation ⊕.
 
     h: (B, J, d); masks: (B, J).  Matches core.segment.sed_weights +
     core.segment.aggregate composed (given the same drop draw).
+    ``ages``/``decay`` add the optional staleness decay (see ``sed_eta``).
     """
     eta, J_i = sed_eta(seg_valid, fresh_mask, drop_mask, keep_prob,
-                       num_sampled)
+                       num_sampled, ages, decay)
     s = jnp.sum(h * eta[..., None].astype(h.dtype), axis=1)
     if agg == "sum":
         return s

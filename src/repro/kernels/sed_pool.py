@@ -37,6 +37,20 @@ def _sed_pool_kernel(h_ref, valid_ref, fresh_ref, drop_ref, out_ref, *,
     out_ref[...] = s.astype(out_ref.dtype)
 
 
+def _sed_pool_aged_kernel(h_ref, valid_ref, fresh_ref, drop_ref, age_ref,
+                          out_ref, *, keep_prob: float, num_sampled: int,
+                          agg: str, decay: float):
+    h = h_ref[...]                           # (b_blk, J, d_blk)
+    # age-weighted η: the stale branch carries the extra exp(-λ·age)
+    # factor, still through the shared ref.sed_eta formula
+    eta, J_i = sed_eta(valid_ref[...], fresh_ref[...], drop_ref[...],
+                       keep_prob, num_sampled, age_ref[...], decay)
+    s = jnp.sum(h.astype(jnp.float32) * eta[..., None], axis=1)  # (b_blk, d_blk)
+    if agg == "mean":
+        s = s / jnp.maximum(J_i, 1.0)
+    out_ref[...] = s.astype(out_ref.dtype)
+
+
 def _sed_pool_raw(h, seg_valid, fresh_mask, drop_mask, keep_prob: float,
                   num_sampled: int, agg: str, b_blk: int, d_blk: int,
                   interpret: bool):
@@ -104,14 +118,96 @@ def _sed_bwd(keep_prob, num_sampled, agg, b_blk, d_blk, interpret, res, g):
 _sed_pool.defvjp(_sed_fwd, _sed_bwd)
 
 
+def _sed_pool_aged_raw(h, seg_valid, fresh_mask, drop_mask, ages,
+                       keep_prob: float, num_sampled: int, agg: str,
+                       decay: float, b_blk: int, d_blk: int,
+                       interpret: bool):
+    B, J, d = h.shape
+    b_blk = min(b_blk, B)
+    d_blk = min(d_blk, d)
+    pad_b = (-B) % b_blk
+    pad_d = (-d) % d_blk
+    ages = ages.astype(jnp.float32)
+    if pad_b:
+        h = jnp.pad(h, ((0, pad_b), (0, 0), (0, 0)))
+        seg_valid = jnp.pad(seg_valid, ((0, pad_b), (0, 0)))
+        fresh_mask = jnp.pad(fresh_mask, ((0, pad_b), (0, 0)))
+        drop_mask = jnp.pad(drop_mask, ((0, pad_b), (0, 0)))
+        ages = jnp.pad(ages, ((0, pad_b), (0, 0)))
+    if pad_d:
+        h = jnp.pad(h, ((0, 0), (0, 0), (0, pad_d)))
+    grid = ((B + pad_b) // b_blk, (d + pad_d) // d_blk)
+    out = pl.pallas_call(
+        functools.partial(_sed_pool_aged_kernel, keep_prob=keep_prob,
+                          num_sampled=num_sampled, agg=agg, decay=decay),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b_blk, J, d_blk), lambda bb, db: (bb, 0, db)),
+            pl.BlockSpec((b_blk, J), lambda bb, db: (bb, 0)),
+            pl.BlockSpec((b_blk, J), lambda bb, db: (bb, 0)),
+            pl.BlockSpec((b_blk, J), lambda bb, db: (bb, 0)),
+            pl.BlockSpec((b_blk, J), lambda bb, db: (bb, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_blk, d_blk), lambda bb, db: (bb, db)),
+        out_shape=jax.ShapeDtypeStruct((B + pad_b, d + pad_d), h.dtype),
+        interpret=interpret,
+    )(h, seg_valid, fresh_mask, drop_mask, ages)
+    return out[:B, :d]
+
+
+# Separate custom_vjp for the aged path: the λ=0 path above keeps its
+# historical jaxpr untouched (bit-exactness by construction), and ages —
+# like the masks — are sampling/bookkeeping artifacts with zero cotangent.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10, 11))
+def _sed_pool_aged(h, seg_valid, fresh_mask, drop_mask, ages, keep_prob,
+                   num_sampled, agg, decay, b_blk, d_blk, interpret):
+    return _sed_pool_aged_raw(h, seg_valid, fresh_mask, drop_mask, ages,
+                              keep_prob, num_sampled, agg, decay, b_blk,
+                              d_blk, interpret)
+
+
+def _sed_aged_fwd(h, seg_valid, fresh_mask, drop_mask, ages, keep_prob,
+                  num_sampled, agg, decay, b_blk, d_blk, interpret):
+    out = _sed_pool_aged_raw(h, seg_valid, fresh_mask, drop_mask, ages,
+                             keep_prob, num_sampled, agg, decay, b_blk,
+                             d_blk, interpret)
+    dtype_token = jnp.zeros((0,), h.dtype)
+    return out, (seg_valid, fresh_mask, drop_mask, ages, dtype_token)
+
+
+def _sed_aged_bwd(keep_prob, num_sampled, agg, decay, b_blk, d_blk,
+                  interpret, res, g):
+    seg_valid, fresh_mask, drop_mask, ages, dtype_token = res
+    eta, J_i = sed_eta(seg_valid, fresh_mask, drop_mask, keep_prob,
+                       num_sampled, ages, decay)
+    g = g.astype(jnp.float32)
+    if agg == "mean":
+        g = g / jnp.maximum(J_i, 1.0)
+    dh = (g[:, None, :] * eta[..., None]).astype(dtype_token.dtype)
+    return (dh, jnp.zeros_like(seg_valid), jnp.zeros_like(fresh_mask),
+            jnp.zeros_like(drop_mask), jnp.zeros(ages.shape, jnp.float32))
+
+
+_sed_pool_aged.defvjp(_sed_aged_fwd, _sed_aged_bwd)
+
+
 def sed_pool(h, seg_valid, fresh_mask, drop_mask, *, keep_prob: float,
-             num_sampled: int, agg: str = "mean", b_blk: int = DEFAULT_B_BLK,
+             num_sampled: int, agg: str = "mean", ages=None,
+             decay: float = 0.0, b_blk: int = DEFAULT_B_BLK,
              d_blk: int = DEFAULT_D_BLK, interpret: bool = False):
     """h: (B, J, d); masks: (B, J) -> (B, d) pooled graph embedding.
 
     One fused pallas_call; differentiable wrt h (custom VJP — the mask
     cotangents are zero, matching the reference path where gradients die at
     the top_k / comparison that produced them).
+
+    ``ages``/``decay``: optional (B, J) per-segment age-in-steps and λ for
+    the staleness-decayed η (ref.sed_eta).  λ=0 (or no ages) dispatches to
+    the historical 4-operand kernel — identical jaxpr, bit-exact.
     """
+    if ages is not None and decay > 0.0:
+        return _sed_pool_aged(h, seg_valid, fresh_mask, drop_mask, ages,
+                              keep_prob, num_sampled, agg, decay, b_blk,
+                              d_blk, interpret)
     return _sed_pool(h, seg_valid, fresh_mask, drop_mask, keep_prob,
                      num_sampled, agg, b_blk, d_blk, interpret)

@@ -32,6 +32,7 @@ def build_engine(args):
         table_device_rows=args.table_device_rows,
         evict_policy=args.evict_policy,
         wb_threshold=args.wb_threshold,
+        stale_forecast=args.stale_forecast,
         stream_chunk=args.stream_chunk,
     )
     return ServeEngine(cfg, seed=args.seed)
@@ -89,6 +90,15 @@ def main(argv=None):
                          "skip the host-tier emb write for spilled rows "
                          "whose embedding moved less than this (max-abs) "
                          "while device-resident. 0 = gate off, bit-exact")
+    ap.add_argument("--stale-forecast", action="store_true",
+                    help="back the cache's tiered store with the online "
+                         "per-row velocity forecaster (store/forecast.py); "
+                         "a no-op for the offline replay, whose cache rows "
+                         "never drift — train-while-serve plumbing")
+    ap.add_argument("--popularity", type=float, default=0.0,
+                    help="repeat-request skew: P(graph) ∝ "
+                         "times_served**popularity over distinct seen "
+                         "graphs (0 = uniform, 1 = rich-get-richer)")
     ap.add_argument("--max-seg-nodes", type=int, default=64)
     ap.add_argument("--stream-chunk", type=int, default=8)
     ap.add_argument("--warmup", type=int, default=4,
@@ -108,7 +118,8 @@ def main(argv=None):
 
     engine = build_engine(args)
     tc = TrafficConfig(n_unique=args.unique, n_requests=args.requests,
-                       duplicate_rate=args.duplicate_rate, seed=args.seed)
+                       duplicate_rate=args.duplicate_rate,
+                       popularity=args.popularity, seed=args.seed)
     stream = make_request_stream(tc)
     obs = Obs.from_args(args, run="serve_graphs",
                         backbone=args.backbone, requests=args.requests,
@@ -152,6 +163,10 @@ def _run(args, engine, stream, obs):
     print(f"  encode launches   {s['encode_launches']} "
           f"({s['encoded_segments']} segments encoded, "
           f"{s['pallas_launches']} pallas kernel launches)")
+    if s.get("truncated_nodes") or s.get("truncated_edges"):
+        print(f"  TRUNCATED         {s['truncated_nodes']} nodes, "
+              f"{s['truncated_edges']} edges dropped by catch-all "
+              f"bucket overflow (repro.obs.gate fails on this)")
     if s["cache"]:
         c = s["cache"]
         print(f"  cache             hit-rate {c['hit_rate']:.2f} "

@@ -41,7 +41,10 @@ def train_graph(args, obs):
         finetune_epochs=args.finetune_epochs, keep_prob=args.keep_prob,
         seed=args.seed, use_pallas=args.use_pallas,
         table_device_rows=args.table_device_rows,
-        wb_threshold=args.wb_threshold, obs=obs)
+        evict_policy=args.evict_policy,
+        wb_threshold=args.wb_threshold,
+        sed_age_weighting=args.sed_age_weighting,
+        stale_forecast=args.stale_forecast, obs=obs)
     print(f"[graph/{args.dataset}] {args.backbone} {args.variant}"
           f"{' [pallas]' if args.use_pallas else ''}: "
           f"train={r.train_metric:.3f} test={r.test_metric:.3f} "
@@ -75,7 +78,9 @@ def train_seq(args, obs):
     store = (TieredStore(args.n_docs, J, cfg.d_model,
                          device_rows=max(args.table_device_rows,
                                          args.batch_size),
-                         wb_threshold=args.wb_threshold)
+                         evict_policy=args.evict_policy,
+                         wb_threshold=args.wb_threshold,
+                         stale_forecast=args.stale_forecast)
              if args.table_device_rows
              else DeviceStore(args.n_docs, J, cfg.d_model))
     state = G.TrainState(params, head, opt.init((params, head)),
@@ -88,15 +93,21 @@ def train_seq(args, obs):
     # donate the state so the device-tier table updates in place
     step = jax.jit(G.make_train_step(
         encode, opt, G.VARIANTS[args.variant], keep_prob=args.keep_prob,
-        use_pallas=args.use_pallas), donate_argnums=(0,))
+        use_pallas=args.use_pallas, sed_decay=args.sed_age_weighting),
+        donate_argnums=(0,))
     try:
         rng = np.random.default_rng(args.seed)
-        probe = StalenessProbe(keep_prob=args.keep_prob, num_sampled=1)
+        probe = StalenessProbe(keep_prob=args.keep_prob, num_sampled=1,
+                               sed_decay=args.sed_age_weighting,
+                               forecast=args.stale_forecast)
         it = 0
         t0 = time.time()
         while it < args.steps:
             for tup in doc_batch_iterator(docs, args.batch_size, rng=rng):
-                table, slots = store.prepare(state.table, np.asarray(tup[2]))
+                # step hint: the train step about to WRITE these rows —
+                # feeds stale-first scoring and the stale-row forecaster
+                table, slots = store.prepare(state.table, np.asarray(tup[2]),
+                                             step=it)
                 state = state._replace(table=table)
                 batch = G.GSTBatch({"tokens": jnp.asarray(tup[0]["tokens"])},
                                    jnp.asarray(tup[1]), jnp.asarray(slots),
@@ -193,6 +204,21 @@ def main():
                          "whose embedding moved less than this (max-abs) "
                          "while resident (store/writeback.delta_gate). "
                          "0 = gate off, bit-exact store")
+    ap.add_argument("--evict-policy", default="lru",
+                    choices=["lru", "stale-first"],
+                    help="tiered-store eviction policy under "
+                         "--table-device-rows (stale_first scores by the "
+                         "row's true last-write step)")
+    ap.add_argument("--sed-age-weighting", type=float, default=0.0,
+                    help="λ of the exp(-λ·age) staleness decay folded into "
+                         "the stale branch of Eq.-1 η (graph track, "
+                         "use_sed+use_table variants). 0 = off, bit-exact "
+                         "to the unweighted step")
+    ap.add_argument("--stale-forecast", action="store_true",
+                    help="extrapolate stale host-tier rows forward by their "
+                         "age on fault-in via the online per-row velocity "
+                         "forecaster (store/forecast.py); needs "
+                         "--table-device-rows")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--lr", type=float, default=1e-3)
     # seq/lm track

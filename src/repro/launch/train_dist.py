@@ -119,6 +119,17 @@ def main(argv=None):
                          "less than this (max-abs) while resident "
                          "(store/writeback.delta_gate).  0 = gate off, "
                          "bit-exact store")
+    ap.add_argument("--sed-age-weighting", type=float, default=0.0,
+                    help="λ of the exp(-λ·age) staleness decay folded into "
+                         "the stale branch of Eq.-1 η (use_sed+use_table "
+                         "variants; ages read exactly through the exchange "
+                         "collective).  0 = off, bit-exact to the "
+                         "unweighted step")
+    ap.add_argument("--stale-forecast", action="store_true",
+                    help="extrapolate stale host-tier rows forward by "
+                         "their age on fault-in via the online per-row "
+                         "velocity forecaster (store/forecast.py); needs "
+                         "--table-device-rows")
     # repro.obs is jax-free, so this is safe before _force_device_count
     from repro.obs import (Obs, StalenessProbe, add_obs_args,
                            record_exchange_bytes, record_prefetch_exchange)
@@ -243,12 +254,14 @@ def main(argv=None):
                           patch_cap=patch_cap)
     store = DT.make_dist_store(ctx, ds.j_max, args.hidden,
                                evict_policy=args.evict_policy,
-                               wb_threshold=args.wb_threshold)
+                               wb_threshold=args.wb_threshold,
+                               stale_forecast=args.stale_forecast)
     state = DT.device_state(ctx, state, store=store)
     step = DT.make_dist_train_step(enc, opt, var, ctx=ctx,
                                    keep_prob=args.keep_prob,
                                    num_sampled=args.num_sampled,
-                                   use_pallas=args.use_pallas)
+                                   use_pallas=args.use_pallas,
+                                   sed_decay=args.sed_age_weighting)
     eval_step = DT.make_dist_eval_step(enc, ctx=ctx,
                                        use_pallas=args.use_pallas)
     ex_model = EXC.make_exchange(exchange, axis_name=DT.AXIS,
@@ -278,7 +291,9 @@ def main(argv=None):
                         epochs=args.epochs, batch_size=args.batch_size)
     probe = StalenessProbe(keep_prob=args.keep_prob,
                            num_sampled=args.num_sampled,
-                           seg_valid=ds.seg_valid)
+                           seg_valid=ds.seg_valid,
+                           sed_decay=args.sed_age_weighting,
+                           forecast=args.stale_forecast)
 
     try:
         # monotone per-begin counter, same clock the jitted steps write
@@ -409,6 +424,10 @@ def main(argv=None):
             print(f"epoch {epoch}: loss={float(losses[-1]):.4f} "
                   f"host_blocked={last_stats.host_blocked_ms_per_batch:.2f} "
                   f"ms/batch", flush=True)
+            # resident rows rewritten this epoch re-report their true
+            # device-plane ages to the eviction bookkeeping (no-op under
+            # plain LRU)
+            store.refresh_ages(state.table)
             if obs.enabled:
                 # per-epoch observability: staleness probe over the merged
                 # table view + registry delta() — PER-EPOCH rates, not the

@@ -16,9 +16,13 @@ Checks:
   * every JSONL stream parses, ends with a ``summary`` record, and that
     summary carries the required metric families;
   * serve: ``serve.latency_ms`` p99 <= --serve-p99-ms and
-    ``serve.encode_launches`` <= --max-encode-launches;
+    ``serve.encode_launches`` <= --max-encode-launches; nonzero
+    ``serve.bucket.truncated_*`` counters fail unless --allow-truncation;
   * train: ``staleness.row_age`` p99 <= the SED-implied bound
     (:func:`repro.obs.staleness.sed_age_bound` over the run geometry);
+    --effective-age-below-row-age additionally requires the weighted/
+    forecast run's ``staleness.effective_age`` p99 strictly below the
+    row-age p99 (of --baseline-jsonl when given, else the same stream);
   * every trace passes :func:`repro.obs.trace.validate_chrome_trace`;
   * memory (``--memory-json BENCH_gst_memory.json``, the bench_memory.py
     sweep): the GST train-step temp (activation) bytes stay flat while
@@ -233,6 +237,23 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "(exchange.prefetch.bytes.*, exchange.prefetch."
                          "patched_rows) in the train stream — CI pins "
                          "this on the --prefetch-lookups leg")
+    ap.add_argument("--effective-age-below-row-age", action="store_true",
+                    help="require staleness.effective_age p99 STRICTLY "
+                         "below staleness.row_age p99 — the staleness-"
+                         "intelligence acceptance gate: age weighting / "
+                         "forecasting must reduce the age the training "
+                         "step experiences, not just relabel it")
+    ap.add_argument("--baseline-jsonl", default=None,
+                    help="unweighted baseline train stream: its "
+                         "staleness.row_age p99 becomes the reference the "
+                         "--effective-age-below-row-age check compares "
+                         "against (default: the --train-jsonl stream's "
+                         "own row_age)")
+    ap.add_argument("--allow-truncation", action="store_true",
+                    help="tolerate nonzero serve.bucket.truncated_* "
+                         "counters in the serve stream (catch-all bucket "
+                         "overflow drops nodes/edges from predictions; "
+                         "fails the gate by default)")
     args = ap.parse_args(argv)
 
     checks = []
@@ -273,6 +294,27 @@ def main(argv: Optional[List[str]] = None) -> int:
                         f"num_sampled={args.num_sampled}) — staleness "
                         "bookkeeping or the refresh pass regressed")
                 checks.append(f"row-age p99 {p99:.1f} <= bound {bound:.1f}")
+            if args.effective_age_below_row_age:
+                eff_p99 = metric_value(summary, "staleness.effective_age",
+                                       "p99", args.train_jsonl)
+                if args.baseline_jsonl:
+                    base = final_summary(load_jsonl(args.baseline_jsonl),
+                                         args.baseline_jsonl)
+                    row_p99 = metric_value(base, "staleness.row_age", "p99",
+                                           args.baseline_jsonl)
+                    ref = args.baseline_jsonl
+                else:
+                    row_p99 = metric_value(summary, "staleness.row_age",
+                                           "p99", args.train_jsonl)
+                    ref = args.train_jsonl
+                if not eff_p99 < row_p99:
+                    raise GateFailure(
+                        f"staleness.effective_age p99 {eff_p99:.2f} is not "
+                        f"strictly below staleness.row_age p99 {row_p99:.2f} "
+                        f"(reference {ref}) — age weighting/forecasting is "
+                        "not reducing the staleness the step experiences")
+                checks.append(f"effective-age p99 {eff_p99:.2f} < "
+                              f"row-age p99 {row_p99:.2f}")
 
         if args.serve_jsonl:
             records = load_jsonl(args.serve_jsonl)
@@ -300,6 +342,24 @@ def main(argv: Optional[List[str]] = None) -> int:
                         "padding/batching regressed")
                 checks.append(f"encode launches {launches:.0f} <= "
                               f"{args.max_encode_launches:.0f}")
+            # catch-all bucket overflow: absent counters = nothing was
+            # truncated (the engine only publishes them on overflow)
+            metrics = summary.get("metrics", {})
+            trunc = {name: float(metrics[name] or 0)
+                     for name in ("serve.bucket.truncated_nodes",
+                                  "serve.bucket.truncated_edges")
+                     if name in metrics}
+            dropped = sum(trunc.values())
+            if dropped and not args.allow_truncation:
+                detail = ", ".join(f"{k.rsplit('.', 1)[-1]}={v:.0f}"
+                                   for k, v in sorted(trunc.items()))
+                raise GateFailure(
+                    f"serve catch-all bucket truncated input ({detail}) — "
+                    "predictions silently dropped graph structure; size "
+                    "the ladder up or pass --allow-truncation")
+            checks.append(
+                "serve truncation: none" if not dropped else
+                f"serve truncation: {dropped:.0f} dropped (allowed)")
 
         for mem_path in args.memory_json:
             checks.extend(check_memory_json(

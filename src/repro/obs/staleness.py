@@ -12,6 +12,13 @@ Published metric families (all through the process-wide registry):
   staleness.row_age           histogram, steps — age of every initialized
                               (row, segment) slot of the table at probe
                               time (``step - age``)
+  staleness.effective_age     histogram, steps — the age the training step
+                              *experiences* once staleness intelligence is
+                              on: age·exp(-λ·age) under --sed-age-weighting
+                              (a decayed slot contributes proportionally
+                              less signal), 0 for forecast-eligible slots
+                              under --stale-forecast.  Published only when
+                              either knob is on.
   staleness.init_fraction     gauge — fraction of valid segment slots
                               initialized
   staleness.sed_drop_rate     gauge — the SED effective drop rate: the
@@ -133,13 +140,23 @@ class StalenessProbe:
     """
 
     def __init__(self, *, keep_prob: float = 0.5, num_sampled: int = 1,
-                 seg_valid=None, registry: Optional[MetricsRegistry] = None):
+                 seg_valid=None, registry: Optional[MetricsRegistry] = None,
+                 sed_decay: float = 0.0, forecast: bool = False,
+                 forecast_min_age: int = 1):
         self.keep_prob = keep_prob
         self.num_sampled = num_sampled
         # (n_rows, J) validity of the dataset's segment slots; None = every
         # slot counts (geometry without padding info)
         self.seg_valid = None if seg_valid is None else np.asarray(seg_valid)
         self._registry = registry
+        # staleness-intelligence knobs: with age-weighted SED the model only
+        # *feels* age through exp(-λ·age), and with forecasting a stale row
+        # is extrapolated to the present before it is consumed — the
+        # effective-age histogram records what the training step actually
+        # experiences, next to the raw row_age it is derived from
+        self.sed_decay = float(sed_decay)
+        self.forecast = bool(forecast)
+        self.forecast_min_age = int(forecast_min_age)
 
     @property
     def registry(self) -> MetricsRegistry:
@@ -162,6 +179,20 @@ class StalenessProbe:
         hist = reg.histogram("staleness.row_age", buckets=AGE_BUCKETS_STEPS,
                              unit="steps")
         hist.observe_many(ages_steps)
+        eff = None
+        if self.sed_decay > 0.0 or self.forecast:
+            # the age the step EXPERIENCES: η-decay scales a stale slot's
+            # contribution by exp(-λ·age), so its effective age (the age
+            # weighted by how much of it survives into the loss) is
+            # age·exp(-λ·age); a forecast-eligible slot is extrapolated to
+            # the present, so its effective age is 0.  Published only when
+            # a knob is on — default telemetry streams stay identical.
+            eff = ages_steps * np.exp(-self.sed_decay * ages_steps)
+            if self.forecast:
+                eff = np.where(ages_steps >= self.forecast_min_age, 0.0, eff)
+            reg.histogram("staleness.effective_age",
+                          buckets=AGE_BUCKETS_STEPS,
+                          unit="steps").observe_many(eff)
         n_valid = int(valid.sum())
         init_frac = float(live.sum()) / n_valid if n_valid else 0.0
         reg.set("staleness.init_fraction", init_frac)
@@ -177,6 +208,8 @@ class StalenessProbe:
             "init_fraction": init_frac,
             **sed,
         }
+        if eff is not None:
+            out["effective_age_steps"] = summarize(eff)
         return out
 
     def observe_store_counters(self, store_stats: Dict) -> None:

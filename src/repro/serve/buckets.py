@@ -53,6 +53,16 @@ def choose_bucket(ladder: Sequence[BucketSpec], n_nodes: int, n_edges: int) -> i
     return len(ladder) - 1
 
 
+def truncation_counts(n_nodes: int, n_edges: int,
+                      spec: BucketSpec) -> Tuple[int, int]:
+    """How many nodes/edges ``pad_to_bucket`` will DROP for a segment of
+    this size routed to ``spec`` — nonzero only for catch-all overflow
+    (choose_bucket routes every fitting segment to a bucket that holds
+    it).  The engine counts these per request so silent truncation
+    becomes a published counter the obs gate can fail on."""
+    return (max(n_nodes - spec.m_max, 0), max(n_edges - spec.e_max, 0))
+
+
 def count_local_edges(graph: SyntheticGraph, node_ids: np.ndarray) -> int:
     sel = np.isin(graph.edges[:, 0], node_ids) & np.isin(graph.edges[:, 1], node_ids)
     return int(sel.sum())

@@ -49,6 +49,7 @@ from repro.serve.buckets import (
     default_ladder,
     pad_to_bucket,
     segment_fingerprint,
+    truncation_counts,
 )
 from repro.serve.cache import SegmentCache, next_pow2
 from repro.store import StoreCounters, TieredStore
@@ -168,6 +169,12 @@ class ServeConfig:
     # that moved less than this while device-resident (store/writeback.py);
     # 0 keeps the store bit-exact
     wb_threshold: float = 0.0
+    # online per-row forecasting of stale host-tier cache rows on fault-in
+    # (store/forecast.py).  The offline engine's cache rows are written
+    # once and never drift, and its store path passes no step hints, so
+    # this is plumbing for the train-while-serve deployment — a no-op
+    # (bit-exact) for the offline replay either way
+    stale_forecast: bool = False
     stream_chunk: int = 8
 
     def resolved_ladder(self) -> Tuple[BucketSpec, ...]:
@@ -194,6 +201,8 @@ class ServeStats:
     encode_launches: int = 0           # jitted bucket-encode invocations
     encoded_segments: int = 0          # segments that actually ran the GNN
     pallas_launches: int = 0           # encode kernel launches (pallas path)
+    truncated_nodes: int = 0           # nodes dropped by catch-all overflow
+    truncated_edges: int = 0           # edges dropped by catch-all overflow
     wall_s: float = 0.0
     # fixed-bucket histogram, not a per-request list: a replay of any
     # length summarizes in O(buckets) memory (obs.metrics)
@@ -212,6 +221,8 @@ class ServeStats:
             "encode_launches": self.encode_launches,
             "encoded_segments": self.encoded_segments,
             "pallas_launches": self.pallas_launches,
+            "truncated_nodes": self.truncated_nodes,
+            "truncated_edges": self.truncated_edges,
             "cache": dict(self.cache),
         }
 
@@ -239,7 +250,8 @@ class ServeEngine:
             store = TieredStore(cfg.cache_capacity, 1, cfg.hidden,
                                 device_rows=cfg.table_device_rows,
                                 evict_policy=cfg.evict_policy,
-                                wb_threshold=cfg.wb_threshold)
+                                wb_threshold=cfg.wb_threshold,
+                                stale_forecast=cfg.stale_forecast)
         self.cache = (SegmentCache(cfg.cache_capacity, cfg.hidden, store=store)
                       if cfg.cache_enabled else None)
         self.stats = ServeStats()
@@ -284,15 +296,33 @@ class ServeEngine:
     # -- request processing ------------------------------------------------
 
     def _segment_request(self, graph: SyntheticGraph):
-        """Partition + route one graph; returns [(key, bucket_idx, padded)]."""
+        """Partition + route one graph; returns [(key, bucket_idx, padded)].
+
+        Catch-all overflow is counted, not silent: segments larger than the
+        last bucket's shape lose their overflow nodes/edges to pad_segment's
+        truncation — a prediction-accuracy hazard the obs gate fails on
+        (``repro.obs.gate --check serve``) unless --allow-truncation."""
         segs = partition_graph(len(graph.x), graph.edges, self.cfg.max_seg_nodes,
                                self.cfg.partition, self.cfg.partition_seed)
         items = []
+        tn = te = 0
         for s in segs:
             ne = count_local_edges(graph, s)
             bi = choose_bucket(self.ladder, len(s), ne)
+            dn, de = truncation_counts(len(s), ne, self.ladder[bi])
+            tn += dn
+            te += de
             padded = pad_to_bucket(graph, s, self.ladder[bi])
             items.append((segment_fingerprint(padded, bi), bi, padded))
+        if tn or te:
+            self.stats.truncated_nodes += tn
+            self.stats.truncated_edges += te
+            reg = get_registry()
+            if reg.enabled:
+                if tn:
+                    reg.inc("serve.bucket.truncated_nodes", tn, unit="nodes")
+                if te:
+                    reg.inc("serve.bucket.truncated_edges", te, unit="edges")
         return items
 
     def process(self, graphs: Sequence[SyntheticGraph],

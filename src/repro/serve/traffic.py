@@ -23,6 +23,12 @@ class TrafficConfig:
     n_unique: int = 24            # unique graphs in the pool
     n_requests: int = 64          # total request stream length
     duplicate_rate: float = 0.5   # P(request repeats an already-seen graph)
+    popularity: float = 0.0       # repeat-pick skew over distinct seen
+                                  # graphs: P(g) ∝ times_served(g)**popularity.
+                                  # 0 = uniform over distinct seen ids (the
+                                  # documented default), 1 = proportional
+                                  # rich-get-richer (the old accidental
+                                  # behavior), >1 = steeper head
     comm_range: Tuple[int, int] = (2, 12)    # wide -> mixed graph sizes
     comm_size_range: Tuple[int, int] = (12, 48)
     n_types: int = 5
@@ -45,18 +51,33 @@ def make_graph_pool(cfg: TrafficConfig) -> List[SyntheticGraph]:
 
 def make_request_stream(cfg: TrafficConfig) -> List[SyntheticGraph]:
     """Request stream over the pool.  The first occurrence of each graph is
-    always a cold miss; with probability duplicate_rate a request re-serves a
-    uniformly chosen already-seen graph."""
+    always a cold miss; with probability duplicate_rate a request re-serves
+    an already-seen graph — uniformly over DISTINCT seen ids by default,
+    or skewed ∝ times_served**popularity when cfg.popularity > 0.
+
+    (The stream used to sample from the seen list WITH duplicates, which
+    silently compounded popularity — every repeat made the next repeat of
+    the same graph more likely — inflating cache hit-rates beyond what the
+    docstring promised.  That behavior is now the explicit popularity=1
+    setting.)"""
     pool = make_graph_pool(cfg)
     rng = np.random.default_rng(cfg.seed + 1)
     stream: List[SyntheticGraph] = []
-    seen: List[int] = []
+    seen: List[int] = []              # distinct seen ids, arrival order
+    count: dict = {}                  # id -> times served
     fresh = list(range(len(pool)))
     for _ in range(cfg.n_requests):
         if seen and (not fresh or rng.random() < cfg.duplicate_rate):
-            gi = int(seen[int(rng.integers(len(seen)))])
+            if cfg.popularity > 0.0:
+                w = np.array([count[g] for g in seen], np.float64)
+                w = w ** cfg.popularity
+                gi = int(rng.choice(seen, p=w / w.sum()))
+            else:
+                gi = int(seen[int(rng.integers(len(seen)))])
         else:
             gi = fresh.pop(0)
-        seen.append(gi)
+        if gi not in count:
+            seen.append(gi)
+        count[gi] = count.get(gi, 0) + 1
         stream.append(pool[gi])
     return stream

@@ -17,12 +17,13 @@ from repro.store.base import (  # noqa: F401
     padded_rows,
     rows_per_shard,
 )
+from repro.store.forecast import RowForecaster  # noqa: F401
 from repro.store.slots import SlotMap  # noqa: F401
 from repro.store.tiered import TieredStore  # noqa: F401
 from repro.store.writeback import AsyncHostWriter, delta_gate  # noqa: F401
 
 __all__ = [
     "AsyncHostWriter", "DeviceStore", "EmbeddingStore", "PreparedMigration",
-    "SlotMap", "StoreCounters", "TieredStore", "delta_gate",
+    "RowForecaster", "SlotMap", "StoreCounters", "TieredStore", "delta_gate",
     "padded_rows", "rows_per_shard",
 ]

@@ -262,6 +262,11 @@ class EmbeddingStore:
         bookkeeping merged across tiers (serving stats)."""
         raise NotImplementedError
 
+    def refresh_ages(self, table: tbl.EmbeddingTable) -> None:
+        """Re-report device-plane ages to the eviction bookkeeping (the
+        TieredStore stale-first readback); a no-op for backends whose
+        eviction never consults ages."""
+
     def flush_writebacks(self) -> None:
         """Wait until every pending device->host write-back has landed."""
 

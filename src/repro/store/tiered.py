@@ -49,6 +49,7 @@ from repro.obs.memory import get_probe, probe_jit
 from repro.obs.trace import span
 from repro.store.base import (EmbeddingStore, PreparedMigration,
                               device_rows_per_shard)
+from repro.store.forecast import RowForecaster
 from repro.store.slots import SlotMap
 from repro.store.writeback import AsyncHostWriter, delta_gate
 
@@ -58,7 +59,7 @@ class TieredStore(EmbeddingStore):
                  device_rows: int, num_shards: int = 1, dtype=jnp.float32,
                  sharding=None, writer: Optional[AsyncHostWriter] = None,
                  donate: bool = True, evict_policy: str = "lru",
-                 wb_threshold: float = 0.0):
+                 wb_threshold: float = 0.0, stale_forecast: bool = False):
         super().__init__(n_rows, j_max, d_h, num_shards=num_shards,
                          dtype=dtype, sharding=sharding)
         self._C = device_rows_per_shard(n_rows, self.num_shards, device_rows)
@@ -69,6 +70,12 @@ class TieredStore(EmbeddingStore):
         # write.  0.0 disables the gate — every eviction writes back and
         # the store stays bit-exact vs the device-resident oracle.
         self.wb_threshold = float(wb_threshold)
+        # stale-row forecasting (--stale-forecast, Bai et al.): an online
+        # per-row velocity EMA fed by the eviction delta stream; fault-ins
+        # with a step hint are extrapolated forward by their age.  None
+        # (the default) leaves every staged upload bit-identical.
+        self._forecaster = RowForecaster(self.padded_rows, j_max, d_h) \
+            if stale_forecast else None
         self._maps = [SlotMap(self._C, policy=evict_policy)
                       for _ in range(self.num_shards)]
         self._host = tbl.EmbeddingTable(
@@ -215,6 +222,7 @@ class TieredStore(EmbeddingStore):
             slot_of: Dict[int, int] = {}
             uploads: List[tuple] = []   # (row, device_row)
             evicts: List[tuple] = []    # (row, device_row)
+            deferred_age: List[int] = []
             n_hit = 0
             for rid in uniq:
                 shard = rid // R
@@ -231,10 +239,12 @@ class TieredStore(EmbeddingStore):
                     if self.evict_policy != "lru":
                         # stale-first scores by the age the row carried in
                         # from the host tier (its most recent segment
-                        # refresh); host ages are brought up to date by
-                        # the eviction write-backs
-                        m.set_age(rid, int(self._host.age[rid].max())
-                                  if step is None else int(step))
+                        # refresh); a step hint means the step is about to
+                        # rewrite the row — no host read needed
+                        if step is not None:
+                            m.set_age(rid, int(step))
+                        else:
+                            deferred_age.append(rid)
                 else:
                     n_hit += 1
                     if self.evict_policy != "lru" and step is not None:
@@ -249,6 +259,14 @@ class TieredStore(EmbeddingStore):
                 self.counters.misses += len(uploads)
                 for row, _ in evicts:
                     self._pending[row] = ticket
+            if deferred_age:
+                # host ages are only authoritative once any in-flight
+                # write-back of these rows has landed — scoring before the
+                # wait could read a row's PRE-write-back age
+                self._wait_rows(deferred_age)
+                for rid in deferred_age:
+                    self._maps[rid // R].set_age(
+                        rid, int(self._host.age[rid].max()))
 
             prep = dict(slots=slots, ticket=ticket)
             if evicts:
@@ -259,10 +277,17 @@ class TieredStore(EmbeddingStore):
                 rows = [r for r, _ in uploads]
                 self._wait_rows(rows)   # pending write-backs must land first
                 gs_p, rs_p = pad_rows_pow2([g for _, g in uploads], rows)
+                up_emb = self._host.emb[rs_p]
+                if self._forecaster is not None and step is not None:
+                    # stale-row forecasting: serve the extrapolated row on
+                    # fault-in; the authoritative host copy is untouched
+                    up_emb = self._forecaster.apply(
+                        rs_p, up_emb, self._host.age[rs_p],
+                        self._host.initialized[rs_p], int(step))
                 prep.update(
                     n_up=len(uploads),
                     up_slots=jnp.asarray(gs_p),
-                    up_emb=jnp.asarray(self._host.emb[rs_p]),
+                    up_emb=jnp.asarray(up_emb),
                     up_age=jnp.asarray(self._host.age[rs_p]),
                     up_init=jnp.asarray(self._host.initialized[rs_p]))
                 with self._mu:
@@ -320,6 +345,14 @@ class TieredStore(EmbeddingStore):
     def _writeback_body(self, ev, rows, n, ticket):
         try:
             emb, age, init = (np.asarray(x)[:n] for x in ev)
+            if self._forecaster is not None:
+                # the host copy is still the fault-in-time content here
+                # (read BEFORE the writes below), so this is exactly one
+                # (Δemb, Δstep) residency observation per evicted row
+                self._forecaster.observe(
+                    rows, emb, self._host.emb[rows],
+                    age, self._host.age[rows],
+                    init, self._host.initialized[rows])
             if self.wb_threshold > 0.0:
                 # the host copy is the row's content when it faulted in
                 # (stale while resident), so this measures exactly how
@@ -465,6 +498,25 @@ class TieredStore(EmbeddingStore):
             table = self._evict_jit(table, jnp.asarray(dev_p))
         return table
 
+    def refresh_ages(self, table: tbl.EmbeddingTable) -> None:
+        """Re-report TRUE ages for every device-resident row to the
+        eviction SlotMaps (the PR 5 readback nuance: SlotMap ages are
+        otherwise only fed at fault-in / step-hinted begins, so a row
+        refreshed while resident — a training write that advanced its
+        device age plane — would keep scoring as stale as its fault-in
+        copy and stay the stale-first eviction victim).  Reads the
+        device age planes back (one transfer), so call it at epoch
+        granularity, not per step.  No-op under plain LRU, where ages
+        don't drive eviction."""
+        if self.evict_policy == "lru":
+            return
+        dev_age = np.asarray(jax.device_get(table.age))
+        rows, gs = self._resident_index()
+        R = self.rows_per_shard
+        for row, g in zip(rows, gs):
+            self._maps[int(row) // R].set_age(int(row),
+                                              int(dev_age[g].max()))
+
     def ages_init(self, table):
         # stats-grade view: no writer flush (a flush here would serialize
         # the serving hot path against the async write-back lane every
@@ -494,5 +546,8 @@ class TieredStore(EmbeddingStore):
             "pending_writebacks": self._writer.pending,
             "evict_policy": self.evict_policy,
             "wb_threshold": self.wb_threshold,
+            "stale_forecast": self._forecaster is not None,
         })
+        if self._forecaster is not None:
+            d["forecast"] = self._forecaster.stats()
         return d

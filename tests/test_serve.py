@@ -309,3 +309,64 @@ def test_traffic_duplicate_rate_controls_hit_rate():
     assert hr1 > 0.5
     assert hr1 > hr2
     assert e1.stats.encoded_segments < e1.stats.n_segments
+
+
+# ---------------------------------------------------------------------------
+# traffic repeat sampling (ISSUE 10 bugfix) + catch-all truncation counting
+# ---------------------------------------------------------------------------
+
+
+def _repeat_counts(popularity: float, seed=11, n=3000):
+    tc = TrafficConfig(n_unique=4, n_requests=n, duplicate_rate=0.6,
+                       popularity=popularity, seed=seed)
+    stream = make_request_stream(tc)
+    ids = {}
+    counts = np.zeros(4, np.int64)
+    for g in stream:
+        gi = ids.setdefault(id(g), len(ids))
+        counts[gi] += 1
+    return counts
+
+
+def test_traffic_repeats_uniform_over_distinct():
+    """popularity=0 (the default): repeats spread evenly over distinct
+    seen graphs.  The pre-fix stream sampled the seen list WITH
+    duplicates — a Polya urn where every repeat compounded — so its
+    counts were heavily skewed; uniform sampling keeps max/min tight."""
+    counts = _repeat_counts(0.0)
+    assert counts.min() > 0
+    assert counts.max() / counts.min() < 1.3
+
+
+def test_traffic_popularity_knob_restores_skew():
+    """popularity=1 is the explicit rich-get-richer (old) behavior; it
+    must be visibly more skewed than the uniform default on the same
+    seed, and the skew must grow with the exponent."""
+    flat = _repeat_counts(0.0)
+    rich = _repeat_counts(1.0)
+    richer = _repeat_counts(3.0)
+
+    def spread(c):
+        return c.max() / max(c.min(), 1)
+
+    assert spread(rich) > spread(flat)
+    assert spread(richer) > spread(rich)
+
+
+def test_truncation_counts_math():
+    from repro.serve.buckets import truncation_counts
+    spec = BucketSpec(32, 256, 8)
+    assert truncation_counts(40, 300, spec) == (8, 44)
+    assert truncation_counts(32, 256, spec) == (0, 0)   # exact fit
+    assert truncation_counts(5, 7, spec) == (0, 0)      # under: never negative
+
+
+def test_serve_stats_truncation_in_summary():
+    from repro.serve.engine import ServeStats
+    s = ServeStats()
+    assert s.summary()["truncated_nodes"] == 0
+    assert s.summary()["truncated_edges"] == 0
+    s.truncated_nodes += 3
+    s.truncated_edges += 1
+    out = s.summary()
+    assert out["truncated_nodes"] == 3 and out["truncated_edges"] == 1
